@@ -1,0 +1,52 @@
+"""Shared helpers for the paper-reproduction benchmark suite.
+
+Every benchmark module exposes ``run() -> list[dict]`` (rows of one paper
+table/figure). ``benchmarks.run`` executes them all, prints aligned tables,
+and dumps JSON into ``results/bench/``.
+"""
+from __future__ import annotations
+
+import json
+import os
+import time
+
+RESULTS_DIR = os.path.join(os.path.dirname(__file__), "..", "results", "bench")
+
+
+def save_rows(name: str, rows: list[dict]) -> None:
+    os.makedirs(RESULTS_DIR, exist_ok=True)
+    with open(os.path.join(RESULTS_DIR, f"{name}.json"), "w") as f:
+        json.dump(rows, f, indent=1, default=str)
+
+
+def print_table(title: str, rows: list[dict]) -> None:
+    print(f"\n== {title} ==")
+    if not rows:
+        print("(no rows)")
+        return
+    cols = list(rows[0])
+    widths = {
+        c: max(len(c), *(len(_fmt(r.get(c))) for r in rows)) for c in cols
+    }
+    print("  ".join(c.ljust(widths[c]) for c in cols))
+    for r in rows:
+        print("  ".join(_fmt(r.get(c)).ljust(widths[c]) for c in cols))
+
+
+def _fmt(v) -> str:
+    if isinstance(v, float):
+        if v == 0:
+            return "0"
+        if abs(v) >= 1e5 or abs(v) < 1e-3:
+            return f"{v:.3e}"
+        return f"{v:.4g}"
+    return str(v)
+
+
+class timer:
+    def __enter__(self):
+        self.t0 = time.monotonic()
+        return self
+
+    def __exit__(self, *exc):
+        self.elapsed = time.monotonic() - self.t0

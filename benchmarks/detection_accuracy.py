@@ -1,0 +1,80 @@
+"""Paper Tables 4-5 — detection accuracy: SlideWindow vs BOCD vs BOCD+V.
+
+Labeled iteration-time traces regenerated with the characterization-study
+statistics (computation: rare/short episodes; communication: frequent/longer,
+§3.2-3.3). A job is classified fail-slow iff the detector reports >=1 episode;
+accuracy/FPR/FNR follow the paper's per-job definitions.
+"""
+from __future__ import annotations
+
+import numpy as np
+
+from benchmarks.common import print_table, save_rows
+from repro.cluster.traces import LabeledTrace, sample_campaign
+from repro.core import bocd
+from repro.core.detector import (
+    detect_slow_iterations,
+    detect_slow_iterations_sliding_window,
+    verify_change_points,
+)
+
+CAMPAIGNS = {
+    "computation (Table 4)": dict(seed=11, n_jobs=392, rate=6 / 392,
+                                  min_sev=0.12, max_sev=0.35),
+    "communication (Table 5)": dict(seed=13, n_jobs=107, rate=43 / 107,
+                                    min_sev=0.12, max_sev=0.8),
+}
+
+
+def _predict(algo: str, trace: LabeledTrace) -> bool:
+    t = trace.times
+    if algo == "SlideWindow":
+        return bool(detect_slow_iterations_sliding_window(t))
+    if algo == "BOCD":
+        # Raw BOCD: report any change-point, no verification (paper baseline).
+        return bool(bocd.detect_change_points(t, hazard=1 / 100.0))
+    # BOCD+V: change-points + the 10 % before/after verification. A
+    # confirmed change-point in EITHER direction marks a fail-slow episode —
+    # the paper notes change-points "correspond to the onset or relief of
+    # slow iterations"; gradual-onset congestion is often only caught at its
+    # (sharp) relief.
+    return bool(detect_slow_iterations(t, hazard=1 / 100.0))
+
+
+def _score(algo: str, traces: list[LabeledTrace]) -> dict:
+    tp = fp = tn = fn = 0
+    for tr in traces:
+        pred, truth = _predict(algo, tr), tr.has_failslow
+        if pred and truth:
+            tp += 1
+        elif pred and not truth:
+            fp += 1
+        elif not pred and truth:
+            fn += 1
+        else:
+            tn += 1
+    n = tp + fp + tn + fn
+    return {
+        "algorithm": algo,
+        "accuracy_pct": round(100 * (tp + tn) / n, 1),
+        "fpr_pct": round(100 * fp / max(1, fp + tn), 1),
+        "fnr_pct": round(100 * fn / max(1, fn + tp), 1),
+        "tp": tp, "fp": fp, "tn": tn, "fn": fn,
+    }
+
+
+def run() -> list[dict]:
+    rows = []
+    for name, c in CAMPAIGNS.items():
+        traces = sample_campaign(
+            c["seed"], c["n_jobs"], c["rate"],
+            min_severity=c["min_sev"], max_severity=c["max_sev"],
+        )
+        for algo in ("SlideWindow", "BOCD", "BOCD+V"):
+            rows.append({"campaign": name, **_score(algo, traces)})
+    save_rows("detection_accuracy", rows)
+    return rows
+
+
+if __name__ == "__main__":
+    print_table("Tables 4-5 — detection accuracy", run())

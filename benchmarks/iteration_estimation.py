@@ -1,0 +1,70 @@
+"""Paper Figure 12 — accuracy of ACF-based iteration-time estimation.
+
+A simulated job under each hybrid-parallel strategy emits its Monitor
+comm-event stream (the op pattern repeats once per iteration, with several
+collectives per iteration depending on the strategy); the ACF pipeline must
+recover the iteration time without knowing the framework (R1). We report the
+relative error vs the simulator's ground-truth iteration time.
+"""
+from __future__ import annotations
+
+import numpy as np
+
+from benchmarks.common import print_table, save_rows
+from repro.core.acf import iteration_times_from_events
+from repro.core.events import CommEvent, CommOp
+
+#: (label, per-iteration op pattern) — richer parallelism => more collectives
+STRATEGIES = {
+    "S-4T1D1P": [CommOp.ALL_REDUCE] * 4,  # TP sync-heavy
+    "S-2T2D1P": [CommOp.ALL_REDUCE, CommOp.ALL_REDUCE,
+                 CommOp.REDUCE_SCATTER, CommOp.ALL_GATHER],
+    "S-2T1D2P": [CommOp.ALL_REDUCE, CommOp.SEND_RECV,
+                 CommOp.SEND_RECV, CommOp.ALL_REDUCE],
+    "S-1T2D2P": [CommOp.SEND_RECV, CommOp.REDUCE_SCATTER,
+                 CommOp.ALL_GATHER, CommOp.SEND_RECV],
+    "M-2T2D2P": [CommOp.ALL_REDUCE, CommOp.SEND_RECV, CommOp.REDUCE_SCATTER,
+                 CommOp.ALL_GATHER, CommOp.SEND_RECV, CommOp.ALL_REDUCE],
+    "M-2T4D1P": [CommOp.ALL_REDUCE, CommOp.ALL_REDUCE,
+                 CommOp.REDUCE_SCATTER, CommOp.ALL_GATHER,
+                 CommOp.ALL_REDUCE],
+}
+
+
+def run(seed: int = 3, n_iters: int = 200) -> list[dict]:
+    rng = np.random.default_rng(seed)
+    rows = []
+    for label, pattern in STRATEGIES.items():
+        true_iter = float(rng.uniform(0.8, 2.5))
+        # Collective calls fire at (nearly) the same phase offsets every
+        # iteration — the phases are fixed by the program structure; only
+        # small timing noise varies across iterations.
+        phases = np.sort(rng.uniform(0.05, 0.9, size=len(pattern)))
+        events: list[CommEvent] = []
+        t = 0.0
+        for _ in range(n_iters):
+            # The iteration time itself jitters ~1 %.
+            it = true_iter * float(rng.normal(1.0, 0.01))
+            offs = phases * it + rng.normal(0, 2e-3, size=len(pattern))
+            events += [
+                CommEvent(op=op, timestamp=t + o)
+                for op, o in zip(pattern, np.sort(offs), strict=True)
+            ]
+            t += it
+        est, period = iteration_times_from_events(events)
+        est_mean = float(np.mean(est)) if est.size else float("nan")
+        rel_err = abs(est_mean - true_iter) / true_iter * 100
+        rows.append({
+            "strategy": label,
+            "ops_per_iter": len(pattern),
+            "period_found": period,
+            "true_iter_s": round(true_iter, 4),
+            "est_iter_s": round(est_mean, 4),
+            "rel_error_pct": round(rel_err, 3),
+        })
+    save_rows("iteration_estimation", rows)
+    return rows
+
+
+if __name__ == "__main__":
+    print_table("Fig. 12 — iteration-time estimation accuracy", run())

@@ -1,0 +1,114 @@
+"""Roofline analysis from the multi-pod dry-run artifacts (deliverable g).
+
+Reads ``results/dryrun/*.json`` (produced by ``repro.launch.dryrun``) and
+derives, per (arch x shape x mesh):
+
+  compute term    = HLO_FLOPs / peak_FLOPs_per_chip
+  memory term     = HLO_bytes / HBM_bw_per_chip
+  collective term = collective_bytes / ICI_link_bw
+
+``compiled.cost_analysis()`` reports the *per-device partitioned module*, and
+XLA counts a ``lax.scan``/``while`` body ONCE regardless of trip count. Our
+steps scan over micro-batch slots (train) and over layer periods (all kinds),
+so the HLO numbers underestimate per-step work by a known factor. We
+therefore also report the analytic MODEL_FLOPS (6·N_active·tokens for
+training, 2·N_active·tokens for inference, per device) and use
+``max(hlo, model)`` — the conservative estimate — for the bottleneck call.
+The MODEL/HLO ratio column makes the undercount visible, as required.
+
+Hardware constants: TPU v5e — 197 TFLOP/s bf16, 819 GB/s HBM, ~50 GB/s/link.
+"""
+from __future__ import annotations
+
+import glob
+import json
+import os
+
+from benchmarks.common import print_table, save_rows
+from repro.cluster.spec import TPU_HBM_BW, TPU_ICI_BW, TPU_PEAK_FLOPS_BF16
+from repro.configs.base import INPUT_SHAPES, get_config
+
+DRYRUN_DIR = os.path.join(os.path.dirname(__file__), "..", "results", "dryrun")
+
+#: micro-batch slots in the train step (see launch/dryrun.py SLOTS)
+SLOTS = 8
+
+ADVICE = {
+    "compute": "shard more FLOPs onto the model axis / raise MXU utilization"
+               " (fused attention kernel, larger per-core tiles)",
+    "memory": "cut HBM traffic: fuse elementwise chains, keep weights"
+              " resident, batch decode requests to reuse parameters",
+    "collective": "reduce collective volume: overlap grad reduce-scatter"
+                  " with backward, hierarchical pod-local reductions first",
+}
+
+
+def model_flops_per_device(arch: str, shape: str, n_devices: int) -> float:
+    cfg = get_config(arch)
+    info = INPUT_SHAPES[shape]
+    n_active = cfg.active_params()
+    if info["kind"] == "train":
+        tokens = info["seq_len"] * info["global_batch"]
+        total = 6.0 * n_active * tokens
+    elif info["kind"] == "prefill":
+        tokens = info["seq_len"] * info["global_batch"]
+        total = 2.0 * n_active * tokens
+    else:  # decode: one token per sequence
+        total = 2.0 * n_active * info["global_batch"]
+    return total / n_devices
+
+
+def analyze(record: dict) -> dict:
+    arch, shape, mesh = record["arch"], record["shape"], record["mesh"]
+    n_dev = record["n_devices"]
+    hlo_flops = record["flops"]
+    hlo_bytes = record["bytes_accessed"]
+    coll = sum(record["collective_bytes"].values())
+
+    m_flops = model_flops_per_device(arch, shape, n_dev)
+    flops_est = max(hlo_flops, m_flops)
+
+    t_compute = flops_est / TPU_PEAK_FLOPS_BF16
+    t_memory = hlo_bytes / TPU_HBM_BW
+    t_coll = coll / TPU_ICI_BW
+    terms = {"compute": t_compute, "memory": t_memory, "collective": t_coll}
+    dominant = max(terms, key=terms.get)
+    return {
+        "arch": arch,
+        "shape": shape,
+        "mesh": mesh,
+        "compute_s": float(f"{t_compute:.3e}"),
+        "memory_s": float(f"{t_memory:.3e}"),
+        "collective_s": float(f"{t_coll:.3e}"),
+        "dominant": dominant,
+        "model_flops_dev": float(f"{m_flops:.3e}"),
+        "hlo_flops_dev": float(f"{hlo_flops:.3e}"),
+        "model_over_hlo": round(m_flops / hlo_flops, 2) if hlo_flops else 0.0,
+        "peak_gib_dev": round(record["bytes_per_device"]["peak"] / 2**30, 2),
+        "advice": ADVICE[dominant],
+    }
+
+
+def run(mesh_filter: str | None = "16x16") -> list[dict]:
+    rows = []
+    for fn in sorted(glob.glob(os.path.join(DRYRUN_DIR, "*.json"))):
+        with open(fn) as f:
+            rec = json.load(f)
+        if mesh_filter and rec["mesh"] != mesh_filter:
+            continue
+        rows.append(analyze(rec))
+    rows.sort(key=lambda r: (r["arch"], r["shape"]))
+    save_rows("roofline", rows)
+    return rows
+
+
+if __name__ == "__main__":
+    rows = run()
+    slim = [
+        {k: r[k] for k in (
+            "arch", "shape", "compute_s", "memory_s", "collective_s",
+            "dominant", "model_over_hlo", "peak_gib_dev",
+        )}
+        for r in rows
+    ]
+    print_table("Roofline (single-pod 16x16)", slim)

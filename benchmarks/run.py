@@ -1,0 +1,68 @@
+"""Benchmark harness — one module per paper table/figure (deliverable d).
+
+    PYTHONPATH=src python -m benchmarks.run [--only NAME]
+
+Each module exposes ``run() -> list[dict]``; results are printed as aligned
+tables and persisted to ``results/bench/<name>.json``.
+"""
+from __future__ import annotations
+
+import argparse
+import importlib
+import sys
+import time
+import traceback
+
+from benchmarks.common import print_table
+
+#: (module, paper artifact)
+SUITE = [
+    ("validation_cost", "Fig. 9 — O(1) communicator validation"),
+    ("iteration_estimation", "Fig. 12 — ACF iteration-time estimation"),
+    ("detection_accuracy", "Tables 4-5 — detector accuracy"),
+    ("microbatch_solver", "Table 6 — micro-batch solver time"),
+    ("mitigation_s2", "Figs. 13-14 — S2 micro-batch adjustment"),
+    ("mitigation_s3", "Figs. 15-16 — S3 topology adjustment"),
+    ("topology_overhead", "Fig. 19 — topology-adjust overhead M vs D"),
+    ("characterization", "Table 1 / Fig. 1 — characterization campaign"),
+    ("detector_overhead", "Fig. 18 — detector overhead (real JAX steps)"),
+    ("end_to_end", "Fig. 20 / Table 7 — 64-GPU end-to-end"),
+    ("roofline", "Roofline — dry-run derived terms (deliverable g)"),
+]
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--only", default=None, help="run a single benchmark")
+    args = ap.parse_args()
+
+    failures = []
+    for name, title in SUITE:
+        if args.only and args.only != name:
+            continue
+        mod = importlib.import_module(f"benchmarks.{name}")
+        t0 = time.monotonic()
+        try:
+            rows = mod.run()
+        except Exception:  # noqa: BLE001
+            traceback.print_exc()
+            failures.append(name)
+            continue
+        dt = time.monotonic() - t0
+        if name == "roofline":
+            rows = [
+                {k: r[k] for k in (
+                    "arch", "shape", "compute_s", "memory_s", "collective_s",
+                    "dominant", "model_over_hlo", "peak_gib_dev",
+                )}
+                for r in rows
+            ]
+        print_table(f"{title}  [{dt:.1f}s]", rows)
+    if failures:
+        print(f"\nFAILED benchmarks: {failures}")
+        sys.exit(1)
+    print("\nALL BENCHMARKS COMPLETED")
+
+
+if __name__ == "__main__":
+    main()

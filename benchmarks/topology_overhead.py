@@ -1,0 +1,66 @@
+"""Paper Fig. 19 — topology-adjustment overhead: memory (M) vs disk (D).
+
+The paper's S3 pauses training, dumps parameters into host memory, swaps via
+RDMA, and resumes — vs the checkpoint-to-disk baseline. We measure the real
+dump+restore cost of both CheckpointManager paths across model sizes
+(~ GPU-memory-utilization levels) and report the speedup (paper: up to
+6.72x).
+"""
+from __future__ import annotations
+
+import dataclasses
+import os
+import shutil
+import tempfile
+
+from benchmarks.common import print_table, save_rows
+from repro.configs.base import get_config
+from repro.models import model as model_lib
+from repro.train.checkpoint import CheckpointManager
+
+
+def _params_of_size(scale: int) -> dict:
+    cfg = get_config("falcon-demo-100m").smoke()
+    cfg = dataclasses.replace(
+        cfg, num_layers=2 * scale, d_model=256, name=f"ckpt-bench-{scale}"
+    )
+    return model_lib.init_params(cfg, seed=0)
+
+
+def run() -> list[dict]:
+    rows = []
+    tmp = tempfile.mkdtemp(prefix="repro_ckpt_bench_")
+    try:
+        for scale in (1, 2, 4, 8):
+            params = _params_of_size(scale)
+            n_bytes = sum(
+                x.size * x.dtype.itemsize for x in jax_leaves(params)
+            )
+            ckpt = CheckpointManager(os.path.join(tmp, str(scale)))
+            m_save = ckpt.save_memory(params)
+            ckpt.restore_memory()
+            m_restore = ckpt.last_restore_time
+            d_save = ckpt.save_disk(params, step=0)
+            ckpt.restore_disk(params, step=0)
+            d_restore = ckpt.last_restore_time
+            m_total, d_total = m_save + m_restore, d_save + d_restore
+            rows.append({
+                "params_mib": round(n_bytes / 2**20, 1),
+                "mem_dump_restore_s": round(m_total, 4),
+                "disk_dump_restore_s": round(d_total, 4),
+                "speedup_m_over_d": round(d_total / max(m_total, 1e-9), 2),
+            })
+    finally:
+        shutil.rmtree(tmp, ignore_errors=True)
+    save_rows("topology_overhead", rows)
+    return rows
+
+
+def jax_leaves(tree):
+    import jax
+
+    return jax.tree.leaves(tree)
+
+
+if __name__ == "__main__":
+    print_table("Fig. 19 — topology adjustment overhead (M vs D)", run())

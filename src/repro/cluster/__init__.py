@@ -1,0 +1,1 @@
+"""Cluster performance-model substrate: specs, simulator, fail-slow injector."""

@@ -1,0 +1,142 @@
+"""Deterministic fail-slow injection (paper §7.1).
+
+The paper injects computation fail-slows by locking GPU SM frequency
+(`nvidia-smi -lgc`) and communication fail-slows with side-channel bandwidth
+contention. Here the same injections are applied to the simulator's
+:class:`ClusterState`: compute multipliers for GPU degradation, host
+multipliers for CPU contention (hits every GPU on the node), and link
+bandwidth multipliers for congestion.
+"""
+from __future__ import annotations
+
+import enum
+from dataclasses import dataclass, field
+
+import numpy as np
+
+from repro.cluster.spec import ClusterState
+
+
+class InjectionKind(enum.Enum):
+    GPU_SLOW = "gpu_slow"  # one device's SMs throttled
+    CPU_CONTENTION = "cpu_contention"  # whole node slowed
+    LINK_CONGESTION = "link_congestion"  # one physical link degraded
+    NIC_CONGESTION = "nic_congestion"  # a node's NIC port congested
+
+
+@dataclass(frozen=True)
+class Injection:
+    """One fail-slow episode.
+
+    ``severity`` in (0, 1): fraction of performance lost. A GPU_SLOW of 0.3
+    runs the GPU at 70 % speed; LINK_CONGESTION of 0.75 leaves 25 % of the
+    bandwidth (the paper's weak/medium/severe ~= 0.2/0.5/0.8).
+    """
+
+    start: float  # wall-clock seconds
+    duration: float
+    kind: InjectionKind
+    target: tuple[int, ...]  # (device,) / (node,) / (devA, devB)
+    severity: float
+
+    @property
+    def end(self) -> float:
+        return self.start + self.duration
+
+    def active(self, now: float) -> bool:
+        return self.start <= now < self.end
+
+
+@dataclass
+class FailSlowInjector:
+    """Applies the set of active injections to a ClusterState at time t."""
+
+    injections: list[Injection] = field(default_factory=list)
+
+    def add(self, inj: Injection) -> None:
+        self.injections.append(inj)
+
+    def active(self, now: float) -> list[Injection]:
+        return [i for i in self.injections if i.active(now)]
+
+    def apply(self, state: ClusterState, now: float) -> list[Injection]:
+        """Reset the state and apply all injections active at ``now``."""
+        state.reset()
+        act = self.active(now)
+        for inj in act:
+            mult = 1.0 - inj.severity
+            if inj.kind is InjectionKind.GPU_SLOW:
+                (dev,) = inj.target
+                state.devices[dev].compute_speed = mult
+            elif inj.kind is InjectionKind.CPU_CONTENTION:
+                (node,) = inj.target
+                per = state.spec.gpus_per_node
+                for d in range(node * per, (node + 1) * per):
+                    state.devices[d].host_speed = mult
+            elif inj.kind is InjectionKind.NIC_CONGESTION:
+                (node,) = inj.target
+                state.degrade_nic(node, mult)
+            else:
+                a, b = inj.target
+                state.degrade_link(a, b, mult)
+        return act
+
+
+def sample_injections(
+    rng: np.random.Generator,
+    n_devices: int,
+    gpus_per_node: int,
+    horizon: float,
+    *,
+    p_gpu: float = 0.005,
+    p_cpu: float = 0.01,
+    p_link: float = 0.4,
+    mean_comp_duration: float = 600.0,
+    mean_comm_duration: float = 1440.0,
+) -> list[Injection]:
+    """Sample a fail-slow workload matching the characterization stats (§3):
+
+    computation fail-slows are rare and short (mean ~10 min), communication
+    fail-slows (congestion) frequent and long (mean ~24 min); probabilities
+    are per-job occurrence rates from Table 1.
+    """
+    out: list[Injection] = []
+    if rng.random() < p_gpu:
+        dev = int(rng.integers(n_devices))
+        out.append(
+            Injection(
+                start=float(rng.uniform(0, horizon)),
+                duration=float(rng.exponential(mean_comp_duration)),
+                kind=InjectionKind.GPU_SLOW,
+                target=(dev,),
+                severity=float(rng.uniform(0.15, 0.5)),
+            )
+        )
+    if rng.random() < p_cpu:
+        node = int(rng.integers(max(1, n_devices // gpus_per_node)))
+        out.append(
+            Injection(
+                start=float(rng.uniform(0, horizon)),
+                duration=float(rng.exponential(mean_comp_duration)),
+                kind=InjectionKind.CPU_CONTENTION,
+                target=(node,),
+                severity=float(rng.uniform(0.1, 0.3)),
+            )
+        )
+    if n_devices > gpus_per_node and rng.random() < p_link:
+        a = int(rng.integers(n_devices))
+        other_nodes = [
+            n for n in range(n_devices // gpus_per_node) if n != a // gpus_per_node
+        ]
+        node_b = int(rng.choice(other_nodes))
+        b = node_b * gpus_per_node + int(rng.integers(gpus_per_node))
+        out.append(
+            Injection(
+                start=float(rng.uniform(0, horizon)),
+                duration=float(rng.exponential(mean_comm_duration)),
+                kind=InjectionKind.LINK_CONGESTION,
+                target=(a, b),
+                severity=float(rng.uniform(0.3, 0.85)),
+            )
+        )
+    return out

@@ -1,0 +1,230 @@
+"""Hybrid-parallel training-iteration performance model.
+
+Models one training job under (TP, DP, PP) hybrid parallelism on a
+:class:`ClusterState`, with 1F1B pipelining, ring collectives, per-DP-group
+micro-batch counts (S2), and a logical->physical placement permutation (S3).
+It implements the :class:`repro.core.detector.ClusterInterface` protocol so
+FALCON-DETECT runs against it unchanged, and emits the same CommEvent
+stream the Monitor shim would log on a real job.
+
+The model intentionally follows the paper's own cost reasoning
+(Appendix 9.2): compute time = FLOPs / effective speed; collective time =
+ring volume / slowest link; pipeline time = (m + P - 1) x slowest stage.
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass, field
+
+import numpy as np
+
+from repro.core.events import CommEvent, CommOp
+from repro.core.topology import HybridTopology
+from repro.cluster.spec import ClusterSpec, ClusterState, ModelSpec
+
+
+@dataclass
+class JobSpec:
+    """One hybrid-parallel training job."""
+
+    model: ModelSpec
+    tp: int
+    dp: int
+    pp: int
+    micro_batches: int  # M, per iteration (global batch / micro-batch size)
+
+    @property
+    def topology(self) -> HybridTopology:
+        return HybridTopology(tp=self.tp, dp=self.dp, pp=self.pp)
+
+    @property
+    def n_devices(self) -> int:
+        return self.tp * self.dp * self.pp
+
+
+@dataclass
+class TrainingSimulator:
+    """Iteration-time model + FALCON ClusterInterface implementation."""
+
+    cluster: ClusterSpec
+    job: JobSpec
+    #: logical position p (HybridTopology order) -> physical device perm[p]
+    placement: list[int] = field(default_factory=list)
+    #: per-DP-group micro-batch counts (S2); default: even split
+    allocation: list[int] = field(default_factory=list)
+    state: ClusterState = field(init=False)
+
+    def __post_init__(self) -> None:
+        if self.job.n_devices > self.cluster.n_devices:
+            raise ValueError("job does not fit on the cluster")
+        if not self.placement:
+            self.placement = list(range(self.job.n_devices))
+        if not self.allocation:
+            base, extra = divmod(self.job.micro_batches, self.job.dp)
+            self.allocation = [
+                base + (1 if i < extra else 0) for i in range(self.job.dp)
+            ]
+        self.state = ClusterState(self.cluster)
+
+    # ------------------------------------------------------------- layout
+    def device_at(self, stage: int, dp_rank: int, tp_rank: int) -> int:
+        return self.placement[self.job.topology.position(stage, dp_rank, tp_rank)]
+
+    def _cell_devices(self, stage: int, dp_rank: int) -> list[int]:
+        return [self.device_at(stage, dp_rank, k) for k in range(self.job.tp)]
+
+    # ------------------------------------------------------------ timings
+    def _cell_speed(self, stage: int, dp_rank: int) -> float:
+        """TP-synchronized cell runs at its slowest member's speed."""
+        return min(self.state.effective_speed(d) for d in self._cell_devices(stage, dp_rank))
+
+    def _ring_time(self, devices: list[int], volume: float) -> float:
+        """Ring all-reduce time: 2(n-1)/n x volume over the slowest edge."""
+        n = len(devices)
+        if n <= 1 or volume <= 0:
+            return 0.0
+        bw = min(
+            self.state.link_bw(devices[i], devices[(i + 1) % n]) for i in range(n)
+        )
+        return 2.0 * (n - 1) / n * volume / bw
+
+    def _stage_time_per_microbatch(self, stage: int, dp_rank: int) -> float:
+        m = self.job.model
+        compute = m.flops_per_microbatch() / self.job.pp / (
+            self.job.tp * self.cluster.gpu_flops * self._cell_speed(stage, dp_rank)
+        )
+        tp_vol = m.comm_tp_bytes(self.job.tp, self.job.pp, 1)
+        tp_time = self._ring_time(self._cell_devices(stage, dp_rank), tp_vol)
+        return compute + tp_time
+
+    def _pipeline_time(self, dp_rank: int) -> float:
+        """1F1B: (m + P - 1) x slowest stage + activation hops."""
+        m_d = self.allocation[dp_rank]
+        stage_t = max(
+            self._stage_time_per_microbatch(s, dp_rank) for s in range(self.job.pp)
+        )
+        pp_vol = self.job.model.comm_pp_bytes(1)
+        hop = 0.0
+        for s in range(self.job.pp - 1):
+            a = self.device_at(s, dp_rank, 0)
+            b = self.device_at(s + 1, dp_rank, 0)
+            hop += pp_vol / self.state.link_bw(a, b)
+        return (m_d + self.job.pp - 1) * stage_t + 2.0 * hop
+
+    def _dp_allreduce_time(self) -> float:
+        if self.job.dp <= 1:
+            return 0.0
+        vol = self.job.model.comm_dp_bytes(self.job.tp, self.job.pp)
+        worst = 0.0
+        for s in range(self.job.pp):
+            for k in range(self.job.tp):
+                ring = [self.device_at(s, d, k) for d in range(self.job.dp)]
+                worst = max(worst, self._ring_time(ring, vol))
+        return worst
+
+    def iteration_time(self) -> float:
+        pipe = max(self._pipeline_time(d) for d in range(self.job.dp))
+        return pipe + self._dp_allreduce_time()
+
+    def healthy_iteration_time(self) -> float:
+        """Iteration time with all components healthy and even allocation."""
+        saved_state, saved_alloc = self.state, self.allocation
+        saved_place = self.placement
+        self.state = ClusterState(self.cluster)
+        base, extra = divmod(self.job.micro_batches, self.job.dp)
+        self.allocation = [base + (1 if i < extra else 0) for i in range(self.job.dp)]
+        self.placement = list(range(self.job.n_devices))
+        t = self.iteration_time()
+        self.state, self.allocation, self.placement = (
+            saved_state, saved_alloc, saved_place,
+        )
+        return t
+
+    # -------------------------------------------------- per-µbatch speeds
+    def per_microbatch_times(self) -> list[float]:
+        """Per-DP-group per-micro-batch processing time (S2 solver input)."""
+        return [
+            max(
+                self._stage_time_per_microbatch(s, d) for s in range(self.job.pp)
+            )
+            for d in range(self.job.dp)
+        ]
+
+    # -------------------------------------------------- mitigation hooks
+    def set_allocation(self, counts: list[int]) -> None:
+        if len(counts) != self.job.dp or sum(counts) != self.job.micro_batches:
+            raise ValueError("bad allocation")
+        self.allocation = list(counts)
+
+    def apply_placement(self, perm: list[int]) -> None:
+        """Compose a logical->physical permutation onto current placement."""
+        if sorted(perm) != list(range(self.job.n_devices)):
+            raise ValueError("not a permutation")
+        self.placement = [self.placement[p] for p in perm]
+
+    def restart(self) -> None:
+        """S4: checkpoint-and-restart onto healthy devices (modeled as a
+        placement reset + the caller charging the restart overhead)."""
+        self.placement = list(range(self.job.n_devices))
+        base, extra = divmod(self.job.micro_batches, self.job.dp)
+        self.allocation = [base + (1 if i < extra else 0) for i in range(self.job.dp)]
+
+    # ---------------------------------------------- monitor event stream
+    ITER_PATTERN = (CommOp.REDUCE_SCATTER, CommOp.ALL_GATHER, CommOp.ALL_REDUCE)
+
+    def emit_events(self, t_start: float, iter_time: float, rank: int = 0) -> list[CommEvent]:
+        """CommEvents one real iteration would leave in the Monitor log."""
+        k = len(self.ITER_PATTERN)
+        return [
+            CommEvent(op=op, timestamp=t_start + iter_time * (i / k), rank=rank)
+            for i, op in enumerate(self.ITER_PATTERN)
+        ]
+
+    # ------------------------------------- ClusterInterface (FALCON R1)
+    def profile_groups(self) -> dict[str, float]:
+        """Per-communication-group transfer time (profiling phase)."""
+        out: dict[str, float] = {}
+        m = self.job.model
+        tp_vol = m.comm_tp_bytes(self.job.tp, self.job.pp, 1)
+        dp_vol = m.comm_dp_bytes(self.job.tp, self.job.pp)
+        for s in range(self.job.pp):
+            for d in range(self.job.dp):
+                if self.job.tp > 1:
+                    cell = self._cell_devices(s, d)
+                    out[f"tp:s{s}d{d}"] = self._ring_time(cell, tp_vol)
+            for k in range(self.job.tp):
+                if self.job.dp > 1:
+                    ring = [self.device_at(s, d, k) for d in range(self.job.dp)]
+                    out[f"dp:s{s}t{k}"] = self._ring_time(ring, dp_vol)
+        return out
+
+    def group_ranks(self, group: str) -> list[int]:
+        kind, coords = group.split(":")
+        if kind == "tp":
+            s, d = coords[1:].split("d")
+            return self._cell_devices(int(s), int(d))
+        s, k = coords[1:].split("t")
+        return [self.device_at(int(s), d, int(k)) for d in range(self.job.dp)]
+
+    def benchmark_compute(self, ranks: list[int]) -> dict[int, float]:
+        """GEMM validation: time inversely proportional to device speed.
+
+        CPU contention does *not* show up here (paper case study 1: the GPU
+        matmul test found no degradation) — only compute_speed matters.
+        """
+        return {
+            r: self.cluster.gemm_ref_time / self.state.devices[r].compute_speed
+            for r in ranks
+        }
+
+    def measure_link(self, pair: tuple[int, int]) -> float:
+        a, b = pair
+        return self.cluster.p2p_payload / self.state.link_bw(a, b)
+
+    def healthy_link_time(self, pair: tuple[int, int]) -> float:
+        """Expected healthy time for this link class (fabric is known)."""
+        a, b = pair
+        return self.cluster.p2p_payload / self.cluster.base_link_bw(a, b)
+
+    def healthy_compute_time(self) -> float:
+        """Reference GEMM time on a healthy device."""
+        return self.cluster.gemm_ref_time

@@ -1,0 +1,140 @@
+"""Hardware and job specifications for the cluster performance model.
+
+Default numbers model the paper's testbed-class hardware for the simulator
+(H800-like compute, NVSwitch intra-node, 400 Gbps RoCE/IB inter-node) and
+TPU v5e for the roofline analysis of the JAX runtime (the dry-run target).
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass, field
+
+# --- TPU v5e constants (roofline target; per chip) -----------------------
+TPU_PEAK_FLOPS_BF16 = 197e12  # FLOP/s
+TPU_HBM_BW = 819e9  # bytes/s
+TPU_ICI_BW = 50e9  # bytes/s per link
+
+# --- GPU-cluster constants (simulator; per device) ------------------------
+H800_TFLOPS = 989e12 / 2  # dense bf16 w/o sparsity
+NVSWITCH_BW = 400e9  # bytes/s intra-node effective
+PIX_BW = 64e9  # PCIe switch
+RDMA_BW = 50e9  # 400 Gbps RoCE/IB per NIC in bytes/s
+
+
+@dataclass(frozen=True)
+class ModelSpec:
+    """Transformer shape, following the paper's Appendix 9.2 notation."""
+
+    layers: int
+    hidden: int
+    seq_len: int
+    vocab: int
+    micro_batch: int = 1  # b: sequences per micro-batch
+
+    @property
+    def params(self) -> float:
+        """N ~= 12 L h^2 (Eq. 6)."""
+        return 12.0 * self.layers * self.hidden**2 + self.vocab * self.hidden
+
+    def flops_per_microbatch(self) -> float:
+        """Fwd+bwd FLOPs for one micro-batch: ~6 N b s."""
+        return 6.0 * self.params * self.micro_batch * self.seq_len
+
+    # Communication volumes per iteration (Appendix 9.2), in bytes (bf16).
+    def comm_tp_bytes(self, t: int, p: int, m: int) -> float:
+        if t <= 1:
+            return 0.0
+        return 2.0 * 8 * self.micro_batch * m * self.seq_len * self.hidden * (
+            self.layers * (t - 1) / (p * t)
+        )
+
+    def comm_dp_bytes(self, t: int, p: int) -> float:
+        return 2.0 * self.params / (p * t)  # k = 1 gradient pass, bf16
+
+    def comm_pp_bytes(self, m: int) -> float:
+        return 2.0 * m * self.micro_batch * self.seq_len * self.hidden
+
+
+@dataclass
+class ClusterSpec:
+    """A homogeneous GPU cluster: nodes x GPUs, two-tier network."""
+
+    n_nodes: int
+    gpus_per_node: int = 8
+    gpu_flops: float = H800_TFLOPS
+    intra_node_bw: float = NVSWITCH_BW
+    inter_node_bw: float = RDMA_BW
+    #: benchmark GEMM reference time on a healthy GPU (s)
+    gemm_ref_time: float = 0.05
+    #: P2P validation payload (bytes)
+    p2p_payload: float = 256e6
+
+    @property
+    def n_devices(self) -> int:
+        return self.n_nodes * self.gpus_per_node
+
+    def node_of(self, device: int) -> int:
+        return device // self.gpus_per_node
+
+    def base_link_bw(self, a: int, b: int) -> float:
+        """Healthy bandwidth of the physical path between devices a and b."""
+        if a == b:
+            return float("inf")
+        if self.node_of(a) == self.node_of(b):
+            return self.intra_node_bw
+        return self.inter_node_bw
+
+
+@dataclass
+class DeviceState:
+    """Dynamic per-device health (multipliers; 1.0 = healthy)."""
+
+    compute_speed: float = 1.0  # GPU degradation / thermal throttling
+    host_speed: float = 1.0  # CPU contention (affects whole node)
+
+
+@dataclass
+class ClusterState:
+    """Mutable health state of every device and link."""
+
+    spec: ClusterSpec
+    devices: list[DeviceState] = field(init=False)
+    #: (min(a,b), max(a,b)) -> bandwidth multiplier
+    link_mult: dict[tuple[int, int], float] = field(default_factory=dict)
+    #: node -> NIC bandwidth multiplier (RoCE congestion hits the whole port,
+    #: slowing every inter-node flow of that node, not one cable)
+    nic_mult: dict[int, float] = field(default_factory=dict)
+
+    def __post_init__(self) -> None:
+        self.devices = [DeviceState() for _ in range(self.spec.n_devices)]
+
+    def reset(self) -> None:
+        for d in self.devices:
+            d.compute_speed = 1.0
+            d.host_speed = 1.0
+        self.link_mult.clear()
+        self.nic_mult.clear()
+
+    def effective_speed(self, device: int) -> float:
+        d = self.devices[device]
+        return d.compute_speed * d.host_speed
+
+    def link_bw(self, a: int, b: int) -> float:
+        base = self.spec.base_link_bw(a, b)
+        key = (min(a, b), max(a, b))
+        bw = base * self.link_mult.get(key, 1.0)
+        na, nb = self.spec.node_of(a), self.spec.node_of(b)
+        if na != nb:
+            bw *= min(self.nic_mult.get(na, 1.0), self.nic_mult.get(nb, 1.0))
+        return bw
+
+    def degrade_link(self, a: int, b: int, mult: float) -> None:
+        self.link_mult[(min(a, b), max(a, b))] = mult
+
+    def restore_link(self, a: int, b: int) -> None:
+        self.link_mult.pop((min(a, b), max(a, b)), None)
+
+    def degrade_nic(self, node: int, mult: float) -> None:
+        self.nic_mult[node] = mult
+
+    def restore_nic(self, node: int) -> None:
+        self.nic_mult.pop(node, None)

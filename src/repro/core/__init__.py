@@ -1,0 +1,10 @@
+"""FALCON core: detection (ACF, BOCD, validation) and mitigation (S1-S4)."""
+
+from repro.core.events import (  # noqa: F401
+    ChangePoint,
+    CommEvent,
+    CommOp,
+    FailSlowEvent,
+    RootCause,
+    Strategy,
+)

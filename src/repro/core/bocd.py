@@ -1,0 +1,229 @@
+"""Bayesian Online Change-point Detection (paper §4.2 + Appendix 9.1).
+
+Implements the Adams/MacKay-style run-length recursion the paper uses
+(eqs. 2-5): at each step maintain the run-length posterior Pr(r_t | x_{1:t}),
+with a Normal-Gamma underlying probabilistic model (Student-t predictive) and
+a constant-hazard change-point prior. A timestamp t is reported as a
+change-point when Pr(r_t = 0 | x_{1:t}) exceeds a threshold (0.9 in the
+paper's experiments). Time and memory are kept linear by truncating
+negligible run-length mass.
+"""
+from __future__ import annotations
+
+import math
+from dataclasses import dataclass, field
+
+import numpy as np
+
+DEFAULT_CP_THRESHOLD = 0.9
+
+
+@dataclass
+class BOCD:
+    """Online change-point detector over a scalar series (iteration times).
+
+    Parameters mirror the standard Normal-Gamma conjugate prior:
+      mu0/kappa0: prior mean and its pseudo-count,
+      alpha0/beta0: precision-Gamma shape/rate,
+      hazard: constant change-point hazard rate 1/expected-run-length.
+    """
+
+    hazard: float = 1.0 / 100.0
+    mu0: float = 0.0
+    kappa0: float = 1.0
+    alpha0: float = 1.0
+    beta0: float = 1.0
+    cp_threshold: float = DEFAULT_CP_THRESHOLD
+    truncation: float = 1e-6
+
+    # --- state (run-length posterior and per-run sufficient statistics) ---
+    _log_r: np.ndarray = field(default_factory=lambda: np.array([0.0]))
+    _mu: np.ndarray = field(init=False)
+    _kappa: np.ndarray = field(init=False)
+    _alpha: np.ndarray = field(init=False)
+    _beta: np.ndarray = field(init=False)
+    _t: int = 0
+
+    _rl: np.ndarray = field(init=False)
+
+    def __post_init__(self) -> None:
+        self._mu = np.array([self.mu0])
+        self._kappa = np.array([self.kappa0])
+        self._alpha = np.array([self.alpha0])
+        self._beta = np.array([self.beta0])
+        self._rl = np.array([0])
+
+    # ------------------------------------------------------------------
+    def _log_pred(self, x: float) -> np.ndarray:
+        """Student-t log predictive for each current run-length hypothesis."""
+        return _student_t_logpdf(x, self._mu, self._kappa, self._alpha, self._beta)
+
+    def _log_prior_pred(self, x: float) -> float:
+        """Student-t log predictive under the (fresh-segment) prior."""
+        return float(
+            _student_t_logpdf(
+                x,
+                np.array([self.mu0]),
+                np.array([self.kappa0]),
+                np.array([self.alpha0]),
+                np.array([self.beta0]),
+            )[0]
+        )
+
+    def update(self, x: float) -> float:
+        """Feed one observation; return Pr(r_t = 0 | x_{1:t}).
+
+        Convention: ``r_t = 0`` means x_t is the *first* observation of a new
+        segment, so the change-point path scores x_t under the **prior**
+        predictive while growth paths score it under each run's posterior
+        predictive. (In the alternative Adams-MacKay message convention the
+        CP path reuses the old run's predictive and Pr(r_t=0) degenerates to
+        the hazard whenever predictives coincide — useless for the paper's
+        "probability > 0.9" detection rule.)
+        """
+        log_pred = self._log_pred(x)
+        log_h = math.log(self.hazard)
+        log_1mh = math.log1p(-self.hazard)
+
+        # Growth probabilities: run continues (r -> r+1).
+        log_growth = self._log_r + log_pred + log_1mh
+        # Change-point: new segment begins at t; x_t scored under the prior.
+        log_cp = self._log_prior_pred(x) + log_h  # sum_r P(r) = 1 (normalized)
+
+        new_log_r = np.empty(log_growth.size + 1)
+        new_log_r[0] = log_cp
+        new_log_r[1:] = log_growth
+        new_log_r -= _logsumexp(new_log_r)
+
+        # Update sufficient statistics for each run-length hypothesis; the
+        # new r=0 hypothesis is the prior updated with x_t.
+        mu_all = np.concatenate(([self.mu0], self._mu))
+        kappa_all = np.concatenate(([self.kappa0], self._kappa))
+        alpha_all = np.concatenate(([self.alpha0], self._alpha))
+        beta_all = np.concatenate(([self.beta0], self._beta))
+        self._mu = (kappa_all * mu_all + x) / (kappa_all + 1.0)
+        self._beta = beta_all + 0.5 * kappa_all * (x - mu_all) ** 2 / (
+            kappa_all + 1.0
+        )
+        self._kappa = kappa_all + 1.0
+        self._alpha = alpha_all + 0.5
+        self._rl = np.concatenate(([0], self._rl + 1))
+        self._log_r = new_log_r
+        self._t += 1
+
+        # Truncate negligible run-length mass -> linear time overall (R2).
+        keep = self._log_r > math.log(self.truncation)
+        keep[0] = True
+        if not keep.all():
+            self._log_r = self._log_r[keep]
+            self._log_r -= _logsumexp(self._log_r)
+            self._mu = self._mu[keep]
+            self._kappa = self._kappa[keep]
+            self._alpha = self._alpha[keep]
+            self._beta = self._beta[keep]
+            self._rl = self._rl[keep]
+        return float(math.exp(self._log_r[0]))
+
+    # -- detection statistics ------------------------------------------
+    def p_recent_change(self, window: int = 2) -> float:
+        """Posterior probability that a change-point occurred within the
+        last ``window`` observations: Pr(r_t <= window | x_{1:t})."""
+        mask = self._rl <= window
+        if not mask.any():
+            return 0.0
+        return float(np.exp(_logsumexp(self._log_r[mask])))
+
+    def map_runlength(self) -> int:
+        """MAP run length (distance back to the most likely change-point)."""
+        return int(self._rl[int(np.argmax(self._log_r))])
+
+
+def noise_scale(series: np.ndarray) -> float:
+    """Robust per-step noise estimate: MAD of first differences.
+
+    First differences cancel slow level drift, so this measures *jitter*;
+    BOCD observations are standardized by it, making the detector sensitive
+    to any statistically significant level shift regardless of its relative
+    size (the 10 % relevance filter is the separate verification step).
+    """
+    x = np.asarray(series, dtype=np.float64)
+    if x.size < 3:
+        return max(float(np.median(np.abs(x))) * 1e-2, 1e-9)
+    d = np.diff(x)
+    mad = float(np.median(np.abs(d - np.median(d))))
+    sigma = 1.4826 * mad / np.sqrt(2.0)
+    floor = max(float(np.median(np.abs(x))) * 1e-3, 1e-9)
+    return max(sigma, floor)
+
+
+def detect_change_points(
+    series: np.ndarray,
+    hazard: float = 1.0 / 100.0,
+    cp_threshold: float = DEFAULT_CP_THRESHOLD,
+    min_gap: int = 3,
+    recent_window: int = 2,
+) -> list[int]:
+    """Run BOCD over ``series``; return change-point indices.
+
+    A change is reported at index ``i - map_runlength`` whenever the
+    posterior probability of a change within the last ``recent_window``
+    observations exceeds ``cp_threshold`` (paper: likelihood of r_t = 0
+    above 0.9 — evaluated over a tiny window so the single-step hazard
+    factor does not suppress genuine onsets). ``min_gap`` merges the burst
+    of detections that one physical change produces.
+    """
+    x = np.asarray(series, dtype=np.float64)
+    if x.size == 0:
+        return []
+    scale = noise_scale(x)
+    det = BOCD(
+        hazard=hazard,
+        mu0=float(x[0] / scale),
+        kappa0=1.0,
+        alpha0=1.0,
+        beta0=1.0,
+        cp_threshold=cp_threshold,
+    )
+    out: list[int] = []
+    for i, xi in enumerate(x):
+        det.update(float(xi / scale))
+        if i <= recent_window:  # p_recent is trivially 1 in the first steps
+            continue
+        if det.p_recent_change(recent_window) > cp_threshold:
+            idx = i - det.map_runlength()
+            if idx > 0 and (not out or idx - out[-1] >= min_gap):
+                out.append(idx)
+    return out
+
+
+def _student_t_logpdf(
+    x: float,
+    mu: np.ndarray,
+    kappa: np.ndarray,
+    alpha: np.ndarray,
+    beta: np.ndarray,
+) -> np.ndarray:
+    """Posterior-predictive Student-t of the Normal-Gamma model."""
+    df = 2.0 * alpha
+    scale2 = beta * (kappa + 1.0) / (alpha * kappa)
+    z2 = (x - mu) ** 2 / scale2
+    return (
+        _gammaln((df + 1.0) / 2.0)
+        - _gammaln(df / 2.0)
+        - 0.5 * np.log(np.pi * df * scale2)
+        - (df + 1.0) / 2.0 * np.log1p(z2 / df)
+    )
+
+
+def _logsumexp(a: np.ndarray) -> float:
+    m = float(np.max(a))
+    if math.isinf(m):
+        return m
+    return m + math.log(float(np.sum(np.exp(a - m))))
+
+
+try:  # scipy is available in this environment; keep a pure fallback anyway.
+    from scipy.special import gammaln as _gammaln
+except ImportError:  # pragma: no cover
+    def _gammaln(x):
+        return np.vectorize(math.lgamma)(x)

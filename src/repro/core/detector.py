@@ -1,0 +1,342 @@
+"""FALCON-DETECT — tracking, profiling, validation (paper §4).
+
+The three-phase workflow:
+
+1. *Tracking*: per-worker iteration times (ACF over the comm-event log) are
+   scanned online with BOCD; candidate change-points pass a +/-10 %
+   verification step to reject jitter (BOCD+V).
+2. *Profiling*: per-communication-group transfer times are compared; groups
+   slower than 1.1x the median are *suspicious*.
+3. *Validation*: training is briefly paused (the trainer simply withholds
+   the next step) and suspicious groups run GEMM compute benchmarks and the
+   O(1) ring/tree link sweep to pinpoint slow GPUs / congested links.
+
+The detector talks to the system under test through the small
+:class:`ClusterInterface` protocol so it works identically against the real
+JAX trainer and the cluster simulator (R1, framework-agnostic).
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass, field
+from typing import Protocol
+
+import numpy as np
+
+from repro.core import bocd, validation
+from repro.core.events import ChangePoint, FailSlowEvent, RootCause
+
+VERIFY_THRESHOLD = 0.10  # <10 % before/after difference => jitter (§4.2)
+SUSPICIOUS_FACTOR = 1.1  # >1.1x median transfer time => suspicious (§4.3)
+SLOW_COMPONENT_FACTOR = 1.3  # benchmark time vs median => flagged
+
+
+class ClusterInterface(Protocol):
+    """What FALCON-DETECT needs from the system under test."""
+
+    def profile_groups(self) -> dict[str, float]:
+        """Per-communication-group mean transfer time (profiling phase)."""
+        ...
+
+    def group_ranks(self, group: str) -> list[int]:
+        """Ranks participating in a communication group."""
+        ...
+
+    def benchmark_compute(self, ranks: list[int]) -> dict[int, float]:
+        """GEMM benchmark time per rank (validation phase)."""
+        ...
+
+    def measure_link(self, pair: tuple[int, int]) -> float:
+        """P2P transfer time for one link (validation phase)."""
+        ...
+
+    def healthy_link_time(self, pair: tuple[int, int]) -> float:
+        """Expected healthy P2P time for the link's class (NVLink vs PCIe vs
+        RDMA) — the benchmark executor knows the fabric topology."""
+        ...
+
+
+def verify_change_points(
+    series: np.ndarray,
+    indices: list[int],
+    window: int = 10,
+    threshold: float = VERIFY_THRESHOLD,
+) -> list[ChangePoint]:
+    """Change-point verification (§4.2): drop <10 % before/after deltas."""
+    x = np.asarray(series, dtype=np.float64)
+    out: list[ChangePoint] = []
+    for idx in indices:
+        lo = max(0, idx - window)
+        hi = min(x.size, idx + window)
+        if idx - lo < 2 or hi - idx < 2:
+            continue
+        before = float(np.mean(x[lo:idx]))
+        after = float(np.mean(x[idx:hi]))
+        if before <= 0:
+            continue
+        rel = abs(after - before) / before
+        if rel >= threshold:
+            out.append(
+                ChangePoint(
+                    index=idx,
+                    probability=1.0,
+                    mean_before=before,
+                    mean_after=after,
+                )
+            )
+    return out
+
+
+def detect_slow_iterations(
+    iteration_times: np.ndarray,
+    hazard: float = 1.0 / 100.0,
+    cp_threshold: float = bocd.DEFAULT_CP_THRESHOLD,
+    verify_threshold: float = VERIFY_THRESHOLD,
+    verify_windows: tuple[int, ...] = (5, 10, 30),
+) -> list[ChangePoint]:
+    """BOCD + verification over an iteration-time series (offline helper).
+
+    Verification is multi-scale: a change-point is confirmed if the
+    before/after means differ by >=10 % at ANY window scale — short windows
+    catch brief transients; wide windows catch gradual (ramped) onsets whose
+    local slope never reaches the threshold.
+    """
+    idx = bocd.detect_change_points(
+        iteration_times, hazard=hazard, cp_threshold=cp_threshold
+    )
+    confirmed: dict[int, ChangePoint] = {}
+    for w in verify_windows:
+        for cp in verify_change_points(
+            iteration_times, idx, window=w, threshold=verify_threshold
+        ):
+            confirmed.setdefault(cp.index, cp)
+    return [confirmed[i] for i in sorted(confirmed)]
+
+
+def detect_slow_iterations_sliding_window(
+    iteration_times: np.ndarray,
+    window: int = 10,
+    threshold: float = VERIFY_THRESHOLD,
+) -> list[ChangePoint]:
+    """Baseline detector (paper §7.2): flag a >10 % change of the current
+    sliding-window mean vs the preceding window's median. Used only for the
+    detection-accuracy comparison."""
+    x = np.asarray(iteration_times, dtype=np.float64)
+    out: list[ChangePoint] = []
+    state_slow = False
+    for i in range(2 * window, x.size):
+        med = float(np.median(x[i - 2 * window : i - window]))
+        cur = float(np.mean(x[i - window : i]))
+        if med <= 0:
+            continue
+        rel = (cur - med) / med
+        if not state_slow and rel > threshold:
+            out.append(
+                ChangePoint(index=i, probability=1.0, mean_before=med, mean_after=cur)
+            )
+            state_slow = True
+        elif state_slow and abs(rel) < threshold / 2:
+            state_slow = False
+    return out
+
+
+@dataclass
+class FalconDetect:
+    """Online detector: feed iteration times, get pinpointed fail-slows."""
+
+    cluster: ClusterInterface
+    hazard: float = 1.0 / 100.0
+    cp_threshold: float = bocd.DEFAULT_CP_THRESHOLD
+    verify_window: int = 10
+    #: while an event is active, re-run the O(1) component validation every
+    #: this many iterations. Needed because successful mitigation (S2/S3)
+    #: flattens the iteration-time signal: the *fault's* relief no longer
+    #: shows up as a change-point, only re-validation can see it.
+    revalidate_every: int = 10
+
+    warmup: int = 8
+
+    _series: list[float] = field(init=False, default_factory=list)
+    _bocd: bocd.BOCD | None = field(init=False, default=None)
+    _scale: float = field(init=False, default=1.0)
+    _healthy: float = field(init=False, default=0.0)
+    active_event: FailSlowEvent | None = field(init=False, default=None)
+    history: list[FailSlowEvent] = field(init=False, default_factory=list)
+
+    # ------------------------------------------------------------------
+    def observe(self, iter_time: float, now: float) -> FailSlowEvent | None:
+        """Feed one iteration time; returns a new FailSlowEvent on onset."""
+        self._series.append(iter_time)
+        n = len(self._series)
+        if self._bocd is None:
+            # Warm up: estimate the jitter scale from the first samples,
+            # then replay them into a freshly-parameterized detector.
+            if n < self.warmup:
+                return None
+            self._scale = bocd.noise_scale(np.asarray(self._series))
+            self._bocd = bocd.BOCD(
+                hazard=self.hazard,
+                cp_threshold=self.cp_threshold,
+                mu0=self._series[0] / self._scale,
+                beta0=1.0,
+            )
+            for v in self._series[:-1]:
+                self._bocd.update(v / self._scale)
+        self._bocd.update(iter_time / self._scale)
+        if (
+            self.active_event is not None
+            and self.active_event.components
+            and n % self.revalidate_every == 0
+        ):
+            if self._components_recovered(self.active_event):
+                self.active_event.end_time = now
+                self.history.append(self.active_event)
+                self.active_event = None
+                return None
+            if iter_time > 1.15 * self.active_event.t_slow:
+                # The fault persists AND the iteration got worse than the
+                # event's recorded severity: a compound fail-slow piled on
+                # (paper Fig. 6). Close the stale event and re-pinpoint so
+                # the planner restarts with the true root-cause set.
+                self.active_event.end_time = now
+                self.history.append(self.active_event)
+                cp = ChangePoint(
+                    index=n - 1,
+                    probability=1.0,
+                    mean_before=self._healthy or self.active_event.t_healthy,
+                    mean_after=iter_time,
+                )
+                event = self._pinpoint(now, cp)
+                event.t_healthy = cp.mean_before
+                self.active_event = event
+                return event
+        if n < 3 or self._bocd.p_recent_change() <= self.cp_threshold:
+            return None
+        cp_idx = max(1, n - 1 - self._bocd.map_runlength())
+        cps = verify_change_points(
+            np.asarray(self._series), [cp_idx], window=self.verify_window
+        )
+        if not cps:
+            return None
+        cp = cps[0]
+        if cp.relative_change > 0:
+            if self.active_event is None:
+                # Onset of a fail-slow: run profiling + validation.
+                self._healthy = cp.mean_before
+                event = self._pinpoint(now, cp)
+                self.active_event = event
+                return event
+            # Compound fail-slow (paper Fig. 6/17): a second degradation on
+            # top of an active one. Close the old event and re-pinpoint —
+            # the caller starts a fresh mitigation ladder for the new state.
+            if cp.mean_after > 1.05 * self.active_event.t_slow:
+                self.active_event.end_time = now
+                self.history.append(self.active_event)
+                event = self._pinpoint(now, cp)
+                event.t_healthy = self._healthy or cp.mean_before
+                self.active_event = event
+                return event
+            return None
+        if cp.relative_change < 0 and self.active_event is not None:
+            # A drop in iteration time can be the fault's relief OR the
+            # effect of our own mitigation: when the slow components are
+            # known, confirm with the O(1) re-validation before closing.
+            if self.active_event.components and not self._components_recovered(
+                self.active_event
+            ):
+                return None
+            self.active_event.end_time = now
+            self.history.append(self.active_event)
+            self.active_event = None
+        return None
+
+    # ------------------------------------------------------------------
+    def _components_recovered(self, event: FailSlowEvent) -> bool:
+        """Cheap re-validation of the flagged components only (O(1))."""
+        ref_link = getattr(self.cluster, "healthy_link_time", None)
+        ref_gemm = getattr(self.cluster, "healthy_compute_time", None)
+        for comp in event.components:
+            kind, _, ident = comp.partition(":")
+            if kind == "gpu":
+                r = int(ident)
+                t = self.cluster.benchmark_compute([r]).get(r)
+                if t is None:
+                    return False
+                if ref_gemm is not None and t > SLOW_COMPONENT_FACTOR * ref_gemm():
+                    return False
+            elif kind == "link":
+                a, b = (int(x) for x in ident.split("-"))
+                t = self.cluster.measure_link((a, b))
+                if ref_link is not None and t > 1.5 * ref_link((a, b)):
+                    return False
+        return True
+
+    # ------------------------------------------------------------------
+    def _pinpoint(self, now: float, cp: ChangePoint) -> FailSlowEvent:
+        """Profiling + validation phases (§4.3)."""
+        group_times = self.cluster.profile_groups()
+        suspicious = suspicious_groups(group_times)
+        if not suspicious:
+            # No group stands out relative to the median — either the
+            # degradation is uniform (host-level) or there are too few
+            # groups to compare. Validate everything (still cheap: GEMMs in
+            # parallel + O(1) link passes per group).
+            suspicious = list(group_times)
+
+        slow_gpus: list[str] = []
+        slow_links: list[str] = []
+        for g in suspicious:
+            ranks = self.cluster.group_ranks(g)
+            # 1) computation validation: parallel GEMM.
+            comp = self.cluster.benchmark_compute(ranks)
+            if comp:
+                med = float(np.median(list(comp.values())))
+                slow_gpus += [
+                    f"gpu:{r}" for r, t in comp.items() if t > SLOW_COMPONENT_FACTOR * med
+                ]
+            # 2) communication validation: O(1) ring sweep over the group.
+            if len(ranks) >= 2:
+                passes = validation.ring_passes(len(ranks))
+                local_pairs = [
+                    [(ranks[a], ranks[b]) for a, b in p] for p in passes
+                ]
+                reference = getattr(self.cluster, "healthy_link_time", None)
+                slow, _ = validation.validate_links(
+                    local_pairs, self.cluster.measure_link,
+                    reference=reference,
+                )
+                slow_links += [f"link:{a}-{b}" for a, b in slow]
+
+        if slow_gpus and slow_links:
+            cause = RootCause.UNKNOWN  # compound; planner treats as generic
+        elif slow_gpus:
+            cause = RootCause.GPU_DEGRADATION
+        elif slow_links:
+            cause = RootCause.NETWORK_CONGESTION
+        else:
+            # Uniform slowdown with healthy GPUs and links points at the host
+            # (paper case study 1: CPU contention shows no GPU degradation).
+            cause = RootCause.CPU_CONTENTION
+
+        severity = 0.0
+        if cp.mean_after > 0:
+            severity = max(0.0, 1.0 - cp.mean_before / cp.mean_after)
+        return FailSlowEvent(
+            start_time=now,
+            root_cause=cause,
+            components=slow_gpus + slow_links,
+            t_healthy=cp.mean_before,
+            t_slow=cp.mean_after,
+            severity=severity,
+        )
+
+
+def suspicious_groups(
+    group_times: dict[str, float], factor: float = SUSPICIOUS_FACTOR
+) -> list[str]:
+    """Groups with transfer time > factor x median (§4.3 profiling)."""
+    if not group_times:
+        return []
+    med = float(np.median(list(group_times.values())))
+    if med <= 0:
+        return []
+    return [g for g, t in group_times.items() if t > factor * med]

@@ -1,0 +1,158 @@
+"""Pallas TPU flash attention (blocked online-softmax), GQA + sliding window.
+
+Tiling: grid = (batch, q_heads, Sq/block_q, Skv/block_k); the innermost
+(KV) grid dimension is sequential on TPU, so the online-softmax accumulators
+(m, l, acc) live in VMEM scratch and persist across KV steps. Q/K/V tiles
+are staged HBM->VMEM by BlockSpec; block sizes default to 128 to align with
+the MXU (128x128) and the f32 VREG lane layout.
+
+Causal + sliding-window masking is applied per tile with 2D iota; fully
+masked tiles are skipped via ``pl.when`` (no MXU work issued).
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+NEG_INF = -1e30
+
+
+def _kernel(
+    q_ref, k_ref, v_ref, o_ref,
+    m_scr, l_scr, acc_scr,
+    *, scale: float, causal: bool, window: int,
+    block_q: int, block_k: int, seq_kv: int,
+):
+    iq = pl.program_id(2)
+    ik = pl.program_id(3)
+    nk = pl.num_programs(3)
+
+    @pl.when(ik == 0)
+    def _init():
+        m_scr[...] = jnp.full_like(m_scr, NEG_INF)
+        l_scr[...] = jnp.zeros_like(l_scr)
+        acc_scr[...] = jnp.zeros_like(acc_scr)
+
+    q_start = iq * block_q
+    k_start = ik * block_k
+
+    # Tile-level skip: causal => no work if the whole tile is above the
+    # diagonal; sliding window => no work if the tile is entirely outside.
+    run = jnp.bool_(True)
+    if causal:
+        run &= q_start + block_q - 1 >= k_start
+    if window:
+        run &= q_start < k_start + block_k + window
+
+    @pl.when(run)
+    def _compute():
+        q = q_ref[0, 0].astype(jnp.float32) * scale  # (bq, hd)
+        k = k_ref[0, 0].astype(jnp.float32)  # (bk, hd)
+        s = jax.lax.dot_general(
+            q, k, (((1,), (1,)), ((), ())),
+            preferred_element_type=jnp.float32,
+        )  # (bq, bk)
+
+        rows = q_start + jax.lax.broadcasted_iota(jnp.int32, (block_q, block_k), 0)
+        cols = k_start + jax.lax.broadcasted_iota(jnp.int32, (block_q, block_k), 1)
+        mask = cols < seq_kv
+        if causal:
+            mask &= rows >= cols
+        if window:
+            mask &= rows - cols < window
+        s = jnp.where(mask, s, NEG_INF)
+
+        m_prev = m_scr[...]
+        l_prev = l_scr[...]
+        m_cur = jnp.max(s, axis=1, keepdims=True)
+        m_new = jnp.maximum(m_prev, m_cur)
+        p = jnp.exp(s - m_new)
+        alpha = jnp.exp(m_prev - m_new)
+        l_new = l_prev * alpha + jnp.sum(p, axis=1, keepdims=True)
+        v = v_ref[0, 0].astype(jnp.float32)  # (bk, hd)
+        pv = jax.lax.dot_general(
+            p, v, (((1,), (0,)), ((), ())),
+            preferred_element_type=jnp.float32,
+        )
+        acc_scr[...] = acc_scr[...] * alpha + pv
+        m_scr[...] = m_new
+        l_scr[...] = l_new
+
+    @pl.when(ik == nk - 1)
+    def _finalize():
+        l = jnp.maximum(l_scr[...], 1e-30)
+        o_ref[0, 0] = (acc_scr[...] / l).astype(o_ref.dtype)
+
+
+def flash_attention(
+    q: jax.Array,  # (B, Sq, H, hd)
+    k: jax.Array,  # (B, Skv, KVH, hd)
+    v: jax.Array,
+    *,
+    causal: bool = True,
+    window: int = 0,
+    block_q: int = 128,
+    block_k: int = 128,
+    interpret: bool = False,
+) -> jax.Array:
+    b, sq, h, hd = q.shape
+    skv, kvh = k.shape[1], k.shape[2]
+    rep = h // kvh
+    scale = hd**-0.5
+
+    block_q = min(block_q, sq)
+    block_k = min(block_k, skv)
+
+    qt = q.transpose(0, 2, 1, 3)  # (B, H, Sq, hd)
+    kt = k.transpose(0, 2, 1, 3)  # (B, KVH, Skv, hd)
+    vt = v.transpose(0, 2, 1, 3)
+
+    pad_q = (-sq) % block_q
+    pad_k = (-skv) % block_k
+    if pad_q:
+        qt = jnp.pad(qt, ((0, 0), (0, 0), (0, pad_q), (0, 0)))
+    if pad_k:
+        kt = jnp.pad(kt, ((0, 0), (0, 0), (0, pad_k), (0, 0)))
+        vt = jnp.pad(vt, ((0, 0), (0, 0), (0, pad_k), (0, 0)))
+    nq = qt.shape[2] // block_q
+    nk = kt.shape[2] // block_k
+
+    kernel = functools.partial(
+        _kernel,
+        scale=scale, causal=causal, window=window,
+        block_q=block_q, block_k=block_k, seq_kv=skv,
+    )
+    out = pl.pallas_call(
+        kernel,
+        grid=(b, h, nq, nk),
+        in_specs=[
+            pl.BlockSpec(
+                (1, 1, block_q, hd), lambda bi, hi, qi, ki: (bi, hi, qi, 0)
+            ),
+            pl.BlockSpec(
+                (1, 1, block_k, hd),
+                lambda bi, hi, qi, ki, rep=rep: (bi, hi // rep, ki, 0),
+            ),
+            pl.BlockSpec(
+                (1, 1, block_k, hd),
+                lambda bi, hi, qi, ki, rep=rep: (bi, hi // rep, ki, 0),
+            ),
+        ],
+        out_specs=pl.BlockSpec(
+            (1, 1, block_q, hd), lambda bi, hi, qi, ki: (bi, hi, qi, 0)
+        ),
+        out_shape=jax.ShapeDtypeStruct(qt.shape, q.dtype),
+        scratch_shapes=[
+            pltpu.VMEM((block_q, 1), jnp.float32),
+            pltpu.VMEM((block_q, 1), jnp.float32),
+            pltpu.VMEM((block_q, hd), jnp.float32),
+        ],
+        interpret=interpret,
+    )(qt, kt, vt)
+    if pad_q:
+        out = out[:, :, :sq, :]
+    return out.transpose(0, 2, 1, 3)  # (B, Sq, H, hd)

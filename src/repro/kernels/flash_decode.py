@@ -1,0 +1,123 @@
+"""Pallas TPU flash-decode: one query token against a long KV cache.
+
+Decode attention is HBM-bound — the whole cache streams through VMEM once
+per generated token — so the kernel's job is (a) to keep that streaming at
+full HBM bandwidth with MXU-aligned (block_k × hd) tiles and (b) to split
+the cache into parallel chunks whose partial softmaxes are combined with the
+log-sum-exp trick (the same math the seq-sharded cache layout relies on
+across devices; here applied within one device).
+
+Grid: (batch, kv_heads, Skv/block_k). The innermost (KV) dimension is
+sequential on TPU, so the (rep, hd) accumulator — all GQA query heads of
+one KV head — lives in VMEM scratch across KV steps. ``valid_len`` masks
+positions beyond the current decode position.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+NEG_INF = -1e30
+
+
+def _kernel(
+    len_ref, q_ref, k_ref, v_ref, o_ref,
+    m_scr, l_scr, acc_scr,
+    *, scale: float, block_k: int, rep: int,
+):
+    ik = pl.program_id(2)
+    nk = pl.num_programs(2)
+    valid = len_ref[0]
+
+    @pl.when(ik == 0)
+    def _init():
+        m_scr[...] = jnp.full_like(m_scr, NEG_INF)
+        l_scr[...] = jnp.zeros_like(l_scr)
+        acc_scr[...] = jnp.zeros_like(acc_scr)
+
+    k_start = ik * block_k
+
+    @pl.when(k_start < valid)
+    def _compute():
+        q = q_ref[0, 0].astype(jnp.float32) * scale  # (rep, hd)
+        k = k_ref[0, 0].astype(jnp.float32)  # (bk, hd)
+        s = jax.lax.dot_general(
+            q, k, (((1,), (1,)), ((), ())),
+            preferred_element_type=jnp.float32,
+        )  # (rep, bk)
+        cols = k_start + jax.lax.broadcasted_iota(jnp.int32, s.shape, 1)
+        s = jnp.where(cols < valid, s, NEG_INF)
+
+        m_prev = m_scr[...]
+        m_new = jnp.maximum(m_prev, jnp.max(s, axis=1, keepdims=True))
+        p = jnp.exp(s - m_new)
+        alpha = jnp.exp(m_prev - m_new)
+        l_scr[...] = l_scr[...] * alpha + jnp.sum(p, axis=1, keepdims=True)
+        v = v_ref[0, 0].astype(jnp.float32)  # (bk, hd)
+        pv = jax.lax.dot_general(
+            p, v, (((1,), (0,)), ((), ())),
+            preferred_element_type=jnp.float32,
+        )
+        acc_scr[...] = acc_scr[...] * alpha + pv
+        m_scr[...] = m_new
+
+    @pl.when(ik == nk - 1)
+    def _finalize():
+        l = jnp.maximum(l_scr[...], 1e-30)
+        o_ref[0, 0] = (acc_scr[...] / l).astype(o_ref.dtype)
+
+
+def flash_decode(
+    q: jax.Array,  # (B, H, hd) — ONE query token per sequence
+    k: jax.Array,  # (B, Skv, KVH, hd) cache
+    v: jax.Array,
+    valid_len: jax.Array,  # () or (B,) int32: positions < valid_len attend
+    *,
+    block_k: int = 512,
+    interpret: bool = False,
+) -> jax.Array:
+    b, h, hd = q.shape
+    skv, kvh = k.shape[1], k.shape[2]
+    rep = h // kvh
+    scale = hd**-0.5
+    block_k = min(block_k, skv)
+
+    qt = q.reshape(b, kvh, rep, hd)
+    kt = k.transpose(0, 2, 1, 3)  # (B, KVH, Skv, hd)
+    vt = v.transpose(0, 2, 1, 3)
+
+    pad_k = (-skv) % block_k
+    if pad_k:
+        kt = jnp.pad(kt, ((0, 0), (0, 0), (0, pad_k), (0, 0)))
+        vt = jnp.pad(vt, ((0, 0), (0, 0), (0, pad_k), (0, 0)))
+    nk = kt.shape[2] // block_k
+
+    lens = jnp.broadcast_to(jnp.asarray(valid_len, jnp.int32), (b,))
+
+    kernel = functools.partial(
+        _kernel, scale=scale, block_k=block_k, rep=rep
+    )
+    out = pl.pallas_call(
+        kernel,
+        grid=(b, kvh, nk),
+        in_specs=[
+            pl.BlockSpec(memory_space=pltpu.SMEM, block_shape=(1,),
+                         index_map=lambda bi, hi, ki: (bi,)),
+            pl.BlockSpec((1, 1, rep, hd), lambda bi, hi, ki: (bi, hi, 0, 0)),
+            pl.BlockSpec((1, 1, block_k, hd), lambda bi, hi, ki: (bi, hi, ki, 0)),
+            pl.BlockSpec((1, 1, block_k, hd), lambda bi, hi, ki: (bi, hi, ki, 0)),
+        ],
+        out_specs=pl.BlockSpec((1, 1, rep, hd), lambda bi, hi, ki: (bi, hi, 0, 0)),
+        out_shape=jax.ShapeDtypeStruct(qt.shape, q.dtype),
+        scratch_shapes=[
+            pltpu.VMEM((rep, 1), jnp.float32),
+            pltpu.VMEM((rep, 1), jnp.float32),
+            pltpu.VMEM((rep, hd), jnp.float32),
+        ],
+        interpret=interpret,
+    )(lens, qt, kt, vt)
+    return out.reshape(b, h, hd)

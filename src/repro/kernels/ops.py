@@ -1,0 +1,51 @@
+"""Jit'd public wrappers for the Pallas kernels.
+
+On CPU (this container) the kernels execute in interpret mode — the kernel
+body runs in Python per grid step, which validates the exact TPU program
+logic; on a real TPU backend the same calls compile to Mosaic.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+
+from repro.kernels import flash_attention as _fa
+from repro.kernels import ssd_scan as _ssd
+
+
+def _interpret_default() -> bool:
+    return jax.default_backend() == "cpu"
+
+
+@functools.partial(
+    jax.jit, static_argnames=("causal", "window", "block_q", "block_k", "interpret")
+)
+def flash_attention(
+    q, k, v, *, causal=True, window=0, block_q=128, block_k=128, interpret=None
+):
+    if interpret is None:
+        interpret = _interpret_default()
+    return _fa.flash_attention(
+        q, k, v,
+        causal=causal, window=window,
+        block_q=block_q, block_k=block_k, interpret=interpret,
+    )
+
+
+@functools.partial(jax.jit, static_argnames=("chunk", "interpret"))
+def ssd_scan(x, dt, a, b_mat, c_mat, *, chunk=128, interpret=None):
+    if interpret is None:
+        interpret = _interpret_default()
+    return _ssd.ssd_scan(x, dt, a, b_mat, c_mat, chunk=chunk, interpret=interpret)
+
+
+@functools.partial(jax.jit, static_argnames=("block_k", "interpret"))
+def flash_decode(q, k, v, valid_len, *, block_k=512, interpret=None):
+    from repro.kernels import flash_decode as _fd
+
+    if interpret is None:
+        interpret = _interpret_default()
+    return _fd.flash_decode(
+        q, k, v, valid_len, block_k=block_k, interpret=interpret
+    )

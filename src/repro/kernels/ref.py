@@ -1,0 +1,101 @@
+"""Pure-jnp oracles for the Pallas kernels (naive, obviously-correct)."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+def attention_ref(
+    q: jax.Array,  # (B, Sq, H, hd)
+    k: jax.Array,  # (B, Skv, KVH, hd)
+    v: jax.Array,
+    *,
+    causal: bool = True,
+    window: int = 0,
+) -> jax.Array:
+    """Materialized-softmax GQA attention (the slow, trusted reference)."""
+    b, sq, h, hd = q.shape
+    skv, kvh = k.shape[1], k.shape[2]
+    rep = h // kvh
+    kf = jnp.repeat(k, rep, axis=2).astype(jnp.float32)
+    vf = jnp.repeat(v, rep, axis=2).astype(jnp.float32)
+    qf = q.astype(jnp.float32) * hd**-0.5
+    s = jnp.einsum("bqhd,bkhd->bhqk", qf, kf)
+    rows = jnp.arange(sq)[:, None]
+    cols = jnp.arange(skv)[None, :]
+    mask = jnp.ones((sq, skv), bool)
+    if causal:
+        mask &= rows >= cols
+    if window:
+        mask &= rows - cols < window
+    s = jnp.where(mask, s, -1e30)
+    p = jax.nn.softmax(s, axis=-1)
+    out = jnp.einsum("bhqk,bkhd->bqhd", p, vf)
+    return out.astype(q.dtype)
+
+
+def decode_attention_ref(
+    q: jax.Array,  # (B, H, hd) one token
+    k: jax.Array,  # (B, Skv, KVH, hd)
+    v: jax.Array,
+    valid_len,  # () or (B,) int32
+) -> jax.Array:
+    """Single-token GQA attention over a masked cache (trusted reference)."""
+    b, h, hd = q.shape
+    skv, kvh = k.shape[1], k.shape[2]
+    rep = h // kvh
+    kf = jnp.repeat(k, rep, axis=2).astype(jnp.float32)
+    vf = jnp.repeat(v, rep, axis=2).astype(jnp.float32)
+    qf = q.astype(jnp.float32) * hd**-0.5
+    s = jnp.einsum("bhd,bkhd->bhk", qf, kf)
+    lens = jnp.broadcast_to(jnp.asarray(valid_len, jnp.int32), (b,))
+    mask = jnp.arange(skv)[None, None, :] < lens[:, None, None]
+    s = jnp.where(mask, s, -1e30)
+    p = jax.nn.softmax(s, axis=-1)
+    out = jnp.einsum("bhk,bkhd->bhd", p, vf)
+    return out.astype(q.dtype)
+
+
+def ssd_ref(
+    x: jax.Array,  # (B, S, H, P)
+    dt: jax.Array,  # (B, S, H)
+    a: jax.Array,  # (H,) negative
+    b_mat: jax.Array,  # (B, S, G, N)
+    c_mat: jax.Array,  # (B, S, G, N)
+) -> tuple[jax.Array, jax.Array]:
+    """Sequential state-space recurrence (the definitionally-correct form):
+
+        S_t = exp(dt_t * a) * S_{t-1} + dt_t * x_t b_tᵀ
+        y_t = C_t · S_t
+    """
+    bsz, s, h, p = x.shape
+    g, n = b_mat.shape[2], b_mat.shape[3]
+    rep = h // g
+    bh = jnp.repeat(b_mat, rep, axis=2).astype(jnp.float32)  # (B,S,H,N)
+    ch = jnp.repeat(c_mat, rep, axis=2).astype(jnp.float32)
+    xf = x.astype(jnp.float32)
+    dtf = dt.astype(jnp.float32)
+    af = a.astype(jnp.float32)
+
+    def step(state, inp):
+        xt, dtt, bt, ct = inp  # (B,H,P), (B,H), (B,H,N), (B,H,N)
+        decay = jnp.exp(dtt * af)  # (B,H)
+        state = state * decay[..., None, None] + jnp.einsum(
+            "bh,bhp,bhn->bhpn", dtt, xt, bt
+        )
+        y = jnp.einsum("bhn,bhpn->bhp", ct, state)
+        return state, y
+
+    s0 = jnp.zeros((bsz, h, p, n), jnp.float32)
+    final, ys = jax.lax.scan(
+        step,
+        s0,
+        (
+            xf.swapaxes(0, 1),
+            dtf.swapaxes(0, 1),
+            bh.swapaxes(0, 1),
+            ch.swapaxes(0, 1),
+        ),
+    )
+    y = ys.swapaxes(0, 1)  # (B,S,H,P)
+    return y.astype(x.dtype), final.astype(x.dtype)

@@ -1,0 +1,130 @@
+"""Pallas TPU kernel for the Mamba2 SSD chunked scan.
+
+Tiling: grid = (batch, heads, n_chunks); the innermost (chunk) grid axis is
+sequential on TPU, so the running inter-chunk state (P x N, f32) lives in a
+VMEM scratch buffer that persists across chunk steps — the recurrence never
+round-trips to HBM. Per step, the kernel evaluates the SSD *dual* form for
+one (batch, head, chunk) tile: three MXU matmuls (C·Bᵀ masked-decay score,
+intra-chunk output, inter-chunk output) plus the rank-1 state update.
+
+Chunk length Q and head dim P default to 128 to match the MXU; state dim N
+is the model's (16 or 128 here).
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+
+def _kernel(
+    x_ref,  # (1, 1, Q, P)
+    dt_ref,  # (1, 1, Q)
+    a_ref,  # (1,)
+    b_ref,  # (1, 1, Q, N)
+    c_ref,  # (1, 1, Q, N)
+    y_ref,  # (1, 1, Q, P)
+    state_out_ref,  # (1, 1, P, N)
+    state_scr,  # VMEM (P, N) f32
+    *, chunk: int,
+):
+    ic = pl.program_id(2)
+    nc = pl.num_programs(2)
+
+    @pl.when(ic == 0)
+    def _init():
+        state_scr[...] = jnp.zeros_like(state_scr)
+
+    x = x_ref[0, 0].astype(jnp.float32)  # (Q, P)
+    dt = dt_ref[0, 0].astype(jnp.float32)  # (Q,)
+    a = a_ref[0].astype(jnp.float32)  # scalar (negative)
+    b = b_ref[0, 0].astype(jnp.float32)  # (Q, N)
+    c = c_ref[0, 0].astype(jnp.float32)  # (Q, N)
+
+    da = dt * a  # (Q,)
+    cum = jnp.cumsum(da)  # (Q,)
+
+    # Intra-chunk dual form: y_intra = ((C Bᵀ) ⊙ L ⊙ dt_k) x
+    scores = jax.lax.dot_general(
+        c, b, (((1,), (1,)), ((), ())), preferred_element_type=jnp.float32
+    )  # (Q, Q)
+    rows = jax.lax.broadcasted_iota(jnp.int32, (chunk, chunk), 0)
+    cols = jax.lax.broadcasted_iota(jnp.int32, (chunk, chunk), 1)
+    l_mat = jnp.where(rows >= cols, jnp.exp(cum[:, None] - cum[None, :]), 0.0)
+    m = scores * l_mat * dt[None, :]
+    y = jax.lax.dot_general(
+        m, x, (((1,), (0,)), ((), ())), preferred_element_type=jnp.float32
+    )  # (Q, P)
+
+    # Inter-chunk: y += diag(exp(cum)) C S_prev
+    s_prev = state_scr[...]
+    y += jnp.exp(cum)[:, None] * jax.lax.dot_general(
+        c, s_prev, (((1,), (1,)), ((), ())), preferred_element_type=jnp.float32
+    )
+
+    # State update: S = S * exp(cum[-1]) + Σ_q exp(cum[-1]-cum_q) dt_q x_q b_qᵀ
+    w = jnp.exp(cum[-1] - cum) * dt  # (Q,)
+    xw = x * w[:, None]  # (Q, P)
+    state_scr[...] = s_prev * jnp.exp(cum[-1]) + jax.lax.dot_general(
+        xw, b, (((0,), (0,)), ((), ())), preferred_element_type=jnp.float32
+    )  # (P, N)
+
+    y_ref[0, 0] = y.astype(y_ref.dtype)
+
+    @pl.when(ic == nc - 1)
+    def _emit_state():
+        state_out_ref[0, 0] = state_scr[...].astype(state_out_ref.dtype)
+
+
+def ssd_scan(
+    x: jax.Array,  # (B, S, H, P)
+    dt: jax.Array,  # (B, S, H)
+    a: jax.Array,  # (H,)
+    b_mat: jax.Array,  # (B, S, G, N)
+    c_mat: jax.Array,  # (B, S, G, N)
+    *,
+    chunk: int = 128,
+    interpret: bool = False,
+) -> tuple[jax.Array, jax.Array]:
+    """Pallas SSD. Returns (y (B,S,H,P), final_state (B,H,P,N))."""
+    bsz, s, h, p = x.shape
+    g, n = b_mat.shape[2], b_mat.shape[3]
+    rep = h // g
+    assert s % chunk == 0, f"seq {s} % chunk {chunk} != 0"
+    nc = s // chunk
+
+    xt = x.transpose(0, 2, 1, 3)  # (B, H, S, P)
+    dtt = dt.transpose(0, 2, 1)  # (B, H, S)
+    bt = b_mat.transpose(0, 2, 1, 3)  # (B, G, S, N)
+    ct = c_mat.transpose(0, 2, 1, 3)
+
+    kernel = functools.partial(_kernel, chunk=chunk)
+    y, final_state = pl.pallas_call(
+        kernel,
+        grid=(bsz, h, nc),
+        in_specs=[
+            pl.BlockSpec((1, 1, chunk, p), lambda bi, hi, ci: (bi, hi, ci, 0)),
+            pl.BlockSpec((1, 1, chunk), lambda bi, hi, ci: (bi, hi, ci)),
+            pl.BlockSpec((1,), lambda bi, hi, ci: (hi,)),
+            pl.BlockSpec(
+                (1, 1, chunk, n), lambda bi, hi, ci, rep=rep: (bi, hi // rep, ci, 0)
+            ),
+            pl.BlockSpec(
+                (1, 1, chunk, n), lambda bi, hi, ci, rep=rep: (bi, hi // rep, ci, 0)
+            ),
+        ],
+        out_specs=[
+            pl.BlockSpec((1, 1, chunk, p), lambda bi, hi, ci: (bi, hi, ci, 0)),
+            pl.BlockSpec((1, 1, p, n), lambda bi, hi, ci: (bi, hi, 0, 0)),
+        ],
+        out_shape=[
+            jax.ShapeDtypeStruct((bsz, h, s, p), x.dtype),
+            jax.ShapeDtypeStruct((bsz, h, p, n), x.dtype),
+        ],
+        scratch_shapes=[pltpu.VMEM((p, n), jnp.float32)],
+        interpret=interpret,
+    )(xt, dtt, a, bt, ct)
+    return y.transpose(0, 2, 1, 3), final_state

@@ -1,0 +1,101 @@
+"""Training driver.
+
+    PYTHONPATH=src python -m repro.launch.train --arch falcon-demo-100m \
+        --steps 50 --seq-len 256 --global-batch 32 [--no-falcon] \
+        [--inject gpu:3:0.5:100:600] [--smoke]
+
+``--inject kind:target:severity:start:duration`` adds a fail-slow to the
+attached cluster performance model (kind: gpu|cpu|link).
+"""
+from __future__ import annotations
+
+import argparse
+
+from repro.cluster.injector import FailSlowInjector, Injection, InjectionKind
+from repro.cluster.simulator import JobSpec, TrainingSimulator
+from repro.cluster.spec import ClusterSpec, ModelSpec
+from repro.configs.base import get_config
+from repro.data.pipeline import DataConfig
+from repro.optim.adamw import AdamWConfig
+from repro.train.trainer import FalconTrainer
+
+KIND = {
+    "gpu": InjectionKind.GPU_SLOW,
+    "cpu": InjectionKind.CPU_CONTENTION,
+    "link": InjectionKind.LINK_CONGESTION,
+}
+
+
+def parse_injection(text: str) -> Injection:
+    kind, target, severity, start, duration = text.split(":")
+    tgt = tuple(int(x) for x in target.split("-"))
+    return Injection(
+        start=float(start),
+        duration=float(duration),
+        kind=KIND[kind],
+        target=tgt,
+        severity=float(severity),
+    )
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default="falcon-demo-100m")
+    ap.add_argument("--smoke", action="store_true", help="use the reduced config")
+    ap.add_argument("--steps", type=int, default=50)
+    ap.add_argument("--seq-len", type=int, default=256)
+    ap.add_argument("--global-batch", type=int, default=32)
+    ap.add_argument("--slots", type=int, default=4)
+    ap.add_argument("--dp-groups", type=int, default=4)
+    ap.add_argument("--no-falcon", action="store_true")
+    ap.add_argument("--inject", action="append", default=[])
+    ap.add_argument("--sim-nodes", type=int, default=2)
+    args = ap.parse_args()
+
+    cfg = get_config(args.arch)
+    if args.smoke:
+        cfg = cfg.smoke()
+    data = DataConfig(
+        seq_len=args.seq_len,
+        global_batch=args.global_batch,
+        slots=args.slots,
+        dp_groups=args.dp_groups,
+    )
+
+    sim = TrainingSimulator(
+        cluster=ClusterSpec(n_nodes=args.sim_nodes, gpus_per_node=4),
+        job=JobSpec(
+            model=ModelSpec(
+                layers=cfg.num_layers,
+                hidden=max(cfg.d_model, 1024),
+                seq_len=args.seq_len,
+                vocab=cfg.vocab_size,
+            ),
+            tp=2,
+            dp=args.dp_groups,
+            pp=1,
+            micro_batches=args.slots * args.dp_groups,
+        ),
+    )
+    injector = FailSlowInjector([parse_injection(t) for t in args.inject])
+
+    trainer = FalconTrainer(
+        cfg=cfg,
+        data=data,
+        opt_cfg=AdamWConfig(total_steps=args.steps),
+        perf_model=sim,
+        injector=injector,
+        falcon_enabled=not args.no_falcon,
+    )
+    history = trainer.run(args.steps)
+    print("step,loss,iter_time,wall_time,strategy")
+    for r in history:
+        print(f"{r.step},{r.loss:.4f},{r.iter_time:.3f},{r.wall_time:.1f},{r.strategy or ''}")
+    healthy = min(r.iter_time for r in history)
+    mean = sum(r.iter_time for r in history) / len(history)
+    print(f"# mean iter {mean:.3f}s vs healthy {healthy:.3f}s "
+          f"(slowdown {mean / healthy:.2f}x)")
+
+
+if __name__ == "__main__":
+    main()

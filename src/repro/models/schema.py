@@ -1,0 +1,112 @@
+"""Parameter schema: one source of truth for shapes, init AND sharding.
+
+Every layer module contributes ``{name: ParamDef}`` entries; ``init_tree``
+materializes arrays and ``spec_tree`` produces the matching PartitionSpec
+pytree, so parameter layout and distribution can never drift apart.
+
+Logical sharding axes used in specs (resolved against the mesh later by
+``repro.sharding.partition.resolve_specs``):
+  * "model"  — tensor/expert-parallel axis; sharded only if divisible,
+  * None     — replicated.
+"""
+from __future__ import annotations
+
+import math
+from dataclasses import dataclass, field
+
+import jax
+import jax.numpy as jnp
+
+
+@dataclass(frozen=True)
+class ParamDef:
+    shape: tuple[int, ...]
+    #: logical partition axes, one per dim (None or "model")
+    axes: tuple[str | None, ...]
+    init: str = "normal"  # normal | zeros | ones
+    scale: float = 0.02
+    dtype: str = "bfloat16"
+
+    def __post_init__(self) -> None:
+        assert len(self.shape) == len(self.axes), (self.shape, self.axes)
+
+
+Schema = dict[str, "ParamDef | dict"]
+
+
+def init_leaf(defn: ParamDef, key: jax.Array) -> jax.Array:
+    dt = jnp.dtype(defn.dtype)
+    if defn.init == "zeros":
+        return jnp.zeros(defn.shape, dt)
+    if defn.init == "ones":
+        return jnp.ones(defn.shape, dt)
+    return (defn.scale * jax.random.normal(key, defn.shape, jnp.float32)).astype(dt)
+
+
+def init_tree(schema: Schema, key: jax.Array, _path: str = "") -> dict:
+    """Materialize a parameter pytree from a schema (deterministic per path)."""
+    out: dict = {}
+    for name, sub in sorted(schema.items()):
+        path = f"{_path}/{name}"
+        if isinstance(sub, dict):
+            out[name] = init_tree(sub, key, path)
+        else:
+            leaf_key = jax.random.fold_in(key, _stable_hash(path))
+            out[name] = init_leaf(sub, leaf_key)
+    return out
+
+
+def shape_tree(schema: Schema) -> dict:
+    """ShapeDtypeStruct pytree (for eval_shape-free dry-runs)."""
+    out: dict = {}
+    for name, sub in schema.items():
+        if isinstance(sub, dict):
+            out[name] = shape_tree(sub)
+        else:
+            out[name] = jax.ShapeDtypeStruct(sub.shape, jnp.dtype(sub.dtype))
+    return out
+
+
+def axes_tree(schema: Schema) -> dict:
+    """Logical-axes pytree matching the parameter pytree structure."""
+    out: dict = {}
+    for name, sub in schema.items():
+        if isinstance(sub, dict):
+            out[name] = axes_tree(sub)
+        else:
+            out[name] = sub.axes
+    return out
+
+
+def stack(schema: Schema, n: int) -> Schema:
+    """Prefix every leaf with a stacking dim (scan-over-periods layout)."""
+    out: Schema = {}
+    for name, sub in schema.items():
+        if isinstance(sub, dict):
+            out[name] = stack(sub, n)
+        else:
+            out[name] = ParamDef(
+                shape=(n, *sub.shape),
+                axes=(None, *sub.axes),
+                init=sub.init,
+                scale=sub.scale,
+                dtype=sub.dtype,
+            )
+    return out
+
+
+def count_params(schema: Schema) -> int:
+    total = 0
+    for sub in schema.values():
+        if isinstance(sub, dict):
+            total += count_params(sub)
+        else:
+            total += math.prod(sub.shape)
+    return total
+
+
+def _stable_hash(s: str) -> int:
+    h = 2166136261
+    for ch in s.encode():
+        h = (h ^ ch) * 16777619 % (1 << 31)
+    return h

@@ -1,0 +1,191 @@
+"""Decoder stack assembly: scan over repeating periods of sub-layers.
+
+Heterogeneous architectures (jamba's 1-attention:7-mamba interleave with
+alternating MoE) are expressed as a *period* — a fixed tuple of sub-layers —
+and the full stack is `lax.scan` over ``n_periods`` with parameters stacked
+on a leading axis. This keeps the lowered HLO small (one period body) even
+for 80-layer models, which matters for 512-device dry-run compile times.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ArchConfig, SubLayer
+from repro.models import attention, layers, moe, ssm
+from repro.models.schema import Schema, stack
+
+
+def period_schema(cfg: ArchConfig) -> Schema:
+    out: Schema = {}
+    for j, sub in enumerate(cfg.period):
+        entry: Schema = {}
+        if sub.mixer == "attn":
+            entry["attn"] = attention.attn_schema(cfg)
+        else:
+            entry["mamba"] = ssm.mamba_schema(cfg)
+        if sub.mlp == "mlp":
+            entry["mlp"] = layers.mlp_schema(cfg)
+        elif sub.mlp == "moe":
+            entry["moe"] = moe.moe_schema(cfg)
+        out[f"sub{j}"] = entry
+    return out
+
+
+def blocks_schema(cfg: ArchConfig) -> Schema:
+    return stack(period_schema(cfg), cfg.n_periods)
+
+
+def _apply_sublayer(
+    x: jax.Array,
+    p: dict,
+    sub: SubLayer,
+    cfg: ArchConfig,
+    positions: jax.Array | None,
+    window: int,
+    use_kernel: bool,
+) -> tuple[jax.Array, jax.Array]:
+    """Residual sub-layer application. Returns (x, aux_loss)."""
+    aux = jnp.zeros((), jnp.float32)
+    if sub.mixer == "attn":
+        x = x + attention.apply_attention(
+            p["attn"], x, cfg, positions, window=window, use_kernel=use_kernel
+        )
+    else:
+        x = x + ssm.apply_mamba(p["mamba"], x, cfg, use_kernel=use_kernel)
+    if sub.mlp == "mlp":
+        x = x + layers.apply_mlp(p["mlp"], x, cfg)
+    elif sub.mlp == "moe":
+        y, aux = moe.apply_moe(p["moe"], x, cfg)
+        x = x + y
+    return x, aux
+
+
+def apply_blocks(
+    blocks: dict,
+    x: jax.Array,
+    cfg: ArchConfig,
+    positions: jax.Array | None,
+    *,
+    window: int = 0,
+    use_kernel: bool = False,
+    remat: bool = True,
+) -> tuple[jax.Array, jax.Array]:
+    """Run the full stack. Returns (hidden (B,S,D), total aux loss)."""
+
+    def period_body(carry, period_params):
+        h, aux_sum = carry
+        for j, sub in enumerate(cfg.period):
+            h, aux = _apply_sublayer(
+                h, period_params[f"sub{j}"], sub, cfg, positions, window, use_kernel
+            )
+            aux_sum = aux_sum + aux
+        return (h, aux_sum), None
+
+    if remat:
+        # Save matmul outputs across the remat boundary (they're what the
+        # backward pass actually needs); recompute only the cheap
+        # elementwise/norm chains. Full-recompute remat costs ~25-30 % extra
+        # FLOPs, and train_4k peaks far below HBM — memory is the cheaper
+        # currency here (EXPERIMENTS §Perf, granite-3-8b iteration 1).
+        body = jax.checkpoint(
+            period_body,
+            policy=jax.checkpoint_policies.dots_with_no_batch_dims_saveable,
+        )
+    else:
+        body = period_body
+    (x, aux_total), _ = jax.lax.scan(body, (x, jnp.zeros((), jnp.float32)), blocks)
+    return x, aux_total
+
+
+# ----------------------------------------------------------------- decode
+def init_caches(cfg: ArchConfig, batch: int, max_len: int) -> dict:
+    out: dict = {}
+    for j, sub in enumerate(cfg.period):
+        if sub.mixer == "attn":
+            c = attention.init_kv_cache(cfg, batch, max_len)
+        else:
+            c = ssm.init_ssm_cache(cfg, batch)
+        out[f"sub{j}"] = jax.tree.map(
+            lambda leaf: jnp.broadcast_to(leaf, (cfg.n_periods, *leaf.shape)), c
+        )
+    return out
+
+
+def grow_caches(caches: dict, cfg: ArchConfig, max_len: int) -> dict:
+    """Pad prefill-produced KV caches out to the serving context length.
+
+    Prefill returns caches sized to the prompt; decode writes into a fixed
+    ``max_len`` buffer indexed by ``pos``. SSM caches are O(1) in context
+    length and pass through unchanged.
+    """
+    out: dict = {}
+    for j, sub in enumerate(cfg.period):
+        key = f"sub{j}"
+        c = caches[key]
+        if sub.mixer == "attn":
+            pad = max_len - c["k"].shape[2]  # (periods, B, S, kv, hd)
+            widths = [(0, 0), (0, 0), (0, max(pad, 0)), (0, 0), (0, 0)]
+            c = {
+                "k": jnp.pad(c["k"], widths),
+                "v": jnp.pad(c["v"], widths),
+            }
+        out[key] = c
+    return out
+
+
+def cache_shapes(cfg: ArchConfig, batch: int, max_len: int) -> dict:
+    out: dict = {}
+    for j, sub in enumerate(cfg.period):
+        if sub.mixer == "attn":
+            c = attention.kv_cache_shape(cfg, batch, max_len)
+        else:
+            c = ssm.ssm_cache_shape(cfg, batch)
+        out[f"sub{j}"] = jax.tree.map(
+            lambda leaf: jax.ShapeDtypeStruct(
+                (cfg.n_periods, *leaf.shape), leaf.dtype
+            ),
+            c,
+        )
+    return out
+
+
+def decode_blocks(
+    blocks: dict,
+    x: jax.Array,
+    caches: dict,
+    pos: jax.Array,
+    cfg: ArchConfig,
+    *,
+    window: int = 0,
+    use_kernel: bool = False,
+) -> tuple[jax.Array, dict]:
+    """One-token decode through the stack. Returns (hidden, new caches)."""
+
+    def period_body(h, scanned):
+        period_params, cache = scanned
+        new_cache = {}
+        for j, sub in enumerate(cfg.period):
+            key = f"sub{j}"
+            if sub.mixer == "attn":
+                dh, nc = attention.decode_attention(
+                    period_params[key]["attn"], h, cache[key], pos, cfg,
+                    window=window, use_kernel=use_kernel,
+                )
+            else:
+                dh, nc = ssm.decode_mamba(
+                    period_params[key]["mamba"], h, cache[key], cfg
+                )
+            h = h + dh
+            new_cache[key] = nc
+            if sub.mlp == "mlp":
+                h = h + layers.apply_mlp(period_params[key]["mlp"], h, cfg)
+            elif sub.mlp == "moe":
+                y, _ = moe.apply_moe(period_params[key]["moe"], h, cfg)
+                h = h + y
+        return h, new_cache
+
+    x, new_caches = jax.lax.scan(period_body, x, (blocks, caches))
+    return x, new_caches

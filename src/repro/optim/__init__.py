@@ -1,0 +1,1 @@
+"""From-scratch optimizers (no optax in this environment)."""

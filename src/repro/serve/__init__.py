@@ -1,0 +1,1 @@
+"""Serving runtime: prefill and single-token decode steps."""

@@ -1,0 +1,1 @@
+"""Sharding rules: logical parameter axes -> mesh PartitionSpecs."""

@@ -1,0 +1,222 @@
+"""Resolve logical parameter/activation axes against a concrete mesh.
+
+Safety rule: a dimension is sharded on a mesh axis only when its size is
+divisible by that axis — otherwise it is replicated (the Megatron-standard
+fallback, e.g. KV projections with kv_heads < TP degree). This keeps every
+(architecture x mesh) combination lowerable without per-arch exceptions.
+"""
+from __future__ import annotations
+
+import jax
+import numpy as np
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+from repro.configs.base import ArchConfig
+
+
+def mesh_axis_size(mesh: Mesh, axis: str | tuple[str, ...]) -> int:
+    if isinstance(axis, str):
+        return mesh.shape[axis] if axis in mesh.shape else 1
+    size = 1
+    for a in axis:
+        size *= mesh.shape[a] if a in mesh.shape else 1
+    return size
+
+
+def batch_axes(mesh: Mesh) -> tuple[str, ...]:
+    """The data-parallel mesh axes: ("pod", "data") when a pod axis exists."""
+    return ("pod", "data") if "pod" in mesh.shape else ("data",)
+
+
+def resolve_leaf_spec(
+    shape: tuple[int, ...],
+    axes: tuple[str | None, ...],
+    mesh: Mesh,
+) -> P:
+    out: list = []
+    for dim, ax in zip(shape, axes, strict=True):
+        if ax is None:
+            out.append(None)
+        else:
+            size = mesh_axis_size(mesh, ax)
+            out.append(ax if size > 1 and dim % size == 0 else None)
+    return P(*out)
+
+
+def schema_specs(schema: dict, mesh: Mesh) -> dict:
+    """Pytree of PartitionSpec resolved from a parameter Schema."""
+    out: dict = {}
+    for name, sub in schema.items():
+        if isinstance(sub, dict):
+            out[name] = schema_specs(sub, mesh)
+        else:
+            out[name] = resolve_leaf_spec(sub.shape, sub.axes, mesh)
+    return out
+
+
+def param_specs(cfg: ArchConfig, mesh: Mesh) -> dict:
+    from repro.models.model import model_schema
+
+    return schema_specs(model_schema(cfg), mesh)
+
+
+def fsdp_param_specs(cfg: ArchConfig, mesh: Mesh, min_dim: int = 2048) -> dict:
+    """Param specs with additional FSDP-style sharding over the DP axes.
+
+    For models whose model-axis shard alone exceeds HBM (jamba-1.5's 398B:
+    49.75 GB per device at 16-way TP), each large parameter also shards one
+    unsharded dimension over ("pod","data"); XLA all-gathers the weights at
+    use, and the per-period `lax.scan` keeps only one period's gathered
+    weights live. Small tensors (norms, biases, dims < ``min_dim``) stay
+    replicated — gathering them wouldn't pay for the latency.
+    """
+    from repro.models.model import model_schema
+
+    ba = batch_axes(mesh)
+    dsize = mesh_axis_size(mesh, ba)
+
+    def widen(schema: dict) -> dict:
+        out: dict = {}
+        for name, sub in schema.items():
+            if isinstance(sub, dict):
+                out[name] = widen(sub)
+                continue
+            spec = list(resolve_leaf_spec(sub.shape, sub.axes, mesh))
+            # Pick the largest still-unsharded dim divisible by the DP size.
+            # 1-D params (norm scales, biases) stay replicated: kilobytes of
+            # residency saved would not pay for a per-use gather.
+            cands = [
+                (dim, i)
+                for i, (dim, s) in enumerate(zip(sub.shape, spec))
+                if len(sub.shape) >= 2
+                and s is None and dim % dsize == 0 and dim >= min_dim
+            ]
+            if cands:
+                _, i = max(cands)
+                spec[i] = ba if len(ba) > 1 else ba[0]
+            out[name] = P(*spec)
+        return out
+
+    return widen(model_schema(cfg))
+
+
+def named(specs: dict, mesh: Mesh) -> dict:
+    return jax.tree.map(
+        lambda s: NamedSharding(mesh, s),
+        specs,
+        is_leaf=lambda x: isinstance(x, P),
+    )
+
+
+# ---------------------------------------------------------- batch specs
+def train_batch_specs(cfg: ArchConfig, mesh: Mesh) -> dict:
+    """Specs for the (slots, global_mb, S[, ...]) training batch layout.
+
+    dim 1 (the per-slot global micro-batch of sequences) is sharded across
+    the DP axes; everything else is replicated.
+    """
+    ba = batch_axes(mesh)
+    if cfg.modality == "vision_embeds":
+        return {
+            "embeds": P(None, ba, None, None),
+            "positions": P(None, ba, None),  # (3, B, S)
+            "labels": P(None, ba, None),
+        }
+    if cfg.modality == "audio_codes":
+        return {
+            "tokens": P(None, ba, None, None),
+            "labels": P(None, ba, None, None),
+        }
+    return {"tokens": P(None, ba, None), "labels": P(None, ba, None)}
+
+
+def serve_batch_specs(cfg: ArchConfig, mesh: Mesh, batch: int) -> dict:
+    """Specs for a (B, S[, ...]) prefill/decode request batch; if B doesn't
+    divide the DP axes (long_500k has B=1) the batch dim is replicated and
+    the *sequence* gets the sharding (sequence-parallel serving)."""
+    ba = batch_axes(mesh)
+    dp = mesh_axis_size(mesh, ba)
+    bdim = ba if batch % dp == 0 else None
+    sdim = None if bdim is not None else ba
+    if cfg.modality == "vision_embeds":
+        return {
+            "embeds": P(bdim, sdim, None),
+            "positions": P(None, bdim, sdim),
+        }
+    if cfg.modality == "audio_codes":
+        return {"tokens": P(bdim, sdim, None)}
+    return {"tokens": P(bdim, sdim)}
+
+
+def decode_token_specs(cfg: ArchConfig, mesh: Mesh, batch: int) -> P:
+    """Spec for the (B, 1[, ...]) decode token: batch over DP if divisible,
+    otherwise fully replicated (the cache carries the sharding instead)."""
+    ba = batch_axes(mesh)
+    dp = mesh_axis_size(mesh, ba)
+    bdim = ba if batch % dp == 0 else None
+    if cfg.modality == "vision_embeds":
+        return P(bdim, None, None)
+    if cfg.modality == "audio_codes":
+        return P(bdim, None, None)
+    return P(bdim, None)
+
+
+def cache_specs(
+    cfg: ArchConfig, mesh: Mesh, batch: int, *, seq_shard: bool = True
+) -> dict:
+    """Specs for the decode caches (leading n_periods stack dim).
+
+    Attention KV caches: (L, B, S, KV, hd) — batch over DP axes when it
+    divides, otherwise the *sequence* dim is sharded (the long_500k
+    flash-decode layout); KV heads over the model axis when divisible.
+
+    ``seq_shard`` (beyond-paper, EXPERIMENTS §Perf iteration 1): when the KV
+    heads do NOT divide the model axis (GQA kv=1/4/8 under 16-way TP), the
+    baseline replicates the whole cache across the model axis — 16x the HBM.
+    Instead we shard the cache *sequence* over the model axis (flash-decode:
+    each shard attends to its slice, partial softmax combined by GSPMD).
+    SSM caches: (L, B, H, P, N) — heads over model.
+    """
+    from repro.models import transformer
+
+    ba = batch_axes(mesh)
+    dp = mesh_axis_size(mesh, ba)
+    tp = mesh_axis_size(mesh, "model")
+    bdim = ba if batch % dp == 0 else None
+    sdim = None if bdim is not None else ba
+
+    out: dict = {}
+    for j, sub in enumerate(cfg.period):
+        if sub.mixer == "attn":
+            kvdim = "model" if cfg.num_kv_heads % tp == 0 and tp > 1 else None
+            kv_sdim = sdim
+            if seq_shard and kvdim is None and tp > 1:
+                # Fold the model axis onto the cache sequence dim.
+                kv_sdim = (
+                    (*sdim, "model") if isinstance(sdim, tuple)
+                    else ((sdim, "model") if sdim else "model")
+                )
+            spec = {
+                "k": P(None, bdim, kv_sdim, kvdim, None),
+                "v": P(None, bdim, kv_sdim, kvdim, None),
+            }
+        else:
+            hdim = "model" if cfg.ssm_heads % tp == 0 and tp > 1 else None
+            spec = {
+                "state": P(None, bdim, hdim, None, None),
+                "conv_x": P(None, bdim, None, "model" if cfg.ssm_inner % tp == 0 and tp > 1 else None),
+                "conv_bc": P(None, bdim, None, None),
+            }
+        out[f"sub{j}"] = spec
+    return out
+
+
+def logits_spec(cfg: ArchConfig, mesh: Mesh, batch: int) -> P:
+    ba = batch_axes(mesh)
+    dp = mesh_axis_size(mesh, ba)
+    tp = mesh_axis_size(mesh, "model")
+    vdim = "model" if cfg.padded_vocab % tp == 0 and tp > 1 else None
+    bdim = ba if batch % dp == 0 else None
+    if cfg.modality == "audio_codes":
+        return P(bdim, None, None, vdim)
+    return P(bdim, None, vdim)

@@ -1,0 +1,1 @@
+"""Training runtime: microbatched train step, trainer loop, checkpointing."""

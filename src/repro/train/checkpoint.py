@@ -1,0 +1,89 @@
+"""Checkpointing: in-memory (the paper's fast 'M' variant used by topology
+adjustment) and disk ('D' baseline, used by S4 checkpoint-and-restart).
+
+Pytrees are flattened to path-keyed arrays; disk format is a single .npz.
+"""
+from __future__ import annotations
+
+import os
+import time
+from dataclasses import dataclass, field
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+
+def _flatten(tree) -> dict[str, np.ndarray]:
+    flat = {}
+    for path, leaf in jax.tree_util.tree_flatten_with_path(tree)[0]:
+        key = "/".join(str(getattr(p, "key", getattr(p, "idx", p))) for p in path)
+        arr = np.asarray(leaf)
+        if arr.dtype == jnp.bfloat16:
+            # npz has no bfloat16: store the raw bits (restore casts back
+            # using the target pytree's leaf dtype).
+            arr = arr.view(np.uint16)
+            key += "::bf16"
+        flat[key] = arr
+    return flat
+
+
+@dataclass
+class CheckpointManager:
+    directory: str
+
+    _memory: dict | None = field(init=False, default=None)
+    last_save_time: float = field(init=False, default=0.0)
+    last_restore_time: float = field(init=False, default=0.0)
+
+    def __post_init__(self) -> None:
+        os.makedirs(self.directory, exist_ok=True)
+
+    # ---- memory (paper's M: dump params into host memory, swap via RDMA)
+    def save_memory(self, tree) -> float:
+        t0 = time.monotonic()
+        self._memory = jax.tree.map(lambda x: np.asarray(x), tree)
+        self.last_save_time = time.monotonic() - t0
+        return self.last_save_time
+
+    def restore_memory(self, like=None) -> dict:
+        assert self._memory is not None, "no in-memory checkpoint"
+        t0 = time.monotonic()
+        out = jax.tree.map(jnp.asarray, self._memory)
+        self.last_restore_time = time.monotonic() - t0
+        return out
+
+    # ---- disk (baseline D)
+    def path(self, step: int) -> str:
+        return os.path.join(self.directory, f"ckpt_{step:08d}.npz")
+
+    def save_disk(self, tree, step: int) -> float:
+        t0 = time.monotonic()
+        np.savez(self.path(step), **_flatten(tree))
+        self.last_save_time = time.monotonic() - t0
+        return self.last_save_time
+
+    def restore_disk(self, like, step: int) -> dict:
+        t0 = time.monotonic()
+        with np.load(self.path(step)) as data:
+            flat = dict(data)
+        leaves_with_path, treedef = jax.tree_util.tree_flatten_with_path(like)
+        out_leaves = []
+        for path, leaf in leaves_with_path:
+            key = "/".join(str(getattr(p, "key", getattr(p, "idx", p))) for p in path)
+            if key + "::bf16" in flat:
+                raw = flat[key + "::bf16"].view(jnp.bfloat16)
+                arr = jnp.asarray(raw).astype(leaf.dtype)
+            else:
+                arr = jnp.asarray(flat[key]).astype(leaf.dtype)
+            out_leaves.append(arr)
+        self.last_restore_time = time.monotonic() - t0
+        return jax.tree_util.tree_unflatten(treedef, out_leaves)
+
+    def latest_step(self) -> int | None:
+        steps = [
+            int(f[5:13])
+            for f in os.listdir(self.directory)
+            if f.startswith("ckpt_") and f.endswith(".npz")
+        ]
+        return max(steps) if steps else None

@@ -1,0 +1,258 @@
+"""Training loop with FALCON integrated as a first-class runtime feature.
+
+The trainer executes *real* JAX training steps (params genuinely update) and
+feeds FALCON an iteration-time signal. On real hardware that signal is the
+measured step time; on this CPU container, fail-slows are modeled by an
+attached :class:`TrainingSimulator` + :class:`FailSlowInjector` (the same
+cluster performance model used in the paper-reproduction benchmarks), so
+detection and mitigation operate on honest dynamics while the numerics stay
+real. DESIGN.md §2 documents this split.
+
+Mitigation wiring:
+  * S1 ignore            -> bookkeeping only.
+  * S2 micro-batch       -> ``core.microbatch.solve_allocation`` from the
+    profiled per-group speeds; applied to the adaptive train step's trip
+    counts AND to the simulator.
+  * S3 topology          -> ``core.topology.plan_topology_adjustment`` /
+    ``consolidate_stragglers``; applied to the simulator placement; the
+    runtime analogue (mesh device permutation + state re-put) is exposed as
+    ``remap_mesh`` for multi-device runs.
+  * S4 ckpt-and-restart  -> in-memory checkpoint restore + simulator restart,
+    charging the measured restore overhead.
+"""
+from __future__ import annotations
+
+import time
+from dataclasses import dataclass, field
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.cluster.injector import FailSlowInjector
+from repro.cluster.simulator import TrainingSimulator
+from repro.configs.base import ArchConfig
+from repro.core import microbatch as mb_lib
+from repro.core import topology as topo_lib
+from repro.core.detector import FalconDetect
+from repro.core.events import CommOp, RootCause, Strategy
+from repro.core.monitor import Monitor
+from repro.core.planner import DEFAULT_OVERHEADS, MitigationPlanner
+from repro.data.pipeline import DataConfig, make_batch
+from repro.models import model as model_lib
+from repro.optim import adamw
+from repro.train import train_step as ts_lib
+from repro.train.checkpoint import CheckpointManager
+
+
+@dataclass
+class StepRecord:
+    step: int
+    loss: float
+    iter_time: float
+    wall_time: float
+    strategy: str | None = None
+
+
+@dataclass
+class FalconTrainer:
+    cfg: ArchConfig
+    data: DataConfig
+    opt_cfg: adamw.AdamWConfig = field(default_factory=adamw.AdamWConfig)
+    #: cluster performance model supplying iteration times (+ fail-slows)
+    perf_model: TrainingSimulator | None = None
+    injector: FailSlowInjector | None = None
+    falcon_enabled: bool = True
+    overheads: dict = field(default_factory=lambda: dict(DEFAULT_OVERHEADS))
+    ckpt_dir: str = "/tmp/repro_ckpt"
+    seed: int = 0
+
+    params: dict = field(init=False)
+    opt_state: adamw.AdamWState = field(init=False)
+    monitor: Monitor = field(init=False)
+    detector: FalconDetect | None = field(init=False, default=None)
+    planner: MitigationPlanner | None = field(init=False, default=None)
+    history: list[StepRecord] = field(init=False, default_factory=list)
+    allocation: list[int] = field(init=False)
+    _wall: float = field(init=False, default=0.0)
+
+    def __post_init__(self) -> None:
+        self.params = model_lib.init_params(self.cfg, self.seed)
+        self.opt_state = adamw.init(self.params)
+        self.monitor = Monitor()
+        self.ckpt = CheckpointManager(self.ckpt_dir)
+        self.allocation = [self.data.slots] * self.data.dp_groups
+        if self.perf_model is not None:
+            self.detector = FalconDetect(cluster=self.perf_model, verify_window=8)
+        self._step_fn = jax.jit(
+            ts_lib.make_train_step(self.cfg, self.opt_cfg)
+        )
+
+    # ------------------------------------------------------------------
+    def _observed_iter_time(self, measured: float, now: float) -> float:
+        if self.perf_model is None:
+            return measured
+        if self.injector is not None:
+            self.injector.apply(self.perf_model.state, now)
+        return self.perf_model.iteration_time()
+
+    def _apply_strategy(self, strategy: Strategy, event) -> None:
+        sim = self.perf_model
+        if strategy is Strategy.IGNORE or sim is None:
+            return
+        if strategy is Strategy.ADJUST_MICROBATCH:
+            times = sim.per_microbatch_times()
+            counts = mb_lib.solve_allocation(
+                times, sim.job.micro_batches, offset=sim.job.pp - 1
+            )
+            sim.set_allocation(counts)
+            if len(counts) == self.data.dp_groups:
+                self.allocation = list(counts)
+        elif strategy is Strategy.ADJUST_TOPOLOGY:
+            self._adjust_topology(event)
+        elif strategy is Strategy.CKPT_AND_RESTART:
+            # In-memory checkpoint restore (fast path, Fig. 19 'M').
+            self.ckpt.save_memory(self.params)
+            self.params = self.ckpt.restore_memory()
+            sim.restart()
+            if self.injector is not None:
+                # Restart lands on healthy nodes: clear active injections.
+                self.injector.injections = [
+                    i for i in self.injector.injections if not i.active(self._wall)
+                ]
+            self.allocation = [self.data.slots] * self.data.dp_groups
+
+    def _rebalance(self) -> None:
+        """Post-relief: recompute the micro-batch split from the (now
+        healthy) profile so a skewed S2 allocation doesn't outlive the
+        fail-slow it compensated for."""
+        sim = self.perf_model
+        if sim is None:
+            return
+        counts = mb_lib.solve_allocation(
+            sim.per_microbatch_times(), sim.job.micro_batches,
+            offset=sim.job.pp - 1,
+        )
+        sim.set_allocation(counts)
+        if len(counts) == self.data.dp_groups:
+            self.allocation = list(counts)
+
+    def _adjust_topology(self, event) -> None:
+        """Apply a placement adjustment, keeping it only if the modeled
+        iteration time improves — mitigation effects are re-measured before
+        being committed (a blind consolidation can re-expose a congested
+        link the previous targeted swap had evacuated)."""
+        sim = self.perf_model
+        before_placement = list(sim.placement)
+        before_t = sim.iteration_time()
+        self._plan_and_apply_topology(event)
+        if sim.iteration_time() > before_t * 0.999:
+            sim.placement = before_placement  # revert: no improvement
+
+    def _plan_and_apply_topology(self, event) -> None:
+        sim = self.perf_model
+        job, topo = sim.job, sim.job.topology
+        stragglers = [
+            int(c.split(":")[1]) for c in event.components if c.startswith("gpu:")
+        ]
+        slow_links = [
+            tuple(int(x) for x in c.split(":")[1].split("-"))
+            for c in event.components
+            if c.startswith("link:")
+        ]
+        if stragglers and not slow_links and topo.pp > 1:
+            # Straggler consolidation (Fig. 11): pack the positions hosting
+            # slow devices into the fewest PP stages.
+            pos = [p for p, d in enumerate(sim.placement) if d in set(stragglers)]
+            perm = topo_lib.consolidate_stragglers(pos, topo)
+            sim.apply_placement(perm)
+            return
+        m = job.model
+        traffic = topo_lib.build_traffic_matrix(
+            topo,
+            comm_tp=m.comm_tp_bytes(job.tp, job.pp, job.micro_batches),
+            comm_dp=m.comm_dp_bytes(job.tp, job.pp),
+            comm_pp=m.comm_pp_bytes(job.micro_batches),
+        )
+        n = job.n_devices
+        bw = np.full((n, n), np.inf)
+        for i in range(n):
+            for j in range(n):
+                if i != j:
+                    bw[i, j] = sim.state.link_bw(sim.placement[i], sim.placement[j])
+        if slow_links:
+            # Targeted congestion swap (Fig. 10): FALCON pinpointed the slow
+            # physical links; move their endpoints' traffic elsewhere.
+            slow_pos = [
+                p for p, d in enumerate(sim.placement)
+                if any(d in pair for pair in slow_links)
+            ]
+            perm = topo_lib.plan_targeted_swap(traffic, bw, slow_pos)
+        else:
+            perm = topo_lib.plan_topology_adjustment(traffic, bw)
+        sim.apply_placement(perm)
+
+    # ------------------------------------------------------------------
+    def run(self, num_steps: int) -> list[StepRecord]:
+        for step in range(num_steps):
+            batch = jax.tree.map(
+                jnp.asarray, make_batch(self.cfg, self.data, step)
+            )
+            t0 = time.monotonic()
+            self.params, self.opt_state, metrics = self._step_fn(
+                self.params, self.opt_state, batch
+            )
+            loss = float(metrics["loss"])
+            measured = time.monotonic() - t0
+
+            iter_time = self._observed_iter_time(measured, self._wall)
+            self._wall += iter_time
+            for ev in (
+                self.perf_model.emit_events(self._wall - iter_time, iter_time)
+                if self.perf_model
+                else []
+            ):
+                self.monitor.extend([ev])
+
+            strategy_applied: str | None = None
+            if self.falcon_enabled and self.detector is not None:
+                had_active = self.detector.active_event is not None
+                new_event = self.detector.observe(iter_time, self._wall)
+                if new_event is not None:
+                    self.planner = MitigationPlanner(new_event, dict(self.overheads))
+                active = self.detector.active_event
+                if active is None:
+                    if had_active:
+                        # Relief: re-balance micro-batches for the recovered
+                        # cluster (S2 with a healthy profile = even split).
+                        self._rebalance()
+                        strategy_applied = "REBALANCE"
+                    self.planner = None
+                elif self.planner is not None:
+                    s = self.planner.update(current_time=iter_time)
+                    if s is not None:
+                        self._apply_strategy(s, active)
+                        self._wall += self.overheads.get(s, 0.0)
+                        strategy_applied = s.name
+
+            self.history.append(
+                StepRecord(
+                    step=step,
+                    loss=loss,
+                    iter_time=iter_time,
+                    wall_time=self._wall,
+                    strategy=strategy_applied,
+                )
+            )
+        return self.history
+
+
+# ---------------------------------------------------------------- S3 util
+def remap_mesh(mesh, perm: list[int]):
+    """Runtime analogue of the paper's node swap: rebuild the mesh with a
+    permuted device order (state must be re-`device_put` by the caller)."""
+    import numpy as _np
+    from jax.sharding import Mesh
+
+    devs = _np.asarray(mesh.devices).reshape(-1)[_np.asarray(perm)]
+    return Mesh(devs.reshape(mesh.devices.shape), mesh.axis_names)

@@ -1,0 +1,99 @@
+"""Unit + property tests for ACF period detection (paper §4.2)."""
+import numpy as np
+import pytest
+from hypothesis import given, settings
+from hypothesis import strategies as st
+
+from repro.core import acf
+from repro.core.events import CommEvent, CommOp
+
+
+def make_events(pattern, iter_time, n_iters, jitter=0.0, seed=0):
+    """Events for `n_iters` iterations with `pattern` ops spread over each."""
+    rng = np.random.default_rng(seed)
+    events = []
+    t = 0.0
+    for _ in range(n_iters):
+        for j, op in enumerate(pattern):
+            ts = t + iter_time * (j / len(pattern))
+            if jitter:
+                ts += rng.normal(0.0, jitter)
+            events.append(CommEvent(op=op, timestamp=ts))
+        t += iter_time
+    return events
+
+
+def test_find_period_simple():
+    x = np.array([0, 1, 2, 3] * 20, dtype=float)
+    assert acf.find_period(x) == 4
+
+
+def test_find_period_constant_series():
+    # All-identical ops: trivially periodic at lag 1.
+    x = np.zeros(50)
+    assert acf.find_period(x) == 1
+
+
+def test_find_period_aperiodic():
+    rng = np.random.default_rng(0)
+    x = rng.normal(size=200)
+    p = acf.find_period(x)
+    assert p is None or p > 1  # white noise must not read as period-1
+
+
+def test_iteration_times_from_events_recovers_period_and_time():
+    pattern = [CommOp.REDUCE_SCATTER, CommOp.ALL_GATHER,
+               CommOp.ALL_GATHER, CommOp.ALL_REDUCE]
+    events = make_events(pattern, iter_time=2.5, n_iters=30)
+    times, period = acf.iteration_times_from_events(events)
+    assert period == 4
+    assert times.size > 0
+    np.testing.assert_allclose(times, 2.5, rtol=1e-6)
+
+
+def test_iteration_times_single_op_type():
+    # Pure-DP jobs log only AllReduce; period should be 1 and the timestamps
+    # should give the iteration time directly.
+    events = make_events([CommOp.ALL_REDUCE], iter_time=1.2, n_iters=50)
+    times, period = acf.iteration_times_from_events(events)
+    assert period == 1
+    np.testing.assert_allclose(times, 1.2, rtol=1e-6)
+
+
+def test_iteration_times_with_slowdown_visible():
+    pattern = [CommOp.REDUCE_SCATTER, CommOp.ALL_GATHER, CommOp.ALL_REDUCE]
+    fast = make_events(pattern, 1.0, 20)
+    t0 = fast[-1].timestamp + 1.0
+    slow = [
+        CommEvent(op=ev.op, timestamp=ev.timestamp + t0)
+        for ev in make_events(pattern, 2.0, 20)
+    ]
+    times, period = acf.iteration_times_from_events(fast + slow)
+    assert period == 3
+    assert times[:10].mean() < 1.1
+    assert times[-10:].mean() > 1.8
+
+
+@settings(max_examples=25, deadline=None)
+@given(
+    period=st.integers(min_value=2, max_value=8),
+    n_iters=st.integers(min_value=12, max_value=40),
+    iter_time=st.floats(min_value=0.1, max_value=10.0),
+)
+def test_property_period_recovery(period, n_iters, iter_time):
+    """ACF recovers the injected period for any clean periodic op pattern."""
+    ops = list(CommOp)
+    pattern = [ops[i % len(ops)] for i in range(period)]
+    events = make_events(pattern, iter_time, n_iters)
+    times, found = acf.iteration_times_from_events(events)
+    assert found is not None
+    # The found period must divide into the true period structure: identical
+    # op patterns can alias to a shorter true period; iteration time must
+    # still be a multiple that reproduces iter_time at the pattern level.
+    assert period % found == 0
+    np.testing.assert_allclose(times, iter_time * found / period, rtol=1e-5)
+
+
+def test_too_few_events():
+    times, period = acf.iteration_times_from_events([])
+    assert times.size == 0 and period is None

@@ -1,0 +1,90 @@
+"""Tests for the S2 micro-batch allocation solver (paper §5.3, Eq. 1)."""
+import itertools
+
+import numpy as np
+import pytest
+from hypothesis import given, settings
+from hypothesis import strategies as st
+
+from repro.core import microbatch as mb
+
+
+def brute_force(times, total):
+    """Exact optimum by enumeration (small instances only)."""
+    d = len(times)
+    best = float("inf")
+    for combo in itertools.product(range(1, total - d + 2), repeat=d):
+        if sum(combo) != total:
+            continue
+        best = min(best, max(m * t for m, t in zip(combo, times)))
+    return best
+
+
+def test_uniform_groups_split_evenly():
+    counts = mb.solve_allocation([1.0, 1.0, 1.0, 1.0], 16)
+    assert counts == [4, 4, 4, 4]
+
+
+def test_slow_group_gets_fewer():
+    # One group 2x slower: it should get about half the micro-batches.
+    counts = mb.solve_allocation([1.0, 1.0, 1.0, 2.0], 16)
+    assert sum(counts) == 16
+    assert counts[3] < min(counts[:3])
+    assert mb.makespan(counts, [1.0, 1.0, 1.0, 2.0]) <= 6.0
+
+
+def test_validation_errors():
+    with pytest.raises(ValueError):
+        mb.solve_allocation([], 4)
+    with pytest.raises(ValueError):
+        mb.solve_allocation([1.0, -1.0], 4)
+    with pytest.raises(ValueError):
+        mb.solve_allocation([1.0, 1.0, 1.0], 2)
+
+
+@settings(max_examples=60, deadline=None)
+@given(
+    times=st.lists(
+        st.floats(min_value=0.1, max_value=5.0), min_size=2, max_size=4
+    ),
+    extra=st.integers(min_value=0, max_value=8),
+)
+def test_property_greedy_is_optimal(times, extra):
+    """Greedy allocation matches the brute-force optimum (Eq. 1)."""
+    total = len(times) + extra
+    counts = mb.solve_allocation(times, total)
+    assert sum(counts) == total
+    assert all(m >= 1 for m in counts)
+    got = mb.makespan(counts, times)
+    want = brute_force(times, total)
+    assert got <= want * (1 + 1e-9)
+
+
+@settings(max_examples=30, deadline=None)
+@given(
+    times=st.lists(
+        st.floats(min_value=0.05, max_value=10.0), min_size=2, max_size=16
+    ),
+)
+def test_property_never_worse_than_even_split(times):
+    total = 4 * len(times)
+    counts, balanced, even = mb.speedup(times, total)
+    assert balanced <= even * (1 + 1e-9)
+
+
+def test_gradient_weights_sum_to_one():
+    w = mb.gradient_weights([3, 5, 4, 4])
+    np.testing.assert_allclose(w.sum(), 1.0)
+    np.testing.assert_allclose(w, np.array([3, 5, 4, 4]) / 16)
+
+
+def test_paper_fig13_style_scenario():
+    """8 DP groups, one severely degraded GPU (3x slower): S2 recovers most
+    of the slowdown, mirroring the up-to-82.9 % reduction in Fig. 13."""
+    times = [1.0] * 7 + [3.0]
+    total = 32
+    counts, balanced, even = mb.speedup(times, total)
+    slowdown_before = even / 4.0 - 1.0  # healthy makespan would be 4.0
+    slowdown_after = balanced / 4.0 - 1.0
+    reduction = 1.0 - slowdown_after / slowdown_before
+    assert reduction > 0.5

@@ -1,0 +1,87 @@
+"""Tests for the ski-rental mitigation planner (paper §5.2, Algorithm 1)."""
+import pytest
+
+from repro.core.events import FailSlowEvent, RootCause, Strategy
+from repro.core.planner import APPLICABLE, MitigationPlanner
+
+
+def make_event(cause=RootCause.GPU_DEGRADATION, t_healthy=1.0, t_slow=2.0):
+    return FailSlowEvent(
+        start_time=0.0, root_cause=cause, t_healthy=t_healthy, t_slow=t_slow
+    )
+
+
+def test_ignore_applied_first():
+    p = MitigationPlanner(make_event())
+    # First degraded iteration: impact 1s > overhead(S1)=0 -> apply S1.
+    assert p.update() == Strategy.IGNORE
+
+
+def test_ski_rental_break_even_escalation():
+    overheads = {
+        Strategy.IGNORE: 0.0,
+        Strategy.ADJUST_MICROBATCH: 10.0,
+        Strategy.ADJUST_TOPOLOGY: 60.0,
+        Strategy.CKPT_AND_RESTART: 600.0,
+    }
+    p = MitigationPlanner(make_event(t_healthy=1.0, t_slow=2.0), overheads)
+    applied = []
+    for _ in range(700):
+        s = p.update()
+        if s:
+            applied.append((p._slow_iters, s))
+    # Escalation exactly when accumulated impact (1 s/iter) crosses overhead.
+    stages = dict((s, it) for it, s in applied)
+    assert stages[Strategy.IGNORE] == 1
+    assert stages[Strategy.ADJUST_MICROBATCH] == 11
+    assert stages[Strategy.ADJUST_TOPOLOGY] == 61
+    assert stages[Strategy.CKPT_AND_RESTART] == 601
+    assert p.exhausted()
+
+
+def test_comm_failslow_skips_s2():
+    """Table 3: S2 has no effect on slow communication."""
+    assert Strategy.ADJUST_MICROBATCH not in APPLICABLE[RootCause.NETWORK_CONGESTION]
+    p = MitigationPlanner(make_event(cause=RootCause.NETWORK_CONGESTION))
+    applied = []
+    for _ in range(10000):
+        s = p.update()
+        if s:
+            applied.append(s)
+    assert Strategy.ADJUST_MICROBATCH not in applied
+    assert applied == [
+        Strategy.IGNORE,
+        Strategy.ADJUST_TOPOLOGY,
+        Strategy.CKPT_AND_RESTART,
+    ]
+
+
+def test_short_event_never_escalates():
+    """A transient blip resolves before the accumulated impact reaches the
+    next overhead — planner must stay at S1 (the whole point of ski-rental)."""
+    ev = make_event(t_healthy=1.0, t_slow=1.5)
+    overheads = {
+        Strategy.IGNORE: 0.0,
+        Strategy.ADJUST_MICROBATCH: 5.0,
+        Strategy.ADJUST_TOPOLOGY: 60.0,
+        Strategy.CKPT_AND_RESTART: 1800.0,
+    }
+    p = MitigationPlanner(ev, overheads)
+    applied = [s for s in (p.update() for _ in range(8)) if s]
+    ev.end_time = 8.0
+    assert p.update() is None
+    assert applied == [Strategy.IGNORE]
+
+
+def test_no_update_after_resolution():
+    ev = make_event()
+    p = MitigationPlanner(ev)
+    p.update()
+    ev.end_time = 1.0
+    assert p.update() is None
+
+
+def test_zero_severity_never_escalates_past_s1():
+    p = MitigationPlanner(make_event(t_healthy=1.0, t_slow=1.0))
+    applied = [s for s in (p.update() for _ in range(1000)) if s]
+    assert applied == []  # impact is 0: not even S1 triggers

@@ -1,0 +1,67 @@
+"""Correctness of the sequence-sharded KV-cache decode (EXPERIMENTS §Perf
+iteration 1): under a (data=2, model=2) mesh with the cache sequence dim
+sharded over the model axis, decode logits must match the single-device
+reference bit-for-bit (GSPMD inserts the partial-softmax collectives; the
+math is unchanged).
+
+Runs in a subprocess because the host device count must be fixed before JAX
+initializes.
+"""
+import os
+import subprocess
+import sys
+
+SCRIPT = r"""
+import os
+os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=4"
+import numpy as np
+import jax, jax.numpy as jnp
+from jax.sharding import NamedSharding, PartitionSpec as P
+
+from repro.configs.base import get_config
+from repro.models import model as model_lib, transformer
+from repro.serve.serve_step import make_decode_step
+from repro.sharding import partition
+
+cfg = get_config("granite-3-8b").smoke()   # GQA kv < model axis
+B, S = 4, 32
+params = model_lib.init_params(cfg, 0)
+caches = transformer.init_caches(cfg, B, S)
+tok = jnp.asarray(np.random.default_rng(0).integers(0, cfg.vocab_size, (B, 1)), jnp.int32)
+pos = jnp.asarray(7, jnp.int32)
+step = make_decode_step(cfg, S)
+
+ref_logits, ref_caches = jax.jit(step)(params, tok, caches, pos)
+
+mesh = jax.make_mesh((2, 2), ("data", "model"))
+with mesh:
+    nshard = lambda t: jax.tree.map(
+        lambda s: NamedSharding(mesh, s), t, is_leaf=lambda x: isinstance(x, P))
+    in_sh = (
+        nshard(partition.param_specs(cfg, mesh)),
+        NamedSharding(mesh, partition.decode_token_specs(cfg, mesh, B)),
+        nshard(partition.cache_specs(cfg, mesh, B, seq_shard=True)),
+        NamedSharding(mesh, P()),
+    )
+    out_logits, out_caches = jax.jit(step, in_shardings=in_sh)(params, tok, caches, pos)
+
+np.testing.assert_allclose(
+    np.asarray(ref_logits, np.float32), np.asarray(out_logits, np.float32),
+    rtol=2e-2, atol=2e-2)
+for a, b in zip(jax.tree.leaves(ref_caches), jax.tree.leaves(out_caches)):
+    np.testing.assert_allclose(
+        np.asarray(a, np.float32), np.asarray(b, np.float32), rtol=2e-2, atol=2e-2)
+print("SHARDED-DECODE-OK")
+"""
+
+
+def test_seq_sharded_cache_decode_matches_reference():
+    env = dict(os.environ)
+    env["PYTHONPATH"] = os.path.join(os.path.dirname(__file__), "..", "src")
+    env.pop("XLA_FLAGS", None)
+    out = subprocess.run(
+        [sys.executable, "-c", SCRIPT], env=env, capture_output=True,
+        text=True, timeout=600,
+    )
+    assert out.returncode == 0, out.stderr[-3000:]
+    assert "SHARDED-DECODE-OK" in out.stdout

@@ -1,0 +1,180 @@
+"""Tests for the cluster performance model + FALCON integration."""
+import numpy as np
+import pytest
+
+from repro.cluster.injector import FailSlowInjector, Injection, InjectionKind
+from repro.cluster.simulator import JobSpec, TrainingSimulator
+from repro.cluster.spec import ClusterSpec, ModelSpec
+from repro.core import microbatch as mb
+from repro.core.detector import FalconDetect, suspicious_groups
+from repro.core.events import RootCause
+
+
+def small_job(tp=2, dp=2, pp=2, micro_batches=8):
+    model = ModelSpec(layers=24, hidden=4096, seq_len=2048, vocab=50257)
+    return JobSpec(model=model, tp=tp, dp=dp, pp=pp, micro_batches=micro_batches)
+
+
+def make_sim(tp=2, dp=2, pp=2, nodes=2, micro_batches=8):
+    return TrainingSimulator(
+        cluster=ClusterSpec(n_nodes=nodes, gpus_per_node=4),
+        job=small_job(tp, dp, pp, micro_batches),
+    )
+
+
+def test_healthy_iteration_time_positive_and_stable():
+    sim = make_sim()
+    t0 = sim.iteration_time()
+    assert t0 > 0
+    assert sim.iteration_time() == pytest.approx(t0)
+    assert sim.healthy_iteration_time() == pytest.approx(t0)
+
+
+def test_gpu_slowdown_increases_iteration_time():
+    sim = make_sim()
+    t0 = sim.iteration_time()
+    sim.state.devices[0].compute_speed = 0.5
+    t1 = sim.iteration_time()
+    assert t1 > t0 * 1.2
+
+
+def test_link_congestion_increases_iteration_time():
+    sim = make_sim(tp=1, dp=4, pp=2, nodes=2)
+    t0 = sim.iteration_time()
+    # Degrade an inter-node link used by the DP ring.
+    a = sim.device_at(0, 0, 0)
+    b = sim.device_at(0, 1, 0)
+    sim.state.degrade_link(a, b, 0.1)
+    t1 = sim.iteration_time()
+    assert t1 > t0
+
+
+def test_cpu_contention_slows_whole_node():
+    sim = make_sim()
+    inj = FailSlowInjector(
+        [
+            Injection(
+                start=0.0, duration=100.0,
+                kind=InjectionKind.CPU_CONTENTION, target=(0,), severity=0.3,
+            )
+        ]
+    )
+    t0 = sim.iteration_time()
+    inj.apply(sim.state, now=10.0)
+    assert sim.iteration_time() > t0
+    # GEMM benchmark must NOT flag the GPUs (paper case study 1).
+    comp = sim.benchmark_compute(list(range(4)))
+    assert max(comp.values()) == pytest.approx(min(comp.values()))
+    inj.apply(sim.state, now=200.0)  # expired
+    assert sim.iteration_time() == pytest.approx(t0)
+
+
+def test_s2_microbatch_rebalance_recovers_throughput():
+    """Fig. 13 mechanics: a slow GPU in one DP group; S2 allocation reduces
+    the iteration time versus the even split."""
+    sim = make_sim(tp=1, dp=4, pp=1, nodes=1, micro_batches=16)
+    sim.state.devices[2].compute_speed = 0.4
+    t_slow = sim.iteration_time()
+    counts = mb.solve_allocation(sim.per_microbatch_times(), 16)
+    sim.set_allocation(counts)
+    t_fixed = sim.iteration_time()
+    assert t_fixed < t_slow
+    t_healthy = sim.healthy_iteration_time()
+    mitigated = (t_slow - t_fixed) / (t_slow - t_healthy)
+    assert mitigated > 0.4  # recovers >40 % of the injected slowdown
+
+
+def test_s3_placement_swap_mitigates_congestion():
+    """Fig. 10 mechanics: congested inter-node link on the DP ring; a
+    placement permutation moving it to PP traffic reduces iteration time."""
+    from repro.core import topology as tp_mod
+
+    sim = make_sim(tp=1, dp=2, pp=4, nodes=2, micro_batches=8)
+    # Find an inter-node DP-ring link and congest it.
+    a = sim.device_at(1, 0, 0)
+    b = sim.device_at(1, 1, 0)
+    sim.state.degrade_link(a, b, 0.05)
+    t_cong = sim.iteration_time()
+
+    topo = sim.job.topology
+    m = sim.job.model
+    traffic = tp_mod.build_traffic_matrix(
+        topo,
+        comm_tp=m.comm_tp_bytes(sim.job.tp, sim.job.pp, sim.job.micro_batches),
+        comm_dp=m.comm_dp_bytes(sim.job.tp, sim.job.pp),
+        comm_pp=m.comm_pp_bytes(sim.job.micro_batches),
+    )
+    n = sim.job.n_devices
+    bw = np.zeros((n, n))
+    for i in range(n):
+        for j in range(n):
+            bw[i, j] = sim.state.link_bw(sim.placement[i], sim.placement[j]) if i != j else np.inf
+    perm = tp_mod.plan_topology_adjustment(traffic, bw)
+    sim.apply_placement(perm)
+    t_adj = sim.iteration_time()
+    assert t_adj < t_cong
+
+
+def test_detector_pinpoints_gpu_failslow_in_simulator():
+    """End-to-end FALCON-DETECT against the simulator: onset detection,
+    profiling, GEMM validation, root-cause = GPU degradation."""
+    sim = make_sim(tp=2, dp=2, pp=1, nodes=1, micro_batches=8)
+    det = FalconDetect(cluster=sim, verify_window=8)
+    now = 0.0
+    event = None
+    for it in range(120):
+        if it == 60:
+            sim.state.devices[1].compute_speed = 0.5
+        t = sim.iteration_time() * float(np.random.default_rng(it).normal(1, 0.005))
+        now += t
+        ev = det.observe(t, now)
+        event = ev or event
+    assert event is not None
+    assert event.root_cause == RootCause.GPU_DEGRADATION
+    assert "gpu:1" in event.components
+
+
+def test_detector_pinpoints_link_failslow_in_simulator():
+    sim = make_sim(tp=1, dp=4, pp=1, nodes=2, micro_batches=8)
+    det = FalconDetect(cluster=sim, verify_window=8)
+    a, b = sim.device_at(0, 0, 0), sim.device_at(0, 1, 0)
+    now, event = 0.0, None
+    for it in range(120):
+        if it == 60:
+            sim.state.degrade_link(a, b, 0.1)
+        t = sim.iteration_time() * float(np.random.default_rng(1000 + it).normal(1, 0.005))
+        now += t
+        ev = det.observe(t, now)
+        event = ev or event
+    assert event is not None
+    assert event.root_cause == RootCause.NETWORK_CONGESTION
+    lo, hi = min(a, b), max(a, b)
+    assert any(
+        c == f"link:{lo}-{hi}" or c == f"link:{hi}-{lo}" or c == f"link:{a}-{b}" or c == f"link:{b}-{a}"
+        for c in event.components
+    )
+
+
+def test_profile_groups_flags_suspicious():
+    sim = make_sim(tp=1, dp=4, pp=2, nodes=2)
+    a, b = sim.device_at(0, 1, 0), sim.device_at(0, 2, 0)
+    sim.state.degrade_link(a, b, 0.2)
+    sus = suspicious_groups(sim.profile_groups())
+    assert any(g.startswith("dp:") for g in sus)
+
+
+def test_allocation_and_placement_validation():
+    sim = make_sim()
+    with pytest.raises(ValueError):
+        sim.set_allocation([1, 2, 3])
+    with pytest.raises(ValueError):
+        sim.apply_placement([0, 0, 1, 2, 3, 4, 5, 6])
+
+
+def test_restart_resets():
+    sim = make_sim(tp=1, dp=4, pp=1, nodes=1, micro_batches=8)
+    sim.set_allocation([1, 1, 1, 5])
+    sim.apply_placement([3, 2, 1, 0])
+    sim.restart()
+    assert sim.allocation == [2, 2, 2, 2]
+    assert sim.placement == [0, 1, 2, 3]

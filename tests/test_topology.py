@@ -1,0 +1,110 @@
+"""Tests for S3 topology adjustment + straggler consolidation (paper §5.3)."""
+import numpy as np
+from hypothesis import given, settings
+from hypothesis import strategies as st
+
+from repro.core import topology as tp
+
+
+def uniform_bandwidth(n, bw=1.0):
+    b = np.full((n, n), bw)
+    np.fill_diagonal(b, np.inf)
+    return b
+
+
+def test_traffic_matrix_dp_heavier_than_pp():
+    """Appendix 9.2: Comm_DP >> Comm_PP — DP edges must carry more volume."""
+    topo = tp.HybridTopology(tp=1, dp=2, pp=2)
+    t = tp.build_traffic_matrix(topo, comm_tp=0.0, comm_dp=100.0, comm_pp=1.0)
+    dp_edge = t[topo.position(0, 0, 0), topo.position(0, 1, 0)]
+    pp_edge = t[topo.position(0, 0, 0), topo.position(1, 0, 0)]
+    assert dp_edge > pp_edge
+
+
+def test_swap_moves_congested_link_to_light_group():
+    """Fig. 10 scenario: 4 nodes, (1TP, 2DP, 2PP); the link between devices
+    2-3 is congested. Identity placement routes DP traffic over it; the
+    planner must find a permutation that puts light PP traffic there."""
+    topo = tp.HybridTopology(tp=1, dp=2, pp=2)
+    traffic = tp.build_traffic_matrix(topo, comm_tp=0.0, comm_dp=100.0, comm_pp=1.0)
+    bw = uniform_bandwidth(4, 10.0)
+    bw[2, 3] = bw[3, 2] = 1.0  # congested physical link
+
+    base_cost = tp.assignment_cost(list(range(4)), traffic, bw)
+    perm = tp.plan_topology_adjustment(traffic, bw)
+    new_cost = tp.assignment_cost(perm, traffic, bw)
+    assert new_cost < base_cost
+    # The congested pair (2,3) must no longer carry a DP edge.
+    inv = {d: p for p, d in enumerate(perm)}
+    p2, p3 = inv[2], inv[3]
+    dp_pairs = set()
+    for s in range(2):
+        a = topo.position(s, 0, 0)
+        b = topo.position(s, 1, 0)
+        dp_pairs.add(frozenset((a, b)))
+    assert frozenset((p2, p3)) not in dp_pairs
+
+
+def test_consolidation_reduces_straggler_stages():
+    """Fig. 11: stragglers scattered over 2 stages must be consolidated
+    into 1 (4 GPUs per stage, 2 stragglers)."""
+    topo = tp.HybridTopology(tp=2, dp=2, pp=4)
+    stragglers = [1, 5]  # stage 0 and stage 1 under identity placement
+    assert tp.straggler_stage_count(list(range(topo.size)), stragglers, topo) == 2
+    perm = tp.consolidate_stragglers(stragglers, topo)
+    assert sorted(perm) == list(range(topo.size))
+    assert tp.straggler_stage_count(perm, stragglers, topo) == 1
+
+
+def test_consolidation_prefers_interior_stages():
+    topo = tp.HybridTopology(tp=1, dp=2, pp=4)
+    perm = tp.consolidate_stragglers([0], topo)
+    slow_pos = perm.index(0)
+    stage = topo.stage_of(slow_pos)
+    assert stage not in (0, topo.pp - 1)
+
+
+def test_consolidation_min_stage_formula():
+    """ceil(#stragglers / GPUs-per-stage) stages (paper §5.3)."""
+    topo = tp.HybridTopology(tp=2, dp=2, pp=4)  # 4 GPUs per stage
+    for k in (1, 3, 4, 5, 8):
+        stragglers = list(range(k))
+        perm = tp.consolidate_stragglers(stragglers, topo)
+        want = -(-k // 4)
+        assert tp.straggler_stage_count(perm, stragglers, topo) == want
+
+
+@settings(max_examples=20, deadline=None)
+@given(
+    dp=st.integers(min_value=1, max_value=3),
+    pp=st.integers(min_value=2, max_value=4),
+    tpsz=st.integers(min_value=1, max_value=2),
+    seed=st.integers(min_value=0, max_value=50),
+)
+def test_property_adjustment_never_hurts(dp, pp, tpsz, seed):
+    """Local search can only improve (bottleneck, total) lexicographic cost."""
+    topo = tp.HybridTopology(tp=tpsz, dp=dp, pp=pp)
+    traffic = tp.build_traffic_matrix(topo, comm_tp=10.0, comm_dp=50.0, comm_pp=1.0)
+    rng = np.random.default_rng(seed)
+    n = topo.size
+    bw = uniform_bandwidth(n, 10.0)
+    # Degrade a random link.
+    if n >= 2:
+        a, b = rng.choice(n, size=2, replace=False)
+        bw[a, b] = bw[b, a] = 0.5
+    base = tp.assignment_cost(list(range(n)), traffic, bw)
+    perm = tp.plan_topology_adjustment(traffic, bw)
+    assert sorted(perm) == list(range(n))
+    assert tp.assignment_cost(perm, traffic, bw) <= base
+
+
+@settings(max_examples=20, deadline=None)
+@given(
+    k=st.integers(min_value=0, max_value=8),
+    pp=st.integers(min_value=1, max_value=4),
+)
+def test_property_consolidation_is_permutation(k, pp):
+    topo = tp.HybridTopology(tp=2, dp=1, pp=pp)
+    stragglers = list(range(min(k, topo.size)))
+    perm = tp.consolidate_stragglers(stragglers, topo)
+    assert sorted(perm) == list(range(topo.size))

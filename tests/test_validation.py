@@ -1,0 +1,70 @@
+"""Tests for O(1) ring/tree communicator validation (paper §4.3, Fig. 9)."""
+from hypothesis import given, settings
+from hypothesis import strategies as st
+
+from repro.core import validation as v
+
+
+def test_even_ring_two_passes():
+    passes = v.ring_passes(8)
+    assert len(passes) == 2
+    assert v.check_disjoint(passes)
+    covered = {frozenset(p) for ps in passes for p in ps}
+    want = {frozenset(l) for l in v.ring_links(8)}
+    assert covered == want
+
+
+def test_odd_ring_three_passes():
+    passes = v.ring_passes(5)
+    assert len(passes) == 3
+    assert v.check_disjoint(passes)
+    covered = {frozenset(p) for ps in passes for p in ps}
+    assert covered == {frozenset(l) for l in v.ring_links(5)}
+
+
+def test_tree_four_passes():
+    parents = v.binary_tree_parents(15)
+    passes = v.tree_passes(parents)
+    assert len(passes) == 4
+    assert v.check_disjoint(passes)
+    covered = {p for ps in passes for p in ps}
+    assert covered == set(v.tree_links(parents))
+
+
+@settings(max_examples=50, deadline=None)
+@given(n=st.integers(min_value=2, max_value=257))
+def test_property_ring_o1_passes_cover_all_links(n):
+    """O(1): pass count is 1, 2 or 3 for ANY ring size; full coverage; disjoint."""
+    passes = v.ring_passes(n)
+    assert len(passes) <= 3
+    assert v.check_disjoint(passes)
+    covered = {frozenset(p) for ps in passes for p in ps}
+    assert covered == {frozenset(l) for l in v.ring_links(n)}
+
+
+@settings(max_examples=50, deadline=None)
+@given(n=st.integers(min_value=2, max_value=511))
+def test_property_tree_o1_passes(n):
+    parents = v.binary_tree_parents(n)
+    passes = v.tree_passes(parents)
+    assert len(passes) == 4
+    assert v.check_disjoint(passes)
+    covered = {p for ps in passes for p in ps}
+    assert covered == set(v.tree_links(parents))
+
+
+def test_validate_links_flags_slow_link():
+    link_time = {frozenset((i, (i + 1) % 8)): 1.0 for i in range(8)}
+    link_time[frozenset((3, 4))] = 5.0  # congested
+
+    def measure(pair):
+        return link_time[frozenset(pair)]
+
+    slow, times = v.validate_links(v.ring_passes(8), measure)
+    assert [frozenset(p) for p in slow] == [frozenset((3, 4))]
+    assert len(times) == 8
+
+
+def test_validate_links_all_healthy():
+    slow, _ = v.validate_links(v.ring_passes(6), lambda p: 1.0)
+    assert slow == []
