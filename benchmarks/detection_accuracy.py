@@ -63,11 +63,12 @@ def _score(algo: str, traces: list[LabeledTrace]) -> dict:
     }
 
 
-def run() -> list[dict]:
+def run(smoke: bool = False) -> list[dict]:
     rows = []
     for name, c in CAMPAIGNS.items():
+        n_jobs = max(16, c["n_jobs"] // 16) if smoke else c["n_jobs"]
         traces = sample_campaign(
-            c["seed"], c["n_jobs"], c["rate"],
+            c["seed"], n_jobs, c["rate"],
             min_severity=c["min_sev"], max_severity=c["max_sev"],
         )
         for algo in ("SlideWindow", "BOCD", "BOCD+V"):

@@ -36,7 +36,7 @@ CONFIGS = {
 }
 
 
-def _measure(par: dict, seed: int = 0) -> tuple[float, float]:
+def _measure(par: dict, seed: int = 0, n_steps: int = N_STEPS) -> tuple[float, float]:
     """Returns (mean step seconds, mean detector seconds per step)."""
     cfg = get_config("falcon-demo-100m").smoke()
     data = DataConfig(seq_len=64, global_batch=8, slots=2, dp_groups=4)
@@ -57,7 +57,7 @@ def _measure(par: dict, seed: int = 0) -> tuple[float, float]:
     jax.block_until_ready(params)
 
     step_s, det_s, now = [], [], 0.0
-    for step in range(1, N_STEPS + 1):
+    for step in range(1, n_steps + 1):
         batch = jax.tree.map(jax.numpy.asarray, make_batch(cfg, data, step))
         t0 = time.monotonic()
         params, opt_state, metrics = step_fn(params, opt_state, batch)
@@ -71,10 +71,11 @@ def _measure(par: dict, seed: int = 0) -> tuple[float, float]:
     return float(np.mean(step_s)), float(np.mean(det_s))
 
 
-def run() -> list[dict]:
+def run(smoke: bool = False) -> list[dict]:
     rows = []
-    for name, par in CONFIGS.items():
-        step_mean, det_mean = _measure(par)
+    configs = dict(list(CONFIGS.items())[:1]) if smoke else CONFIGS
+    for name, par in configs.items():
+        step_mean, det_mean = _measure(par, n_steps=8 if smoke else N_STEPS)
         rows.append({
             "parallelism": name,
             "step_ms": round(1e3 * step_mean, 2),

@@ -63,20 +63,20 @@ def _make_sim() -> TrainingSimulator:
     return TrainingSimulator(cluster=spec, job=job)
 
 
-def _baseline_thpt(inject: bool) -> float:
+def _baseline_thpt(inject: bool, n_steps: int = N_STEPS) -> float:
     """Healthy / fail-slow-without-FALCON throughput: these runs involve no
     FALCON machinery, so the (deterministic) performance model alone gives
     their wall time — no need to spin 1400 real JAX steps for them."""
     sim = _make_sim()
     injector = FailSlowInjector(_mixed_trace(sim) if inject else [])
     wall = 0.0
-    for _ in range(N_STEPS):
+    for _ in range(n_steps):
         injector.apply(sim.state, wall)
         wall += sim.iteration_time()
-    return 60.0 * N_STEPS / wall
+    return 60.0 * n_steps / wall
 
 
-def _run_falcon() -> tuple[float, list]:
+def _run_falcon(n_steps: int = N_STEPS) -> tuple[float, list]:
     """The FALCON run trains for real: JAX steps update a reduced model while
     the performance model supplies iteration times and fail-slows."""
     cfg = get_config("falcon-demo-100m").smoke()
@@ -89,15 +89,16 @@ def _run_falcon() -> tuple[float, list]:
         perf_model=sim, injector=injector, falcon_enabled=True,
         overheads=dict(DEFAULT_OVERHEADS),
     )
-    hist = trainer.run(N_STEPS)
+    hist = trainer.run(n_steps)
     wall = hist[-1].wall_time
-    return 60.0 * N_STEPS / wall, hist
+    return 60.0 * n_steps / wall, hist
 
 
-def run() -> list[dict]:
-    thpt_healthy = _baseline_thpt(inject=False)
-    thpt_slow = _baseline_thpt(inject=True)
-    thpt_falcon, hist = _run_falcon()
+def run(smoke: bool = False) -> list[dict]:
+    n_steps = 120 if smoke else N_STEPS
+    thpt_healthy = _baseline_thpt(inject=False, n_steps=n_steps)
+    thpt_slow = _baseline_thpt(inject=True, n_steps=n_steps)
+    thpt_falcon, hist = _run_falcon(n_steps=n_steps)
     gap = thpt_healthy - thpt_slow
     recovered = 100 * (thpt_falcon - thpt_slow) / gap if gap > 0 else 0.0
     strategies = [h.strategy for h in hist if h.strategy]

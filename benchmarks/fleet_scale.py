@@ -1,0 +1,152 @@
+"""Fleet-scale fast-path throughput (beyond-paper; ROADMAP north star).
+
+FALCON's production claim is continuous detection over ~10k GPUs at <1 %
+overhead (paper §7, Fig. 18). This benchmark tracks the two hot paths this
+repo needs for that regime:
+
+* **Detection**: ticks/s of the batched fleet screen
+  (:class:`FleetDetect` / :class:`BatchedBOCD`, bounded shared run-length
+  frontier) over >=4096 concurrent worker streams, against the looped
+  per-worker scalar BOCD the seed used — measured on a subsample and scaled,
+  since the loop is exactly linear in workers.
+* **Simulation**: iteration-time model throughput at 1k/4k/10k devices —
+  memoized healthy steps, forced recomputes (fail-slow events), and the
+  original nested-loop reference.
+
+Results land in ``results/bench/fleet_scale.json`` and are mirrored to
+``BENCH_fleet.json`` at the repo root so the perf trajectory is tracked
+across PRs.
+"""
+from __future__ import annotations
+
+import json
+import os
+import time
+
+import numpy as np
+
+from benchmarks.common import print_table, save_rows
+from repro.cluster.injector import FailSlowInjector, Injection, InjectionKind
+from repro.cluster.simulator import JobSpec, TrainingSimulator
+from repro.cluster.spec import ClusterSpec, ModelSpec
+from repro.core import bocd
+from repro.core.detector import FleetDetect
+
+MODEL = ModelSpec(layers=40, hidden=5120, seq_len=2048, vocab=50257)
+ROOT_JSON = os.path.join(os.path.dirname(__file__), "..", "BENCH_fleet.json")
+
+
+def _fleet_traces(n_workers: int, n_ticks: int, seed: int = 0) -> np.ndarray:
+    """(T, B) iteration times: healthy jitter + 2 % of workers fail-slow."""
+    rng = np.random.default_rng(seed)
+    x = rng.normal(1.0, 0.01, (n_ticks, n_workers))
+    bad = rng.choice(n_workers, max(1, n_workers // 50), replace=False)
+    x[n_ticks // 2 :, bad] *= 1.4
+    return x
+
+
+def _detection_rows(n_workers: int, n_ticks: int, scalar_workers: int) -> dict:
+    x = _fleet_traces(n_workers, n_ticks)
+
+    fleet = FleetDetect(n_workers=n_workers)
+    t0 = time.perf_counter()
+    flags = [f for t in range(n_ticks) for f in fleet.tick(x[t])]
+    batched_s = time.perf_counter() - t0
+    batched_rate = n_workers * n_ticks / batched_s
+
+    # Looped scalar baseline (the seed's only option): one BOCD per worker,
+    # same screening statistic per tick. Cost is exactly linear in workers;
+    # measure a subsample and scale to the fleet.
+    m = min(scalar_workers, n_workers)
+    scale = bocd.noise_scale_batch(x[:8, :m])  # same warmup as FleetDetect
+    dets = [
+        bocd.BOCD(mu0=float(x[0, w] / scale[w])) for w in range(m)
+    ]
+    t0 = time.perf_counter()
+    for t in range(n_ticks):
+        for w in range(m):
+            dets[w].update(float(x[t, w] / scale[w]))
+            dets[w].p_recent_change()
+    scalar_s = time.perf_counter() - t0
+    scalar_rate = m * n_ticks / scalar_s
+
+    return {
+        "workers": n_workers,
+        "ticks": n_ticks,
+        "flags": len(flags),
+        "batched_ticks_per_s": round(n_ticks / batched_s, 1),
+        "batched_worker_upd_per_s": round(batched_rate),
+        "scalar_worker_upd_per_s": round(scalar_rate),
+        "speedup": round(batched_rate / scalar_rate, 1),
+        "scalar_sample_workers": m,
+    }
+
+
+def _make_sim(n_devices: int) -> tuple[TrainingSimulator, FailSlowInjector]:
+    tp, pp = 8, 8
+    dp = n_devices // (tp * pp)
+    job = JobSpec(model=MODEL, tp=tp, dp=dp, pp=pp, micro_batches=2 * dp)
+    sim = TrainingSimulator(cluster=ClusterSpec(n_nodes=n_devices // 8), job=job)
+    inj = FailSlowInjector([
+        Injection(start=100.0, duration=1e9, kind=InjectionKind.GPU_SLOW,
+                  target=(3,), severity=0.4),
+    ])
+    return sim, inj
+
+
+def _simulator_rows(n_devices: int, healthy_steps: int, recomputes: int) -> dict:
+    sim, inj = _make_sim(n_devices)
+    wall = 0.0
+    t0 = time.perf_counter()
+    for _ in range(healthy_steps):
+        inj.apply(sim.state, wall)
+        wall += sim.iteration_time()
+    healthy_s = time.perf_counter() - t0
+
+    t0 = time.perf_counter()
+    for i in range(recomputes):  # every step invalidates -> full recompute
+        sim.state.devices[5].compute_speed = 0.9 - 1e-9 * i
+        sim.iteration_time()
+    recompute_s = time.perf_counter() - t0
+
+    t0 = time.perf_counter()
+    ref_reps = max(1, recomputes // 10)
+    for _ in range(ref_reps):
+        sim.iteration_time_reference()
+    reference_s = (time.perf_counter() - t0) / ref_reps
+
+    return {
+        "devices": n_devices,
+        "memoized_steps_per_s": round(healthy_steps / healthy_s),
+        "recompute_ms": round(1e3 * recompute_s / recomputes, 3),
+        "reference_ms": round(1e3 * reference_s, 2),
+        "recompute_speedup": round(reference_s / (recompute_s / recomputes), 1),
+    }
+
+
+def run(smoke: bool = False) -> list[dict]:
+    if smoke:
+        det_cfgs = [(512, 60, 16)]
+        sim_cfgs = [(256, 200, 5)]
+    else:
+        det_cfgs = [(4096, 200, 64), (8192, 200, 64), (16384, 200, 64)]
+        sim_cfgs = [(1024, 2000, 50), (4096, 2000, 20), (10240, 1000, 20)]
+    rows: list[dict] = []
+    for workers, ticks, scalar_workers in det_cfgs:
+        r = _detection_rows(workers, ticks, scalar_workers)
+        rows.append({"path": "detection", **r})
+    for devices, steps, recomputes in sim_cfgs:
+        r = _simulator_rows(devices, steps, recomputes)
+        rows.append({"path": "simulation", **r})
+    # One aligned table: pad both row schemas to the shared column set.
+    cols = list(dict.fromkeys(k for r in rows for k in r))
+    rows = [{c: r.get(c, "") for c in cols} for r in rows]
+    save_rows("fleet_scale", rows)
+    if not smoke:  # the tracked perf-trajectory artifact
+        with open(ROOT_JSON, "w") as f:
+            json.dump(rows, f, indent=1)
+    return rows
+
+
+if __name__ == "__main__":
+    print_table("Fleet-scale fast path", run())

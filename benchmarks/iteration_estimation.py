@@ -31,7 +31,9 @@ STRATEGIES = {
 }
 
 
-def run(seed: int = 3, n_iters: int = 200) -> list[dict]:
+def run(seed: int = 3, n_iters: int = 200, smoke: bool = False) -> list[dict]:
+    if smoke:
+        n_iters = min(n_iters, 60)
     rng = np.random.default_rng(seed)
     rows = []
     for label, pattern in STRATEGIES.items():

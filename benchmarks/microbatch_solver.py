@@ -17,14 +17,14 @@ from repro.core.microbatch import makespan, solve_allocation
 PAPER_CVXPY_S = {16: 0.01, 32: 0.01, 64: 0.01, 128: 0.11, 256: 6.78, 512: 35.93}
 
 
-def run(seed: int = 5) -> list[dict]:
+def run(seed: int = 5, smoke: bool = False) -> list[dict]:
     rng = np.random.default_rng(seed)
     rows = []
-    for d in (16, 32, 64, 128, 256, 512):
+    for d in (16, 64) if smoke else (16, 32, 64, 128, 256, 512):
         times = rng.uniform(0.8, 1.6, size=d)
         times[rng.integers(d)] *= 2.0  # one straggling DP group
         m = 4 * d  # micro-batches per iteration
-        reps = 20
+        reps = 3 if smoke else 20
         t0 = time.perf_counter()
         for _ in range(reps):
             counts = solve_allocation(times, m)

@@ -1,14 +1,18 @@
 """Benchmark harness — one module per paper table/figure (deliverable d).
 
-    PYTHONPATH=src python -m benchmarks.run [--only NAME]
+    PYTHONPATH=src python -m benchmarks.run [--only NAME] [--smoke]
 
 Each module exposes ``run() -> list[dict]``; results are printed as aligned
-tables and persisted to ``results/bench/<name>.json``.
+tables and persisted to ``results/bench/<name>.json``. ``--smoke`` runs
+every benchmark at toy scale (modules whose ``run`` accepts a ``smoke``
+keyword); it exists so CI can execute the full suite end-to-end in minutes
+— perf entry points that don't run, rot.
 """
 from __future__ import annotations
 
 import argparse
 import importlib
+import inspect
 import sys
 import time
 import traceback
@@ -28,22 +32,44 @@ SUITE = [
     ("detector_overhead", "Fig. 18 — detector overhead (real JAX steps)"),
     ("end_to_end", "Fig. 20 / Table 7 — 64-GPU end-to-end"),
     ("roofline", "Roofline — dry-run derived terms (deliverable g)"),
+    ("fleet_scale", "Fleet-scale fast path — batched detection + vector sim"),
 ]
 
 
 def main() -> None:
     ap = argparse.ArgumentParser()
     ap.add_argument("--only", default=None, help="run a single benchmark")
+    ap.add_argument(
+        "--smoke", action="store_true",
+        help="toy-scale pass over every benchmark (CI rot check)",
+    )
     args = ap.parse_args()
+
+    if args.only and args.only not in {name for name, _ in SUITE}:
+        ap.error(
+            f"unknown benchmark {args.only!r}; choose from: "
+            + ", ".join(name for name, _ in SUITE)
+        )
+
+    if args.smoke:
+        # Toy-scale numbers must not clobber the tracked full-scale results.
+        import tempfile
+
+        from benchmarks import common
+
+        common.RESULTS_DIR = tempfile.mkdtemp(prefix="bench_smoke_")
 
     failures = []
     for name, title in SUITE:
         if args.only and args.only != name:
             continue
         mod = importlib.import_module(f"benchmarks.{name}")
+        kwargs = {}
+        if args.smoke and "smoke" in inspect.signature(mod.run).parameters:
+            kwargs["smoke"] = True
         t0 = time.monotonic()
         try:
-            rows = mod.run()
+            rows = mod.run(**kwargs)
         except Exception:  # noqa: BLE001
             traceback.print_exc()
             failures.append(name)

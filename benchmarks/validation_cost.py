@@ -14,10 +14,10 @@ from benchmarks.common import print_table, save_rows
 from repro.core import validation
 
 
-def run(seed: int = 17) -> list[dict]:
+def run(seed: int = 17, smoke: bool = False) -> list[dict]:
     rng = np.random.default_rng(seed)
     rows = []
-    for n in (4, 7, 16, 64, 128, 512):
+    for n in (4, 7, 16) if smoke else (4, 7, 16, 64, 128, 512):
         # --- ring ---
         passes = validation.ring_passes(n)
         links = validation.ring_links(n)

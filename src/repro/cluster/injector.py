@@ -52,6 +52,7 @@ class FailSlowInjector:
     """Applies the set of active injections to a ClusterState at time t."""
 
     injections: list[Injection] = field(default_factory=list)
+    _last_applied: tuple | None = field(init=False, default=None)
 
     def add(self, inj: Injection) -> None:
         self.injections.append(inj)
@@ -60,9 +61,17 @@ class FailSlowInjector:
         return [i for i in self.injections if i.active(now)]
 
     def apply(self, state: ClusterState, now: float) -> list[Injection]:
-        """Reset the state and apply all injections active at ``now``."""
-        state.reset()
+        """Reset the state and apply all injections active at ``now``.
+
+        Steady state is O(1): when the active set is unchanged since the
+        last apply *and* nobody else mutated the state (checked through its
+        version counter), the reset+reapply — which would invalidate the
+        simulator's memoized iteration time every step — is skipped.
+        """
         act = self.active(now)
+        if self._last_applied == (id(state), tuple(act), state.version):
+            return act
+        state.reset()
         for inj in act:
             mult = 1.0 - inj.severity
             if inj.kind is InjectionKind.GPU_SLOW:
@@ -79,6 +88,7 @@ class FailSlowInjector:
             else:
                 a, b = inj.target
                 state.degrade_link(a, b, mult)
+        self._last_applied = (id(state), tuple(act), state.version)
         return act
 
 

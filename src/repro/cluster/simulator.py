@@ -10,6 +10,31 @@ stream the Monitor shim would log on a real job.
 The model intentionally follows the paper's own cost reasoning
 (Appendix 9.2): compute time = FLOPs / effective speed; collective time =
 ring volume / slowest link; pipeline time = (m + P - 1) x slowest stage.
+
+Fast-path architecture (fleet scale)
+------------------------------------
+``iteration_time()`` / ``profile_groups()`` / ``per_microbatch_times()``
+run on a vectorized core instead of the original nested Python loops:
+
+* A per-placement :class:`_Layout` precomputes the (pp, dp, tp) device-index
+  grid, the ring-edge endpoint arrays of every TP cell and DP ring, the PP
+  hop endpoints and the profiling-group key strings. It is rebuilt only when
+  the placement (or job/cluster) changes.
+* Per evaluation, cell speeds and ring times reduce to a handful of gathers
+  over :meth:`ClusterState.effective_speeds` / ``link_bw_many`` plus
+  ``min``/``max``/``sum`` reductions — O(devices) array work instead of
+  O(pp*dp*tp) Python-level calls.
+* Results are memoized. The invalidation contract: ``ClusterState.version``
+  covers every health mutation (device-speed writes, link/NIC multiplier
+  changes, ``reset``), and the simulator bumps an internal config version
+  whenever ``placement``/``allocation``/``state`` are reassigned (including
+  through ``set_allocation``/``apply_placement``/``restart``). Healthy steps
+  between fail-slow events therefore cost O(1); mutate state only through
+  those surfaces (lists must be *reassigned*, not edited in place).
+
+The original loop implementations remain as ``*_reference()`` methods; the
+fast path matches them bit for bit (equivalence-tested), so benchmark
+results are unchanged at lower wall-clock.
 """
 from __future__ import annotations
 
@@ -41,6 +66,41 @@ class JobSpec:
         return self.tp * self.dp * self.pp
 
 
+class _Layout:
+    """Placement-derived index tensors, built once per placement.
+
+    ``grid[s, d, k]`` is the physical device at (stage, dp_rank, tp_rank);
+    the flattened ring-edge endpoint arrays feed ``link_bw_many`` gathers.
+    """
+
+    def __init__(self, placement: list[int], job: JobSpec) -> None:
+        grid = np.asarray(placement, dtype=np.int64).reshape(
+            job.pp, job.dp, job.tp
+        )
+        self.grid = grid
+        self.tp_edges = None
+        self.dp_edges = None
+        self.hop_edges = None
+        if job.tp > 1:
+            self.tp_edges = (
+                grid.reshape(-1), np.roll(grid, -1, axis=2).reshape(-1)
+            )
+        if job.dp > 1:
+            self.dp_edges = (
+                grid.reshape(-1), np.roll(grid, -1, axis=1).reshape(-1)
+            )
+        if job.pp > 1:
+            self.hop_edges = (
+                grid[:-1, :, 0].reshape(-1), grid[1:, :, 0].reshape(-1)
+            )
+        self.tp_keys = [
+            f"tp:s{s}d{d}" for s in range(job.pp) for d in range(job.dp)
+        ]
+        self.dp_keys = [
+            f"dp:s{s}t{k}" for s in range(job.pp) for k in range(job.tp)
+        ]
+
+
 @dataclass
 class TrainingSimulator:
     """Iteration-time model + FALCON ClusterInterface implementation."""
@@ -65,6 +125,24 @@ class TrainingSimulator:
             ]
         self.state = ClusterState(self.cluster)
 
+    # ------------------------------------------------- memo bookkeeping
+    def __setattr__(self, name: str, value) -> None:
+        object.__setattr__(self, name, value)
+        d = self.__dict__
+        if name in ("placement", "job", "cluster"):
+            d["_place_ver"] = d.get("_place_ver", 0) + 1
+        if name in ("placement", "allocation", "state", "job", "cluster"):
+            d["_cfg_ver"] = d.get("_cfg_ver", 0) + 1
+        if name in ("job", "cluster"):
+            d["_healthy_cache"] = None  # healthy time depends only on these
+
+    def _layout(self) -> _Layout:
+        d = self.__dict__
+        if d.get("_layout_ver") != d["_place_ver"]:
+            d["_layout_cache"] = _Layout(self.placement, self.job)
+            d["_layout_ver"] = d["_place_ver"]
+        return d["_layout_cache"]
+
     # ------------------------------------------------------------- layout
     def device_at(self, stage: int, dp_rank: int, tp_rank: int) -> int:
         return self.placement[self.job.topology.position(stage, dp_rank, tp_rank)]
@@ -72,7 +150,88 @@ class TrainingSimulator:
     def _cell_devices(self, stage: int, dp_rank: int) -> list[int]:
         return [self.device_at(stage, dp_rank, k) for k in range(self.job.tp)]
 
-    # ------------------------------------------------------------ timings
+    # --------------------------------------------- vectorized fast path
+    def _stage_times(self) -> np.ndarray:
+        """Per-(stage, dp_rank) time of one micro-batch, shape (pp, dp)."""
+        lay = self._layout()
+        m = self.job.model
+        cell_speed = self.state.effective_speeds()[lay.grid].min(axis=2)
+        compute = (
+            m.flops_per_microbatch() / self.job.pp
+        ) / (self.job.tp * self.cluster.gpu_flops * cell_speed)
+        if lay.tp_edges is not None:
+            tp_vol = m.comm_tp_bytes(self.job.tp, self.job.pp, 1)
+            bw = self.state.link_bw_many(*lay.tp_edges).reshape(
+                self.job.pp, self.job.dp, self.job.tp
+            ).min(axis=2)
+            compute += 2.0 * (self.job.tp - 1) / self.job.tp * tp_vol / bw
+        return compute
+
+    def _dp_ring_times(self, volume: float) -> np.ndarray:
+        """All-reduce time of every (stage, tp_rank) DP ring, shape (pp, tp)."""
+        lay = self._layout()
+        bw = self.state.link_bw_many(*lay.dp_edges).reshape(
+            self.job.pp, self.job.dp, self.job.tp
+        ).min(axis=1)
+        return 2.0 * (self.job.dp - 1) / self.job.dp * volume / bw
+
+    def iteration_time(self) -> float:
+        key = (self.__dict__["_cfg_ver"], self.state.version)
+        d = self.__dict__
+        if d.get("_it_key") == key:
+            return d["_it_val"]
+        lay = self._layout()
+        stage_t = self._stage_times().max(axis=0)  # (dp,)
+        if lay.hop_edges is not None:
+            pp_vol = self.job.model.comm_pp_bytes(1)
+            hop = (
+                pp_vol / self.state.link_bw_many(*lay.hop_edges).reshape(
+                    self.job.pp - 1, self.job.dp
+                )
+            ).sum(axis=0)
+        else:
+            hop = 0.0
+        alloc = np.asarray(self.allocation, dtype=np.int64)
+        pipe = (alloc + self.job.pp - 1) * stage_t + 2.0 * hop
+        t = float(pipe.max())
+        if self.job.dp > 1:
+            vol = self.job.model.comm_dp_bytes(self.job.tp, self.job.pp)
+            t += float(self._dp_ring_times(vol).max())
+        d["_it_key"] = key
+        d["_it_val"] = t
+        return t
+
+    def per_microbatch_times(self) -> list[float]:
+        """Per-DP-group per-micro-batch processing time (S2 solver input)."""
+        return [float(v) for v in self._stage_times().max(axis=0)]
+
+    def healthy_iteration_time(self) -> float:
+        """Iteration time with all components healthy and even allocation.
+
+        Depends only on the (immutable) job and cluster specs, so it is
+        computed once per simulator.
+        """
+        d = self.__dict__
+        if d.get("_healthy_cache") is None:
+            saved_state, saved_alloc = self.state, self.allocation
+            saved_place = self.placement
+            self.state = ClusterState(self.cluster)
+            base, extra = divmod(self.job.micro_batches, self.job.dp)
+            self.allocation = [
+                base + (1 if i < extra else 0) for i in range(self.job.dp)
+            ]
+            self.placement = list(range(self.job.n_devices))
+            t = self.iteration_time()
+            self.state, self.allocation, self.placement = (
+                saved_state, saved_alloc, saved_place,
+            )
+            d["_healthy_cache"] = t
+        return d["_healthy_cache"]
+
+    # ----------------------------------------- reference implementations
+    # The seed's nested-loop model, kept verbatim as the equivalence oracle
+    # for the vectorized fast path (tests pin both to 1e-9; in practice the
+    # operation chains are identical and results match bit for bit).
     def _cell_speed(self, stage: int, dp_rank: int) -> float:
         """TP-synchronized cell runs at its slowest member's speed."""
         return min(self.state.effective_speed(d) for d in self._cell_devices(stage, dp_rank))
@@ -121,33 +280,34 @@ class TrainingSimulator:
                 worst = max(worst, self._ring_time(ring, vol))
         return worst
 
-    def iteration_time(self) -> float:
+    def iteration_time_reference(self) -> float:
+        """Original loop implementation (equivalence oracle; no memo)."""
         pipe = max(self._pipeline_time(d) for d in range(self.job.dp))
         return pipe + self._dp_allreduce_time()
 
-    def healthy_iteration_time(self) -> float:
-        """Iteration time with all components healthy and even allocation."""
-        saved_state, saved_alloc = self.state, self.allocation
-        saved_place = self.placement
-        self.state = ClusterState(self.cluster)
-        base, extra = divmod(self.job.micro_batches, self.job.dp)
-        self.allocation = [base + (1 if i < extra else 0) for i in range(self.job.dp)]
-        self.placement = list(range(self.job.n_devices))
-        t = self.iteration_time()
-        self.state, self.allocation, self.placement = (
-            saved_state, saved_alloc, saved_place,
-        )
-        return t
-
-    # -------------------------------------------------- per-µbatch speeds
-    def per_microbatch_times(self) -> list[float]:
-        """Per-DP-group per-micro-batch processing time (S2 solver input)."""
+    def per_microbatch_times_reference(self) -> list[float]:
         return [
             max(
                 self._stage_time_per_microbatch(s, d) for s in range(self.job.pp)
             )
             for d in range(self.job.dp)
         ]
+
+    def profile_groups_reference(self) -> dict[str, float]:
+        out: dict[str, float] = {}
+        m = self.job.model
+        tp_vol = m.comm_tp_bytes(self.job.tp, self.job.pp, 1)
+        dp_vol = m.comm_dp_bytes(self.job.tp, self.job.pp)
+        for s in range(self.job.pp):
+            for d in range(self.job.dp):
+                if self.job.tp > 1:
+                    cell = self._cell_devices(s, d)
+                    out[f"tp:s{s}d{d}"] = self._ring_time(cell, tp_vol)
+            for k in range(self.job.tp):
+                if self.job.dp > 1:
+                    ring = [self.device_at(s, d, k) for d in range(self.job.dp)]
+                    out[f"dp:s{s}t{k}"] = self._ring_time(ring, dp_vol)
+        return out
 
     # -------------------------------------------------- mitigation hooks
     def set_allocation(self, counts: list[int]) -> None:
@@ -182,19 +342,20 @@ class TrainingSimulator:
     # ------------------------------------- ClusterInterface (FALCON R1)
     def profile_groups(self) -> dict[str, float]:
         """Per-communication-group transfer time (profiling phase)."""
+        lay = self._layout()
         out: dict[str, float] = {}
         m = self.job.model
-        tp_vol = m.comm_tp_bytes(self.job.tp, self.job.pp, 1)
-        dp_vol = m.comm_dp_bytes(self.job.tp, self.job.pp)
-        for s in range(self.job.pp):
-            for d in range(self.job.dp):
-                if self.job.tp > 1:
-                    cell = self._cell_devices(s, d)
-                    out[f"tp:s{s}d{d}"] = self._ring_time(cell, tp_vol)
-            for k in range(self.job.tp):
-                if self.job.dp > 1:
-                    ring = [self.device_at(s, d, k) for d in range(self.job.dp)]
-                    out[f"dp:s{s}t{k}"] = self._ring_time(ring, dp_vol)
+        if lay.tp_edges is not None:
+            tp_vol = m.comm_tp_bytes(self.job.tp, self.job.pp, 1)
+            bw = self.state.link_bw_many(*lay.tp_edges).reshape(
+                self.job.pp, self.job.dp, self.job.tp
+            ).min(axis=2)
+            times = 2.0 * (self.job.tp - 1) / self.job.tp * tp_vol / bw
+            out.update(zip(lay.tp_keys, times.reshape(-1).tolist(), strict=True))
+        if lay.dp_edges is not None:
+            dp_vol = m.comm_dp_bytes(self.job.tp, self.job.pp)
+            times = self._dp_ring_times(dp_vol)
+            out.update(zip(lay.dp_keys, times.reshape(-1).tolist(), strict=True))
         return out
 
     def group_ranks(self, group: str) -> list[int]:

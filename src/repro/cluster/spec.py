@@ -8,6 +8,8 @@ from __future__ import annotations
 
 from dataclasses import dataclass, field
 
+import numpy as np
+
 # --- TPU v5e constants (roofline target; per chip) -----------------------
 TPU_PEAK_FLOPS_BF16 = 197e12  # FLOP/s
 TPU_HBM_BW = 819e9  # bytes/s
@@ -84,17 +86,107 @@ class ClusterSpec:
         return self.inter_node_bw
 
 
-@dataclass
 class DeviceState:
-    """Dynamic per-device health (multipliers; 1.0 = healthy)."""
+    """Dynamic per-device health (multipliers; 1.0 = healthy).
 
-    compute_speed: float = 1.0  # GPU degradation / thermal throttling
-    host_speed: float = 1.0  # CPU contention (affects whole node)
+    A view into the owning :class:`ClusterState`'s speed arrays: writes land
+    in the vectorized storage and bump the state version, so the simulator's
+    memoized iteration time invalidates on *any* mutation path — including
+    direct ``state.devices[i].compute_speed = ...`` assignments.
+    """
+
+    __slots__ = ("_state", "_idx")
+
+    def __init__(self, state: "ClusterState", idx: int) -> None:
+        self._state = state
+        self._idx = idx
+
+    @property
+    def compute_speed(self) -> float:  # GPU degradation / thermal throttling
+        return float(self._state._compute[self._idx])
+
+    @compute_speed.setter
+    def compute_speed(self, v: float) -> None:
+        if self._state._compute[self._idx] != v:
+            self._state._compute[self._idx] = v
+            self._state._bump()
+
+    @property
+    def host_speed(self) -> float:  # CPU contention (affects whole node)
+        return float(self._state._host[self._idx])
+
+    @host_speed.setter
+    def host_speed(self, v: float) -> None:
+        if self._state._host[self._idx] != v:
+            self._state._host[self._idx] = v
+            self._state._bump()
+
+    def __repr__(self) -> str:
+        return (f"DeviceState(compute_speed={self.compute_speed}, "
+                f"host_speed={self.host_speed})")
+
+
+class _VersionedDict(dict):
+    """Dict that bumps its owner's state version on real mutations."""
+
+    __slots__ = ("_owner",)
+
+    def __init__(self, owner: "ClusterState", *args) -> None:
+        super().__init__(*args)
+        self._owner = owner
+
+    def __setitem__(self, key, value) -> None:
+        if key in self and dict.__getitem__(self, key) == value:
+            return
+        super().__setitem__(key, value)
+        self._owner._bump()
+
+    def __delitem__(self, key) -> None:
+        super().__delitem__(key)
+        self._owner._bump()
+
+    def pop(self, key, *default):
+        had = key in self
+        out = super().pop(key, *default)
+        if had:
+            self._owner._bump()
+        return out
+
+    def clear(self) -> None:
+        if self:
+            super().clear()
+            self._owner._bump()
+
+    def update(self, *args, **kw) -> None:
+        super().update(*args, **kw)
+        self._owner._bump()
+
+    def setdefault(self, key, default=None):
+        if key in self:
+            return dict.__getitem__(self, key)
+        super().__setitem__(key, default)
+        self._owner._bump()
+        return default
+
+    def __ior__(self, other):
+        self.update(other)
+        return self
+
+    def popitem(self):
+        out = super().popitem()
+        self._owner._bump()
+        return out
 
 
 @dataclass
 class ClusterState:
-    """Mutable health state of every device and link."""
+    """Mutable health state of every device and link.
+
+    Speeds are stored as dense arrays for the simulator's vectorized fast
+    path; a monotonically increasing ``version`` tracks every mutation
+    (through device views, the versioned multiplier dicts, or ``reset``) and
+    is the invalidation key for memoized iteration times.
+    """
 
     spec: ClusterSpec
     devices: list[DeviceState] = field(init=False)
@@ -105,18 +197,39 @@ class ClusterState:
     nic_mult: dict[int, float] = field(default_factory=dict)
 
     def __post_init__(self) -> None:
-        self.devices = [DeviceState() for _ in range(self.spec.n_devices)]
+        n = self.spec.n_devices
+        self._version = 0
+        self._compute = np.ones(n)
+        self._host = np.ones(n)
+        self.devices = [DeviceState(self, i) for i in range(n)]
+        self.link_mult = _VersionedDict(self, self.link_mult)
+        self.nic_mult = _VersionedDict(self, self.nic_mult)
+        self._clean = not self.link_mult and not self.nic_mult
+
+    @property
+    def version(self) -> int:
+        return self._version
+
+    def _bump(self) -> None:
+        self._version += 1
+        self._clean = False
 
     def reset(self) -> None:
-        for d in self.devices:
-            d.compute_speed = 1.0
-            d.host_speed = 1.0
-        self.link_mult.clear()
-        self.nic_mult.clear()
+        if self._clean:
+            return
+        self._compute.fill(1.0)
+        self._host.fill(1.0)
+        dict.clear(self.link_mult)
+        dict.clear(self.nic_mult)
+        self._bump()
+        self._clean = True
 
     def effective_speed(self, device: int) -> float:
-        d = self.devices[device]
-        return d.compute_speed * d.host_speed
+        return float(self._compute[device] * self._host[device])
+
+    def effective_speeds(self) -> np.ndarray:
+        """Per-device effective speed vector (compute x host)."""
+        return self._compute * self._host
 
     def link_bw(self, a: int, b: int) -> float:
         base = self.spec.base_link_bw(a, b)
@@ -125,6 +238,45 @@ class ClusterState:
         na, nb = self.spec.node_of(a), self.spec.node_of(b)
         if na != nb:
             bw *= min(self.nic_mult.get(na, 1.0), self.nic_mult.get(nb, 1.0))
+        return bw
+
+    def link_bw_many(self, a: np.ndarray, b: np.ndarray) -> np.ndarray:
+        """Vectorized :meth:`link_bw` over parallel device-index arrays.
+
+        Applies the exact same operation chain per element (base, then the
+        link multiplier, then the NIC factor), so results match the scalar
+        path bit for bit; degraded links/NICs are applied as sparse masks —
+        O(len + #degraded) instead of a Python loop per edge.
+        """
+        spec = self.spec
+        a = np.asarray(a, dtype=np.int64)
+        b = np.asarray(b, dtype=np.int64)
+        na = a // spec.gpus_per_node
+        nb = b // spec.gpus_per_node
+        cross = na != nb
+        bw = np.where(cross, spec.inter_node_bw, spec.intra_node_bw)
+        bw = np.where(a == b, np.inf, bw)
+        if self.link_mult:
+            # One sorted-key lookup for all degraded links: O(len log m),
+            # not a full-length mask per degraded link.
+            n = spec.n_devices
+            keys = np.minimum(a, b) * n + np.maximum(a, b)
+            items = sorted(
+                (klo * n + khi, mult)
+                for (klo, khi), mult in self.link_mult.items()
+            )
+            dk = np.array([k for k, _ in items], dtype=np.int64)
+            dm = np.array([m for _, m in items])
+            pos = np.minimum(np.searchsorted(dk, keys), dk.size - 1)
+            hit = dk[pos] == keys
+            if hit.any():
+                bw = np.where(hit, bw * dm[pos], bw)
+        if self.nic_mult:
+            nm = np.ones(spec.n_nodes)
+            for node, mult in self.nic_mult.items():
+                nm[node] = mult
+            factor = np.minimum(nm[na], nm[nb])
+            bw = np.where(cross, bw * factor, bw)
         return bw
 
     def degrade_link(self, a: int, b: int, mult: float) -> None:

@@ -1,0 +1,54 @@
+"""Cross-version jax API shims.
+
+The container's jax (0.4.x) predates several APIs this codebase targets:
+top-level ``jax.shard_map`` (``axis_names``/``check_vma``), ``jax.set_mesh``
+and ``jax.sharding.get_abstract_mesh``. These helpers bridge both worlds so
+the model/train code stays written against the modern surface.
+"""
+from __future__ import annotations
+
+import jax
+
+HAS_MODERN_SHARD_MAP = hasattr(jax, "shard_map")
+
+
+def shard_map_compat(f, mesh, in_specs, out_specs, axis_names):
+    """``jax.shard_map`` manual over ``axis_names`` across jax versions.
+
+    0.4.x spells the manual axes as the complement of ``auto`` on
+    ``jax.experimental.shard_map.shard_map`` and replication checking as
+    ``check_rep``.
+    """
+    if HAS_MODERN_SHARD_MAP:
+        return jax.shard_map(
+            f, mesh=mesh, in_specs=in_specs, out_specs=out_specs,
+            axis_names=axis_names, check_vma=False,
+        )
+    from jax.experimental.shard_map import shard_map
+
+    auto = frozenset(mesh.axis_names) - frozenset(axis_names)
+    return shard_map(
+        f, mesh=mesh, in_specs=in_specs, out_specs=out_specs,
+        auto=auto, check_rep=False,
+    )
+
+
+def ambient_mesh():
+    """The mesh the caller entered, or None on meshless hosts.
+
+    Newer jax: ``jax.sharding.get_abstract_mesh()``. Older jax: the pxla
+    thread-resources physical mesh set by ``with mesh:``.
+    """
+    get = getattr(jax.sharding, "get_abstract_mesh", None)
+    if get is not None:
+        return get()
+    from jax.interpreters import pxla
+
+    mesh = pxla.thread_resources.env.physical_mesh
+    return None if mesh.empty else mesh
+
+
+def set_mesh(mesh):
+    """``jax.set_mesh`` where available; the Mesh context manager otherwise."""
+    setter = getattr(jax, "set_mesh", None)
+    return setter(mesh) if setter is not None else mesh

@@ -14,6 +14,13 @@ The three-phase workflow:
 The detector talks to the system under test through the small
 :class:`ClusterInterface` protocol so it works identically against the real
 JAX trainer and the cluster simulator (R1, framework-agnostic).
+
+Fleet fast path: :class:`FleetDetect` screens thousands of worker streams
+per tick with one :class:`repro.core.bocd.BatchedBOCD` (a bounded shared
+hypothesis frontier keeps the per-tick cost flat) and escalates only flagged
+workers to the exact per-worker verification used here. Per-worker history
+lives in bounded ring buffers — an observation is O(1), never O(n) in the
+stream length.
 """
 from __future__ import annotations
 
@@ -24,6 +31,7 @@ import numpy as np
 
 from repro.core import bocd, validation
 from repro.core.events import ChangePoint, FailSlowEvent, RootCause
+from repro.core.ringbuf import MatrixRingBuffer, RingBuffer
 
 VERIFY_THRESHOLD = 0.10  # <10 % before/after difference => jitter (§4.2)
 SUSPICIOUS_FACTOR = 1.1  # >1.1x median transfer time => suspicious (§4.3)
@@ -84,6 +92,47 @@ def verify_change_points(
                 )
             )
     return out
+
+
+def _verify_windows(
+    before_win: np.ndarray,
+    after_win: np.ndarray,
+    idx: int,
+    threshold: float,
+) -> ChangePoint | None:
+    """The +/-10 % rule over extracted before/after windows (single source
+    of truth for both the per-job and the fleet escalation paths)."""
+    if before_win.size < 2 or after_win.size < 2:
+        return None
+    before = float(np.mean(before_win))
+    after = float(np.mean(after_win))
+    if before <= 0 or abs(after - before) / before < threshold:
+        return None
+    return ChangePoint(
+        index=idx, probability=1.0, mean_before=before, mean_after=after
+    )
+
+
+def _verify_ring(
+    series: RingBuffer,
+    idx: int,
+    window: int,
+    threshold: float = VERIFY_THRESHOLD,
+) -> ChangePoint | None:
+    """:func:`verify_change_points` against a bounded ring buffer.
+
+    Reads only the +/-``window`` slice around the candidate (absolute index
+    ``idx``), so verification cost is independent of the stream length.
+    Candidates older than the buffer's retention cannot be verified and are
+    dropped — with any sane ``history_cap`` BOCD flags changes within a few
+    steps of onset, far inside retention.
+    """
+    n = len(series)
+    lo = max(0, idx - window, series.start)
+    hi = min(n, idx + window)
+    return _verify_windows(
+        series.view(lo, idx), series.view(idx, hi), idx, threshold
+    )
 
 
 def detect_slow_iterations(
@@ -154,13 +203,22 @@ class FalconDetect:
     revalidate_every: int = 10
 
     warmup: int = 8
+    #: retained iteration-time samples. Only trailing windows are ever read
+    #: (jitter scale at warmup, +/-verify_window around a candidate), so a
+    #: bounded ring keeps observe() O(1) instead of O(n) per step.
+    history_cap: int = 512
 
-    _series: list[float] = field(init=False, default_factory=list)
+    _series: RingBuffer = field(init=False)
     _bocd: bocd.BOCD | None = field(init=False, default=None)
     _scale: float = field(init=False, default=1.0)
     _healthy: float = field(init=False, default=0.0)
     active_event: FailSlowEvent | None = field(init=False, default=None)
     history: list[FailSlowEvent] = field(init=False, default_factory=list)
+
+    def __post_init__(self) -> None:
+        self._series = RingBuffer(
+            max(self.history_cap, self.warmup, 4 * self.verify_window)
+        )
 
     # ------------------------------------------------------------------
     def observe(self, iter_time: float, now: float) -> FailSlowEvent | None:
@@ -172,15 +230,16 @@ class FalconDetect:
             # then replay them into a freshly-parameterized detector.
             if n < self.warmup:
                 return None
-            self._scale = bocd.noise_scale(np.asarray(self._series))
+            warm = self._series.view(0, n)
+            self._scale = bocd.noise_scale(warm)
             self._bocd = bocd.BOCD(
                 hazard=self.hazard,
                 cp_threshold=self.cp_threshold,
-                mu0=self._series[0] / self._scale,
+                mu0=float(warm[0]) / self._scale,
                 beta0=1.0,
             )
-            for v in self._series[:-1]:
-                self._bocd.update(v / self._scale)
+            for v in warm[:-1]:
+                self._bocd.update(float(v) / self._scale)
         self._bocd.update(iter_time / self._scale)
         if (
             self.active_event is not None
@@ -212,12 +271,12 @@ class FalconDetect:
         if n < 3 or self._bocd.p_recent_change() <= self.cp_threshold:
             return None
         cp_idx = max(1, n - 1 - self._bocd.map_runlength())
-        cps = verify_change_points(
-            np.asarray(self._series), [cp_idx], window=self.verify_window
+        cp = _verify_ring(
+            self._series, cp_idx, window=self.verify_window,
+            threshold=VERIFY_THRESHOLD,
         )
-        if not cps:
+        if cp is None:
             return None
-        cp = cps[0]
         if cp.relative_change > 0:
             if self.active_event is None:
                 # Onset of a fail-slow: run profiling + validation.
@@ -327,6 +386,114 @@ class FalconDetect:
             t_healthy=cp.mean_before,
             t_slow=cp.mean_after,
             severity=severity,
+        )
+
+
+@dataclass(frozen=True)
+class FleetFlag:
+    """One verified change-point on one worker's stream."""
+
+    worker: int
+    change_point: ChangePoint
+
+
+@dataclass
+class FleetDetect:
+    """Fleet-tier screening over thousands of concurrent worker streams.
+
+    One :class:`repro.core.bocd.BatchedBOCD` advances every worker's
+    run-length recursion in lockstep per tick; only workers whose recent
+    change probability crosses the threshold are escalated to the exact
+    per-worker verification (the same +/-10 % rule FalconDetect applies),
+    reading that worker's trailing window from a bounded history ring.
+    Confirmed flags are returned for the caller to route into the per-job
+    pinpoint/validation path (:class:`FalconDetect` against that job's
+    cluster interface).
+
+    ``max_hypotheses`` bounds the shared run-length frontier so the per-tick
+    cost is flat in stream length; the escalation path re-checks flagged
+    workers exactly, so the screen only needs to be sensitive, not precise.
+    """
+
+    n_workers: int
+    hazard: float = 1.0 / 100.0
+    cp_threshold: float = bocd.DEFAULT_CP_THRESHOLD
+    verify_threshold: float = VERIFY_THRESHOLD
+    verify_window: int = 10
+    warmup: int = 8
+    min_gap: int = 3
+    recent_window: int = 2
+    history_cap: int = 128
+    max_hypotheses: int | None = 32
+
+    _history: MatrixRingBuffer = field(init=False)
+    _batch: bocd.BatchedBOCD | None = field(init=False, default=None)
+    _scale: np.ndarray | None = field(init=False, default=None)
+    _last_flag: np.ndarray = field(init=False)
+
+    def __post_init__(self) -> None:
+        self._history = MatrixRingBuffer(
+            max(self.history_cap, self.warmup, 4 * self.verify_window),
+            self.n_workers,
+        )
+        self._last_flag = np.full(self.n_workers, -(10**9), dtype=np.int64)
+
+    # ------------------------------------------------------------------
+    def tick(self, times: np.ndarray) -> list[FleetFlag]:
+        """Feed one iteration time per worker; returns verified flags."""
+        times = np.asarray(times, dtype=np.float64)
+        if times.shape != (self.n_workers,):
+            raise ValueError(
+                f"expected shape ({self.n_workers},), got {times.shape}"
+            )
+        self._history.append(times)
+        n = len(self._history)
+        if self._batch is None:
+            if n < self.warmup:
+                return []
+            warm = self._history.rows(0, n)
+            self._scale = bocd.noise_scale_batch(warm)
+            self._batch = bocd.BatchedBOCD(
+                self.n_workers,
+                hazard=self.hazard,
+                mu0=warm[0] / self._scale,
+                cp_threshold=self.cp_threshold,
+                max_hypotheses=self.max_hypotheses,
+            )
+            for row in warm[:-1]:
+                self._batch.update(row / self._scale)
+        self._batch.update(times / self._scale)
+        i = n - 1
+        if i <= self.recent_window:
+            return []
+        p = self._batch.p_recent_change(self.recent_window)
+        flagged = np.flatnonzero(p > self.cp_threshold)
+        if flagged.size == 0:
+            return []
+        run_lengths = self._batch.map_runlength()
+        out: list[FleetFlag] = []
+        for w in flagged:
+            idx = i - int(run_lengths[w])
+            if idx <= 0 or idx - self._last_flag[w] < self.min_gap:
+                continue
+            cp = self._verify(int(w), idx, n)
+            if cp is not None:
+                # Dedup on *confirmed* flags only: the first post-onset ticks
+                # may lack the 2 after-samples verification needs, and the
+                # detection burst must be allowed to retry until one sticks.
+                self._last_flag[w] = idx
+                out.append(FleetFlag(worker=int(w), change_point=cp))
+        return out
+
+    def _verify(self, worker: int, idx: int, n: int) -> ChangePoint | None:
+        w = self.verify_window
+        lo = max(0, idx - w, self._history.start)
+        hi = min(n, idx + w)
+        return _verify_windows(
+            self._history.column(worker, lo, idx),
+            self._history.column(worker, idx, hi),
+            idx,
+            self.verify_threshold,
         )
 
 

@@ -1,0 +1,87 @@
+"""Minimal stand-in for the ``hypothesis`` property-testing library.
+
+The test suite only uses ``given``/``settings`` and the ``floats``,
+``integers`` and ``lists`` strategies. When the real package is missing
+(this container does not ship it and nothing may be installed),
+``tests/conftest.py`` registers this module under ``sys.modules``; each
+``@given`` test then runs a deterministic sample of random examples drawn
+from the declared strategies, so the property tests keep exercising the
+code instead of erroring out at collection.
+"""
+from __future__ import annotations
+
+import inspect
+import random
+
+DEFAULT_MAX_EXAMPLES = 25
+
+
+class _Strategy:
+    def __init__(self, draw):
+        self._draw = draw
+
+    def example(self, rng: random.Random):
+        return self._draw(rng)
+
+
+class strategies:  # noqa: N801 - mirrors `hypothesis.strategies` module
+    @staticmethod
+    def floats(min_value=0.0, max_value=1.0, **_kw):
+        return _Strategy(lambda rng: rng.uniform(min_value, max_value))
+
+    @staticmethod
+    def integers(min_value=0, max_value=100, **_kw):
+        return _Strategy(lambda rng: rng.randint(min_value, max_value))
+
+    @staticmethod
+    def lists(elements: _Strategy, min_size=0, max_size=10, **_kw):
+        def draw(rng):
+            n = rng.randint(min_size, max_size)
+            return [elements.example(rng) for _ in range(n)]
+
+        return _Strategy(draw)
+
+
+def given(*arg_strategies, **kw_strategies):
+    def decorate(fn):
+        def wrapper(*args, **kwargs):
+            n = getattr(wrapper, "_stub_max_examples", DEFAULT_MAX_EXAMPLES)
+            # Deterministic per-test stream: repeatable across runs.
+            rng = random.Random(fn.__name__)
+            for _ in range(n):
+                drawn_args = [s.example(rng) for s in arg_strategies]
+                drawn_kw = {k: s.example(rng) for k, s in kw_strategies.items()}
+                fn(*args, *drawn_args, **kwargs, **drawn_kw)
+
+        wrapper.__name__ = fn.__name__
+        wrapper.__doc__ = fn.__doc__
+        # Zero-arg signature: pytest must not mistake drawn params for
+        # fixtures (real hypothesis hides them the same way).
+        wrapper.__signature__ = inspect.Signature()
+        wrapper._stub_max_examples = DEFAULT_MAX_EXAMPLES
+        return wrapper
+
+    return decorate
+
+
+def settings(max_examples: int | None = None, **_kw):
+    def decorate(fn):
+        if max_examples is not None:
+            fn._stub_max_examples = max_examples
+        return fn
+
+    return decorate
+
+
+class HealthCheck:  # pragma: no cover - referenced via settings kwargs only
+    all = ()
+
+
+def assume(condition) -> bool:  # pragma: no cover - parity helper
+    if not condition:
+        raise _UnsatisfiedAssumption()
+    return True
+
+
+class _UnsatisfiedAssumption(Exception):
+    pass

@@ -1,0 +1,20 @@
+"""Test-suite bootstrap.
+
+The property tests use ``hypothesis``; this container does not ship it and
+installing packages is not allowed. Register the deterministic stub from
+``tests/_hypothesis_stub.py`` so the suite still collects and the property
+tests run a fixed sample of random examples. When the real library is
+available it is used unchanged.
+"""
+import os
+import sys
+
+sys.path.insert(0, os.path.dirname(__file__))
+
+try:  # pragma: no cover - depends on environment
+    import hypothesis  # noqa: F401
+except ImportError:
+    import _hypothesis_stub
+
+    sys.modules["hypothesis"] = _hypothesis_stub
+    sys.modules["hypothesis.strategies"] = _hypothesis_stub.strategies

@@ -1,0 +1,314 @@
+"""Fleet fast-path equivalence tests.
+
+Pins the vectorized implementations to their scalar/loop references:
+
+* ``BatchedBOCD`` change-point indices match scalar ``BOCD`` per column
+  (uncapped mode is per-column exact; the capped shared frontier equals the
+  scalar cap rule at B=1).
+* The vectorized ``TrainingSimulator`` fast path matches the nested-loop
+  reference to 1e-9 across randomized placements, allocations and injected
+  slowdowns, and its memo invalidates on every mutation surface.
+"""
+import numpy as np
+import pytest
+
+from repro.cluster.injector import FailSlowInjector, Injection, InjectionKind
+from repro.cluster.simulator import JobSpec, TrainingSimulator
+from repro.cluster.spec import ClusterSpec, ModelSpec
+from repro.core import bocd
+from repro.core.detector import FalconDetect, FleetDetect
+from repro.core.ringbuf import MatrixRingBuffer, RingBuffer
+
+MODEL = ModelSpec(layers=24, hidden=4096, seq_len=2048, vocab=50257)
+
+
+# --------------------------------------------------------- batched BOCD
+def fleet_matrix(n_workers=24, n_ticks=400, seed=0):
+    """Per-column step changes at varied onsets/levels/jumps."""
+    x = np.empty((n_ticks, n_workers))
+    for col in range(n_workers):
+        r = np.random.default_rng(seed * 1000 + col)
+        lvl = 1.0 + 0.5 * (col % 3)
+        jump = 1.0 + 0.15 + 0.02 * (col % 7)
+        cp = (100 + 7 * col) % (n_ticks // 2) + 50
+        x[:, col] = np.concatenate([
+            r.normal(lvl, 0.01 * lvl, cp),
+            r.normal(lvl * jump, 0.01 * lvl * jump, n_ticks - cp),
+        ])
+    return x
+
+
+@pytest.mark.parametrize("seed", [0, 1, 2])
+def test_batched_indices_match_scalar_per_column(seed):
+    x = fleet_matrix(seed=seed)
+    batched = bocd.detect_change_points_batch(x)
+    for col in range(x.shape[1]):
+        assert batched[col] == bocd.detect_change_points(x[:, col]), col
+
+
+def test_batched_posterior_matches_scalar_uncapped():
+    x = fleet_matrix(n_workers=8, n_ticks=200)
+    scale = bocd.noise_scale_batch(x)
+    det = bocd.BatchedBOCD(8, mu0=x[0] / scale)
+    scalars = [
+        bocd.BOCD(mu0=float(x[0, c] / scale[c])) for c in range(8)
+    ]
+    for t in range(x.shape[0]):
+        det.update(x[t] / scale)
+        for c, s in enumerate(scalars):
+            s.update(float(x[t, c] / scale[c]))
+            live = np.isfinite(det._log_r[:, c])
+            assert np.array_equal(det._rl[live], s._rl), (t, c)
+            np.testing.assert_allclose(
+                det._log_r[live, c], s._log_r, atol=1e-9
+            )
+
+
+def test_capped_batched_equals_capped_scalar_at_b1():
+    """The shared truncation frontier degenerates to the scalar cap rule."""
+    r = np.random.default_rng(3)
+    x = np.concatenate([r.normal(1.0, 0.01, 250), r.normal(1.4, 0.014, 250)])
+    s = bocd.BOCD(mu0=float(x[0]), max_hypotheses=32)
+    b = bocd.BatchedBOCD(1, mu0=x[:1], max_hypotheses=32)
+    for t in range(x.size):
+        s.update(float(x[t]))
+        b.update(x[t : t + 1])
+        assert b.n_hypotheses <= 32
+        assert np.array_equal(b._rl, s._rl), t
+        np.testing.assert_allclose(b._log_r[:, 0], s._log_r, atol=1e-9)
+
+
+def test_scalar_cap_bounds_hypotheses():
+    det = bocd.BOCD(hazard=0.01, mu0=1.0, max_hypotheses=24)
+    r = np.random.default_rng(1)
+    for _ in range(800):
+        det.update(float(r.normal(1.0, 0.01)))
+        assert det._log_r.size <= 24
+    # detection still works through the cap
+    x = np.concatenate([r.normal(1.0, 0.01, 80), r.normal(1.5, 0.015, 80)])
+    scale = bocd.noise_scale(x)
+    det2 = bocd.BOCD(mu0=float(x[0] / scale), max_hypotheses=24)
+    fired = []
+    for i, xi in enumerate(x):
+        det2.update(float(xi / scale))
+        if i > 2 and det2.p_recent_change() > 0.9:
+            fired.append(i - det2.map_runlength())
+    assert any(abs(i - 80) <= 3 for i in fired)
+
+
+def test_noise_scale_batch_matches_scalar():
+    x = fleet_matrix(n_workers=6, n_ticks=100)
+    batch = bocd.noise_scale_batch(x)
+    for c in range(6):
+        assert batch[c] == pytest.approx(bocd.noise_scale(x[:, c]), rel=0, abs=0)
+
+
+# ----------------------------------------------------------- FleetDetect
+def test_fleet_detect_flags_exactly_the_stragglers():
+    n, t_total, onset = 256, 160, 100
+    rng = np.random.default_rng(5)
+    x = rng.normal(1.0, 0.01, (t_total, n))
+    bad = sorted(rng.choice(n, 6, replace=False).tolist())
+    x[onset:, bad] *= 1.35
+    fd = FleetDetect(n_workers=n)
+    hits = {}
+    for t in range(t_total):
+        for flag in fd.tick(x[t]):
+            hits.setdefault(flag.worker, flag.change_point)
+    assert sorted(hits) == bad
+    for cp in hits.values():
+        assert abs(cp.index - onset) <= 5
+        assert cp.relative_change > 0.2
+
+
+def test_fleet_detect_no_false_flags_on_healthy_fleet():
+    rng = np.random.default_rng(11)
+    fd = FleetDetect(n_workers=128)
+    flags = [f for t in range(200) for f in fd.tick(rng.normal(1.0, 0.01, 128))]
+    assert flags == []
+
+
+def test_fleet_detect_flags_once_per_change():
+    rng = np.random.default_rng(7)
+    x = rng.normal(1.0, 0.01, (200, 32))
+    x[80:, 3] *= 1.5
+    fd = FleetDetect(n_workers=32)
+    flags = [f for t in range(200) for f in fd.tick(x[t])]
+    assert len([f for f in flags if f.worker == 3]) == 1
+
+
+# ------------------------------------------------------------ ring buffer
+def test_ring_buffer_absolute_indexing():
+    rb = RingBuffer(4)
+    for i in range(10):
+        rb.append(float(i))
+    assert len(rb) == 10
+    assert rb.start == 6
+    assert rb.view(6, 10).tolist() == [6.0, 7.0, 8.0, 9.0]
+    assert rb.view(0, 8).tolist() == [6.0, 7.0]  # clamped to retained
+    assert rb.last(2).tolist() == [8.0, 9.0]
+    assert rb[7] == 7.0
+    with pytest.raises(IndexError):
+        rb[5]
+
+
+def test_matrix_ring_buffer_columns():
+    mb = MatrixRingBuffer(3, 2)
+    for i in range(5):
+        mb.append(np.array([i, 10 + i], dtype=float))
+    assert mb.column(0, 2, 5).tolist() == [2.0, 3.0, 4.0]
+    assert mb.column(1, 0, 5).tolist() == [12.0, 13.0, 14.0]
+    assert mb.rows(3).shape == (2, 2)
+
+
+def test_falcon_detect_bounded_history_still_detects():
+    """Detection works far beyond the ring capacity (O(1) per observe)."""
+    class _Stub:  # pinpoint sees no groups -> CPU_CONTENTION root cause
+        def profile_groups(self):
+            return {}
+        def group_ranks(self, g):
+            return []
+        def benchmark_compute(self, ranks):
+            return {}
+        def measure_link(self, pair):
+            return 0.0
+    det = FalconDetect(cluster=_Stub(), history_cap=128)
+    rng = np.random.default_rng(0)
+    event = None
+    for i in range(2000):
+        t = 1.0 if i < 1500 else 1.6
+        t *= float(rng.normal(1, 0.004))
+        event = det.observe(t, float(i)) or event
+    assert det._series.capacity == 128  # bounded storage
+    assert event is not None
+    assert event.t_slow > event.t_healthy * 1.4
+
+
+# ------------------------------------------------- vectorized simulator
+def random_sim(rng):
+    tp = int(rng.choice([1, 2, 4]))
+    pp = int(rng.choice([1, 2, 4]))
+    dp = int(rng.choice([1, 2, 4, 8]))
+    n = tp * dp * pp
+    gpn = int(rng.choice([2, 4, 8]))
+    nodes = max(1, (n + gpn - 1) // gpn)
+    spec = ClusterSpec(n_nodes=nodes, gpus_per_node=gpn)
+    if n > spec.n_devices:
+        return None
+    job = JobSpec(model=MODEL, tp=tp, dp=dp, pp=pp, micro_batches=4 * dp)
+    sim = TrainingSimulator(cluster=spec, job=job)
+    sim.apply_placement(rng.permutation(n).tolist())
+    if dp > 1:
+        alloc = [4] * dp
+        alloc[0] += 2
+        alloc[1] -= 2
+        sim.set_allocation(alloc)
+    for _ in range(int(rng.integers(0, 4))):
+        kind = rng.choice(["gpu", "host", "link", "nic"])
+        if kind == "gpu":
+            sim.state.devices[int(rng.integers(n))].compute_speed = float(
+                rng.uniform(0.3, 0.9)
+            )
+        elif kind == "host":
+            sim.state.devices[int(rng.integers(n))].host_speed = float(
+                rng.uniform(0.5, 0.9)
+            )
+        elif kind == "link":
+            a, b = rng.choice(spec.n_devices, 2, replace=False)
+            sim.state.degrade_link(int(a), int(b), float(rng.uniform(0.05, 0.8)))
+        else:
+            sim.state.degrade_nic(int(rng.integers(nodes)), float(rng.uniform(0.2, 0.8)))
+    return sim
+
+
+def test_vectorized_simulator_matches_reference_randomized():
+    rng = np.random.default_rng(42)
+    tried = 0
+    while tried < 40:
+        sim = random_sim(rng)
+        if sim is None:
+            continue
+        tried += 1
+        fast, ref = sim.iteration_time(), sim.iteration_time_reference()
+        assert fast == pytest.approx(ref, rel=1e-9, abs=0.0)
+        assert sim.profile_groups() == sim.profile_groups_reference()
+        assert sim.per_microbatch_times() == pytest.approx(
+            sim.per_microbatch_times_reference(), rel=1e-9
+        )
+
+
+def make_sim(tp=2, dp=2, pp=2, nodes=2, gpn=4, micro_batches=8):
+    job = JobSpec(model=MODEL, tp=tp, dp=dp, pp=pp, micro_batches=micro_batches)
+    return TrainingSimulator(
+        cluster=ClusterSpec(n_nodes=nodes, gpus_per_node=gpn), job=job
+    )
+
+
+def test_memo_invalidates_on_every_mutation_surface():
+    sim = make_sim()
+
+    def check():
+        assert sim.iteration_time() == pytest.approx(
+            sim.iteration_time_reference(), rel=1e-12
+        )
+
+    check()
+    sim.state.devices[0].compute_speed = 0.5
+    check()
+    sim.state.devices[1].host_speed = 0.7
+    check()
+    sim.state.degrade_link(0, 4, 0.2)
+    check()
+    sim.state.degrade_nic(1, 0.5)
+    check()
+    sim.state.restore_link(0, 4)
+    check()
+    sim.state.restore_nic(1)
+    check()
+    sim.state.reset()
+    check()
+    sim.set_allocation([6, 2])
+    check()
+    sim.apply_placement(list(reversed(range(sim.job.n_devices))))
+    check()
+    sim.placement = list(range(sim.job.n_devices))  # direct assignment
+    check()
+    sim.restart()
+    check()
+
+
+def test_memoized_healthy_steps_hit_cache():
+    sim = make_sim()
+    inj = FailSlowInjector([
+        Injection(start=5.0, duration=10.0, kind=InjectionKind.GPU_SLOW,
+                  target=(0,), severity=0.5),
+    ])
+    inj.apply(sim.state, 0.0)
+    t0 = sim.iteration_time()
+    v0 = sim.state.version
+    inj.apply(sim.state, 1.0)  # same (empty) active set: no reset, no bump
+    assert sim.state.version == v0
+    assert sim.iteration_time() == t0
+    inj.apply(sim.state, 6.0)  # episode starts: state changes
+    assert sim.state.version != v0
+    t1 = sim.iteration_time()
+    assert t1 > t0
+    v1 = sim.state.version
+    inj.apply(sim.state, 7.0)  # steady episode: no re-apply
+    assert sim.state.version == v1
+    inj.apply(sim.state, 20.0)  # episode over: reset back to healthy
+    assert sim.iteration_time() == pytest.approx(t0)
+
+
+def test_external_mutation_between_applies_is_not_lost():
+    """The injector's steady-state skip must notice third-party mutations."""
+    sim = make_sim()
+    inj = FailSlowInjector([
+        Injection(start=0.0, duration=100.0, kind=InjectionKind.GPU_SLOW,
+                  target=(0,), severity=0.5),
+    ])
+    inj.apply(sim.state, 1.0)
+    t_ep = sim.iteration_time()
+    sim.state.devices[0].compute_speed = 1.0  # external meddling
+    inj.apply(sim.state, 2.0)  # version moved: full reset + re-apply
+    assert sim.iteration_time() == pytest.approx(t_ep)

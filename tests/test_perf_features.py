@@ -210,6 +210,26 @@ def test_head_masks_padding_columns():
     assert np.isfinite(float(loss))
 
 
+# ------------------------------------------------- benchmark smoke pass
+def test_benchmark_suite_smoke_pass():
+    """`benchmarks.run --smoke` executes every registered benchmark at toy
+    scale — perf entry points that never run, silently rot. Subprocess so the
+    suite's JAX compilations stay out of this interpreter."""
+    import os
+    import subprocess
+    import sys
+
+    repo = os.path.join(os.path.dirname(__file__), "..")
+    env = dict(os.environ)
+    env["PYTHONPATH"] = os.path.join(repo, "src")
+    out = subprocess.run(
+        [sys.executable, "-m", "benchmarks.run", "--smoke"],
+        cwd=repo, env=env, capture_output=True, text=True, timeout=1200,
+    )
+    assert out.returncode == 0, out.stdout[-3000:] + out.stderr[-3000:]
+    assert "ALL BENCHMARKS COMPLETED" in out.stdout
+
+
 # ------------------------------------------------------- FSDP serve specs
 def test_fsdp_specs_add_data_axis_to_large_params():
     """Subprocess (needs >1 host device): large params gain a DP axis,

@@ -119,6 +119,14 @@ def test_adaptive_train_step_multidevice():
     import subprocess
     import sys
 
+    from repro import compat
+
+    if not compat.HAS_MODERN_SHARD_MAP:
+        pytest.skip(
+            "partial-manual shard_map hard-aborts in this jax's XLA "
+            "(hlo_sharding_util IsManualSubgroup check; see ROADMAP)"
+        )
+
     env = dict(os.environ)
     env["PYTHONPATH"] = os.path.join(os.path.dirname(__file__), "..", "src")
     env.pop("XLA_FLAGS", None)
