@@ -1,0 +1,74 @@
+"""Control-plane overhead — per-tick cost at 1-64 registered jobs.
+
+Each registered job replays a labeled characterization trace
+(:class:`repro.controlplane.TraceReplayAdapter` over
+``cluster.traces.sample_campaign``) through the fleet screening path
+(:meth:`ControlPlane.tick`): one BatchedBOCD advances every job's stream per
+tick, confirmed flags escalate into per-job pinpointing. Reported: wall
+time per tick and per job-tick as the registry grows — the fleet fast
+path's promise is that per-tick cost stays near-flat in the number of
+registered jobs.
+"""
+from __future__ import annotations
+
+import time
+
+import numpy as np
+
+from benchmarks.common import print_table, save_rows
+from repro.cluster.traces import sample_campaign
+from repro.controlplane import ControlPlane, Diagnosis, Flag, TraceReplayAdapter
+
+N_ITERS = 400
+FLEET_SIZES = (1, 4, 16, 64)
+
+
+def _measure(n_jobs: int, n_iters: int, seed: int = 0) -> dict:
+    traces = sample_campaign(
+        seed=seed, n_jobs=n_jobs, failslow_rate=0.4, n_iters=n_iters
+    )
+    plane = ControlPlane()
+    adapters = []
+    for i, trace in enumerate(traces):
+        adapter = TraceReplayAdapter(trace)
+        plane.register_job(f"job{i}", adapter)
+        adapters.append(adapter)
+
+    job_ids = [j.job_id for j in plane.jobs]
+    ticks = 0
+    t0 = time.monotonic()
+    for _ in range(n_iters):
+        times = np.array([a.next_observation() for a in adapters])
+        plane.tick(dict(zip(job_ids, times.tolist(), strict=True)), float(ticks))
+        ticks += 1
+    elapsed = time.monotonic() - t0
+
+    flags = sum(isinstance(e, Flag) for e in plane.events)
+    diagnosed = {
+        e.job_id for e in plane.events
+        if isinstance(e, Diagnosis) and not e.resolved
+    }
+    true_failslow = sum(t.has_failslow for t in traces)
+    return {
+        "n_jobs": n_jobs,
+        "ticks": ticks,
+        "total_s": round(elapsed, 3),
+        "per_tick_us": round(1e6 * elapsed / ticks, 1),
+        "per_job_tick_us": round(1e6 * elapsed / (ticks * n_jobs), 2),
+        "flags": flags,
+        "jobs_diagnosed": len(diagnosed),
+        "jobs_with_failslow": true_failslow,
+    }
+
+
+def run(smoke: bool = False) -> list[dict]:
+    sizes = (1, 4) if smoke else FLEET_SIZES
+    # sample_campaign needs headroom for episode onsets (>=40+80 iters).
+    n_iters = 160 if smoke else N_ITERS
+    rows = [_measure(n, n_iters) for n in sizes]
+    save_rows("controlplane_overhead", rows)
+    return rows
+
+
+if __name__ == "__main__":
+    print_table("Control plane — per-tick overhead vs registered jobs", run())

@@ -3,7 +3,11 @@
 A (16DP, 4PP) 64-GPU job (paper §7.5) with a mixed injected fail-slow trace
 (two communication + several computation episodes) is driven through the
 *real* FalconTrainer: JAX training steps update a reduced GPT2-family model
-while the cluster performance model supplies iteration times. Three runs:
+while the cluster performance model supplies iteration times. Detection and
+mitigation run through :mod:`repro.controlplane` (the trainer registers its
+performance model as a job; strategies dispatch through the registry) —
+equivalence with the pre-control-plane hand-wired ladder on exactly this
+scenario is pinned by tests/test_controlplane.py. Three runs:
 
   * healthy       — no injections,
   * fail-slow     — injections, FALCON off,

@@ -32,11 +32,15 @@ def _simulate(dp: int, slow_devices: list[int], severity: float) -> dict:
     injector.apply(sim.state, 1.0)
     t_none = sim.iteration_time()
 
-    # S2: profile per-DP-group micro-batch times, redistribute.
-    from repro.core.microbatch import solve_allocation
+    # S2 through the control-plane strategy: profile per-DP-group
+    # micro-batch times, redistribute (same solver the trainer dispatches).
+    from repro.controlplane.strategies import MicroBatchStrategy, MitigationContext
+    from repro.core.events import FailSlowEvent
 
-    counts = solve_allocation(sim.per_microbatch_times(), job.micro_batches)
-    sim.set_allocation(counts)
+    outcome = MicroBatchStrategy().apply(
+        MitigationContext(adapter=sim, event=FailSlowEvent(start_time=0.0))
+    )
+    counts = outcome.detail["allocation"]
     t_s2 = sim.iteration_time()
     slow_none = t_none / t_healthy
     slow_s2 = t_s2 / t_healthy

@@ -13,12 +13,9 @@ traffic so fewer stage rings touch congested links (paper: 2 slow links over
 """
 from __future__ import annotations
 
-import numpy as np
-
 from benchmarks.common import print_table, save_rows
 from repro.cluster.simulator import JobSpec, TrainingSimulator
 from repro.cluster.spec import ClusterSpec, ModelSpec
-from repro.core import topology as topo_lib
 
 MODEL = ModelSpec(layers=32, hidden=4096, seq_len=2048, vocab=50257)
 SEVERITIES = {"weak": 0.3, "medium": 0.6, "severe": 0.85}
@@ -40,23 +37,17 @@ def _interleaved(job: JobSpec) -> list[int]:
 
 
 def _apply_s3(sim: TrainingSimulator) -> list[int]:
-    job = sim.job
-    m = job.model
-    traffic = topo_lib.build_traffic_matrix(
-        job.topology,
-        comm_tp=m.comm_tp_bytes(job.tp, job.pp, job.micro_batches),
-        comm_dp=m.comm_dp_bytes(job.tp, job.pp),
-        comm_pp=m.comm_pp_bytes(job.micro_batches),
+    """S3 through the control-plane strategy (QAP local search; the event
+    carries no pinpointed components, so the general adjustment path runs).
+    The strategy re-measures before committing, so a non-improving plan is
+    reverted instead of applied blindly."""
+    from repro.controlplane.strategies import MitigationContext, TopologyStrategy
+    from repro.core.events import FailSlowEvent
+
+    TopologyStrategy(max_rounds=32).apply(
+        MitigationContext(adapter=sim, event=FailSlowEvent(start_time=0.0))
     )
-    n = job.n_devices
-    bw = np.full((n, n), np.inf)
-    for i in range(n):
-        for j in range(n):
-            if i != j:
-                bw[i, j] = sim.state.link_bw(sim.placement[i], sim.placement[j])
-    perm = topo_lib.plan_topology_adjustment(traffic, bw, max_rounds=32)
-    sim.apply_placement(perm)
-    return perm
+    return list(sim.placement)
 
 
 def _ring_edges(sim: TrainingSimulator, stage: int) -> list[tuple[int, int]]:

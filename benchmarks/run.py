@@ -33,6 +33,7 @@ SUITE = [
     ("end_to_end", "Fig. 20 / Table 7 — 64-GPU end-to-end"),
     ("roofline", "Roofline — dry-run derived terms (deliverable g)"),
     ("fleet_scale", "Fleet-scale fast path — batched detection + vector sim"),
+    ("controlplane_overhead", "Control plane — per-tick overhead at 1-64 jobs"),
 ]
 
 

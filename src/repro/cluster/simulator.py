@@ -381,10 +381,28 @@ class TrainingSimulator:
         a, b = pair
         return self.cluster.p2p_payload / self.state.link_bw(a, b)
 
+    def measure_links(self, pairs: np.ndarray) -> np.ndarray:
+        """Batched :meth:`measure_link` over an (k, 2) pair array.
+
+        Rides on :meth:`ClusterState.link_bw_many`, so one call validates
+        every ring pass of every suspicious group — the detector's
+        vectorized validation sweep."""
+        pairs = np.asarray(pairs, dtype=np.int64).reshape(-1, 2)
+        return self.cluster.p2p_payload / self.state.link_bw_many(
+            pairs[:, 0], pairs[:, 1]
+        )
+
     def healthy_link_time(self, pair: tuple[int, int]) -> float:
         """Expected healthy time for this link class (fabric is known)."""
         a, b = pair
         return self.cluster.p2p_payload / self.cluster.base_link_bw(a, b)
+
+    def healthy_link_times(self, pairs: np.ndarray) -> np.ndarray:
+        """Batched :meth:`healthy_link_time` over an (k, 2) pair array."""
+        pairs = np.asarray(pairs, dtype=np.int64).reshape(-1, 2)
+        return self.cluster.p2p_payload / self.cluster.base_link_bw_many(
+            pairs[:, 0], pairs[:, 1]
+        )
 
     def healthy_compute_time(self) -> float:
         """Reference GEMM time on a healthy device."""

@@ -85,6 +85,18 @@ class ClusterSpec:
             return self.intra_node_bw
         return self.inter_node_bw
 
+    def base_link_bw_many(self, a: np.ndarray, b: np.ndarray) -> np.ndarray:
+        """Vectorized :meth:`base_link_bw` (keep the two in lockstep: the
+        detector's batched and scalar healthy-reference paths must agree)."""
+        a = np.asarray(a, dtype=np.int64)
+        b = np.asarray(b, dtype=np.int64)
+        bw = np.where(
+            a // self.gpus_per_node == b // self.gpus_per_node,
+            self.intra_node_bw,
+            self.inter_node_bw,
+        )
+        return np.where(a == b, np.inf, bw)
+
 
 class DeviceState:
     """Dynamic per-device health (multipliers; 1.0 = healthy).

@@ -1,0 +1,31 @@
+"""FALCON control plane — the public API of the detection/mitigation stack.
+
+    plane = ControlPlane()
+    plane.register_job("job0", TrainingSimulator(...), hardware=[...])
+    events = plane.tick({"job0": iter_time}, now)   # fleet screening path
+    events = plane.observe("job0", iter_time, now)  # exact per-job path
+
+See docs/control_plane.md for the event pipeline, the cluster-adapter
+protocol, and how to register a custom mitigation strategy.
+"""
+from repro.controlplane.adapters import ClusterAdapter, TraceReplayAdapter  # noqa: F401
+from repro.controlplane.events import (  # noqa: F401
+    ControlEvent,
+    Diagnosis,
+    Flag,
+    MitigationAction,
+    MitigationResult,
+    Observation,
+)
+from repro.controlplane.plane import ControlPlane, JobHandle  # noqa: F401
+from repro.controlplane.strategies import (  # noqa: F401
+    CkptRestartStrategy,
+    IgnoreStrategy,
+    MicroBatchStrategy,
+    MitigationContext,
+    MitigationStrategy,
+    StrategyOutcome,
+    StrategyRegistry,
+    TopologyStrategy,
+    default_registry,
+)

@@ -1,0 +1,89 @@
+"""Typed events of the FALCON control plane.
+
+The control plane's public contract is an event pipeline
+
+    Observation -> Flag -> Diagnosis -> MitigationAction -> MitigationResult
+
+extending the detection-layer types in :mod:`repro.core.events`: a
+:class:`Flag` wraps the verified :class:`~repro.core.events.ChangePoint` the
+fleet screen produced, a :class:`Diagnosis` wraps the pinpointed
+:class:`~repro.core.events.FailSlowEvent`, and mitigation events carry the
+:data:`~repro.core.events.StrategyKey` that was dispatched through the
+strategy registry. Every event is timestamped on the *job's* clock (the
+trainer's simulated wall clock, a trace's replay cursor, or real
+``time.monotonic`` on hardware) so a control-plane log is coherent across
+sources — see docs/control_plane.md.
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass, field
+
+from repro.core.events import ChangePoint, FailSlowEvent, StrategyKey
+
+
+@dataclass(frozen=True)
+class ControlEvent:
+    """Base class: everything the control plane emits names a job + time."""
+
+    job_id: str
+    time: float
+
+
+@dataclass(frozen=True)
+class Observation(ControlEvent):
+    """One iteration-time sample ingested for a registered job."""
+
+    iter_time: float
+    step: int = 0
+
+
+@dataclass(frozen=True)
+class Flag(ControlEvent):
+    """A verified change-point from the fleet screen (pre-pinpoint).
+
+    Emitted only on the screening path (:meth:`ControlPlane.tick`); the
+    exact per-job path verifies inside ``FalconDetect.observe`` and emits a
+    :class:`Diagnosis` directly.
+    """
+
+    change_point: ChangePoint
+
+
+@dataclass(frozen=True)
+class Diagnosis(ControlEvent):
+    """A pinpointed (or deduped) fail-slow incident for one job.
+
+    ``components_global`` are the job's slow components translated through
+    its hardware map (shared-hardware identity across jobs);
+    ``deduped_from`` names the job whose pinpoint this diagnosis reuses —
+    ``None`` when this job ran profiling + validation itself.
+    """
+
+    event: FailSlowEvent
+    components_global: tuple[str, ...] = ()
+    deduped_from: str | None = None
+    resolved: bool = False
+
+
+@dataclass(frozen=True)
+class MitigationAction(ControlEvent):
+    """The planner escalated: dispatch ``strategy`` for ``event`` now."""
+
+    strategy: StrategyKey
+    event: FailSlowEvent
+
+
+@dataclass(frozen=True)
+class MitigationResult(ControlEvent):
+    """Outcome of one strategy dispatch (or a relief rebalance).
+
+    ``overhead`` is the one-off action cost the caller must charge to the
+    job's wall clock; ``detail`` carries strategy-specific payload (e.g. the
+    new micro-batch allocation) for the caller's runtime to mirror.
+    """
+
+    strategy: StrategyKey | None
+    applied: bool
+    overhead: float = 0.0
+    kind: str = "mitigate"  # "mitigate" | "relief"
+    detail: dict = field(default_factory=dict)

@@ -1,0 +1,387 @@
+"""ControlPlane — the unified monitor/detect/pinpoint/plan/mitigate loop.
+
+One :class:`ControlPlane` owns any number of registered jobs and drives the
+FALCON pipeline (paper §4-§5) for each of them through typed events
+(:mod:`repro.controlplane.events`). Two ingestion paths:
+
+* :meth:`ControlPlane.observe` — exact per-job path: the job's
+  :class:`~repro.core.detector.FalconDetect` runs its own BOCD + verification
+  on every sample. This is what :class:`repro.train.trainer.FalconTrainer`
+  drives; it reproduces the pre-control-plane trainer behavior decision for
+  decision (equivalence-tested on the 64-GPU end-to-end scenario).
+* :meth:`ControlPlane.tick` — fleet path: one
+  :class:`~repro.core.detector.FleetDetect` screens every registered job's
+  stream per tick (shared batched-BOCD frontier, flat per-tick cost) and
+  routes confirmed :class:`~repro.core.detector.FleetFlag`s into that job's
+  ``FalconDetect`` pinpointing. Jobs sharing hardware (the ``hardware``
+  registration map) dedupe diagnoses: the first flagged job runs profiling +
+  validation, later flags whose hardware overlaps an active diagnosis adopt
+  its translated root cause instead of re-validating.
+
+Mitigation is planned by the per-event ski-rental
+:class:`~repro.core.planner.MitigationPlanner` and dispatched through the
+job's :class:`~repro.controlplane.strategies.StrategyRegistry`, so new
+strategies plug in without touching this orchestrator.
+"""
+from __future__ import annotations
+
+from collections import deque
+from collections.abc import Mapping, Sequence
+from dataclasses import dataclass, field
+
+import numpy as np
+
+from repro.core.detector import FalconDetect, FleetDetect
+from repro.core.events import FailSlowEvent
+from repro.core.planner import MitigationPlanner
+from repro.controlplane.events import (
+    ControlEvent,
+    Diagnosis,
+    Flag,
+    MitigationAction,
+    MitigationResult,
+    Observation,
+)
+from repro.controlplane.strategies import (
+    MitigationContext,
+    StrategyRegistry,
+    default_registry,
+)
+
+
+@dataclass
+class JobHandle:
+    """One registered job: adapter + detector + strategy table + planner."""
+
+    job_id: str
+    adapter: object
+    detector: FalconDetect
+    registry: StrategyRegistry
+    #: per-job overrides merged over the registry's default overheads
+    overheads: dict = field(default_factory=dict)
+    injector: object | None = None
+    #: local device rank -> global hardware id (cross-job dedupe identity);
+    #: None opts the job out of dedupe
+    hardware: tuple[str, ...] | None = None
+    planner: MitigationPlanner | None = None
+    steps: int = field(default=0)
+    _ticks_active: int = field(default=0)
+    #: global hardware id -> local rank (built once; hardware is immutable)
+    _hw_inverse: dict[str, int] | None = field(default=None, repr=False)
+
+    def __post_init__(self) -> None:
+        if self.hardware is not None:
+            self._hw_inverse = {h: r for r, h in enumerate(self.hardware)}
+
+    def effective_overheads(self) -> dict:
+        return self.registry.overheads(self.overheads)
+
+
+class ControlPlane:
+    """Multi-job FALCON orchestrator over typed control-plane events."""
+
+    def __init__(
+        self, fleet_kwargs: dict | None = None, max_events: int = 65536
+    ) -> None:
+        self._jobs: dict[str, JobHandle] = {}
+        self._fleet: FleetDetect | None = None
+        self._fleet_kwargs = dict(fleet_kwargs or {})
+        #: job_id -> latest unresolved Diagnosis (the cross-job dedupe table)
+        self._active_diag: dict[str, Diagnosis] = {}
+        #: event log in emission order, bounded like the Monitor's comm log
+        #: (a fleet ticking forever must not grow memory without bound);
+        #: oldest events rotate out of ``events`` / ``diagnoses()`` first
+        self.events: deque[ControlEvent] = deque(maxlen=max_events)
+
+    # -- registry of jobs ----------------------------------------------
+    def register_job(
+        self,
+        job_id: str,
+        adapter,
+        *,
+        detector: FalconDetect | None = None,
+        registry: StrategyRegistry | None = None,
+        overheads: dict | None = None,
+        injector=None,
+        hardware: Sequence[str] | None = None,
+    ) -> JobHandle:
+        if job_id in self._jobs:
+            raise ValueError(f"job {job_id!r} already registered")
+        if self._fleet is not None:
+            raise RuntimeError(
+                "register every job before the first tick(): the fleet "
+                "screen's stream count is fixed at warmup"
+            )
+        job = JobHandle(
+            job_id=job_id,
+            adapter=adapter,
+            detector=detector or FalconDetect(cluster=adapter),
+            registry=registry or default_registry(),
+            overheads=dict(overheads or {}),
+            injector=injector,
+            hardware=tuple(hardware) if hardware is not None else None,
+        )
+        self._jobs[job_id] = job
+        return job
+
+    @property
+    def jobs(self) -> list[JobHandle]:
+        return list(self._jobs.values())
+
+    def job(self, job_id: str) -> JobHandle:
+        return self._jobs[job_id]
+
+    # -- exact per-job path --------------------------------------------
+    def observe(
+        self, job_id: str, iter_time: float, now: float
+    ) -> list[ControlEvent]:
+        """Feed one iteration time through the full per-job pipeline.
+
+        Returns the events emitted for this sample; the caller charges any
+        :class:`MitigationResult.overhead` to the job's wall clock.
+        """
+        job = self._jobs[job_id]
+        out: list[ControlEvent] = [
+            Observation(
+                job_id=job_id, time=now, iter_time=iter_time, step=job.steps
+            )
+        ]
+        job.steps += 1
+        had_active = job.detector.active_event is not None
+        new_event = job.detector.observe(iter_time, now)
+        out += self._after_detection(job, new_event, had_active, iter_time, now)
+        self.events += out
+        return out
+
+    # -- fleet screening path ------------------------------------------
+    def tick(
+        self, times: Mapping[str, float] | Sequence[float] | np.ndarray,
+        now: float,
+    ) -> list[ControlEvent]:
+        """Advance every registered job one tick through the fleet screen.
+
+        ``times`` is one iteration time per job — a mapping keyed by job id,
+        or a sequence in registration order.
+        """
+        jobs = list(self._jobs.values())
+        if isinstance(times, Mapping):
+            vec = np.array([times[j.job_id] for j in jobs], dtype=np.float64)
+        else:
+            vec = np.asarray(times, dtype=np.float64)
+        if vec.shape != (len(jobs),):
+            raise ValueError(f"expected {len(jobs)} times, got {vec.shape}")
+        if self._fleet is None:
+            self._fleet = FleetDetect(n_workers=len(jobs), **self._fleet_kwargs)
+        flags = {f.worker: f for f in self._fleet.tick(vec)}
+
+        out: list[ControlEvent] = []
+        for w, job in enumerate(jobs):
+            iter_time = float(vec[w])
+            out.append(
+                Observation(
+                    job_id=job.job_id, time=now, iter_time=iter_time,
+                    step=job.steps,
+                )
+            )
+            job.steps += 1
+            had_active = job.detector.active_event is not None
+            new_event: FailSlowEvent | None = None
+            deduped_from: str | None = None
+            flag = flags.get(w)
+            if flag is not None:
+                cp = flag.change_point
+                out.append(Flag(job_id=job.job_id, time=now, change_point=cp))
+                source = None
+                if cp.relative_change > 0 and job.detector.active_event is None:
+                    source = self._dedupe_source(job)
+                if source is not None:
+                    event = self._adopt(job, source, cp, now)
+                    if event is not None:
+                        new_event, deduped_from = event, source.job_id
+                if new_event is None and deduped_from is None:
+                    new_event = job.detector.ingest_changepoint(cp, now)
+            elif job.detector.active_event is not None:
+                # No flag while an event is active: mitigation may have
+                # flattened the signal — periodic O(1) re-validation is the
+                # only way to see the fault's relief (or a compound pile-on).
+                job._ticks_active += 1
+                if job._ticks_active % job.detector.revalidate_every == 0:
+                    new_event = job.detector.revalidate(
+                        now, iter_time=iter_time, index=job.steps - 1
+                    )
+            out += self._after_detection(
+                job, new_event, had_active, iter_time, now,
+                deduped_from=deduped_from,
+            )
+        self.events += out
+        return out
+
+    # -- shared post-detection pipeline --------------------------------
+    def _after_detection(
+        self,
+        job: JobHandle,
+        new_event: FailSlowEvent | None,
+        had_active: bool,
+        iter_time: float,
+        now: float,
+        deduped_from: str | None = None,
+    ) -> list[ControlEvent]:
+        out: list[ControlEvent] = []
+        if new_event is not None:
+            diag = Diagnosis(
+                job_id=job.job_id,
+                time=now,
+                event=new_event,
+                components_global=self._globalize(job, new_event.components),
+                deduped_from=deduped_from,
+            )
+            out.append(diag)
+            self._active_diag[job.job_id] = diag
+            job.planner = job.registry.make_planner(new_event, job.overheads)
+        active = job.detector.active_event
+        if active is None:
+            if had_active:
+                out += self._relief(job, now)
+            job.planner = None
+            self._active_diag.pop(job.job_id, None)
+        elif job.planner is not None:
+            strategy = job.planner.update(current_time=iter_time)
+            if strategy is not None:
+                out.append(
+                    MitigationAction(
+                        job_id=job.job_id, time=now, strategy=strategy,
+                        event=active,
+                    )
+                )
+                outcome = job.registry.dispatch(
+                    strategy,
+                    MitigationContext(
+                        adapter=job.adapter, event=active, now=now,
+                        job_id=job.job_id, injector=job.injector,
+                    ),
+                )
+                out.append(
+                    MitigationResult(
+                        job_id=job.job_id,
+                        time=now,
+                        strategy=strategy,
+                        applied=outcome.applied,
+                        overhead=job.planner.overheads.get(strategy, 0.0),
+                        detail=outcome.detail,
+                    )
+                )
+        return out
+
+    def _relief(self, job: JobHandle, now: float) -> list[ControlEvent]:
+        """The active event resolved: emit the closing diagnosis and let
+        every registered strategy undo residual skew (S2 re-balances the
+        micro-batch split for the recovered cluster)."""
+        out: list[ControlEvent] = []
+        closed = job.detector.history[-1] if job.detector.history else None
+        if closed is not None:
+            out.append(
+                Diagnosis(
+                    job_id=job.job_id,
+                    time=now,
+                    event=closed,
+                    components_global=self._globalize(job, closed.components),
+                    resolved=True,
+                )
+            )
+        ctx = MitigationContext(
+            adapter=job.adapter, event=closed, now=now, job_id=job.job_id,
+            injector=job.injector,
+        )
+        for key, outcome in job.registry.relieve(ctx):
+            out.append(
+                MitigationResult(
+                    job_id=job.job_id, time=now, strategy=key,
+                    applied=outcome.applied, kind="relief",
+                    detail=outcome.detail,
+                )
+            )
+        return out
+
+    # -- cross-job hardware dedupe --------------------------------------
+    def _globalize(
+        self, job: JobHandle, components: Sequence[str]
+    ) -> tuple[str, ...]:
+        """Translate job-local component ids through the hardware map."""
+        if job.hardware is None:
+            return ()
+        hw = job.hardware
+        out = []
+        for comp in components:
+            kind, _, ident = comp.partition(":")
+            try:
+                if kind == "gpu":
+                    out.append(f"gpu:{hw[int(ident)]}")
+                elif kind == "link":
+                    a, b = (int(x) for x in ident.split("-"))
+                    lo, hi = sorted((hw[a], hw[b]))
+                    out.append(f"link:{lo}|{hi}")
+            except (ValueError, IndexError):
+                continue
+        return tuple(out)
+
+    def _dedupe_source(self, job: JobHandle) -> Diagnosis | None:
+        """An unresolved diagnosis from another job touching this job's
+        hardware, if any — its pinpoint can be reused instead of re-running
+        profiling + validation."""
+        if job.hardware is None:
+            return None
+        for other_id, diag in self._active_diag.items():
+            if other_id == job.job_id or not diag.components_global:
+                continue
+            if self._localize(job, diag.components_global):
+                return diag
+        return None
+
+    def _localize(
+        self, job: JobHandle, components_global: Sequence[str]
+    ) -> list[str]:
+        """Global component ids -> this job's local ids (unmapped dropped)."""
+        inverse = job._hw_inverse
+        if inverse is None:
+            return []
+        out = []
+        for comp in components_global:
+            kind, _, ident = comp.partition(":")
+            if kind == "gpu" and ident in inverse:
+                out.append(f"gpu:{inverse[ident]}")
+            elif kind == "link":
+                a, _, b = ident.partition("|")
+                if a in inverse and b in inverse:
+                    lo, hi = sorted((inverse[a], inverse[b]))
+                    out.append(f"link:{lo}-{hi}")
+        return out
+
+    def _adopt(
+        self, job: JobHandle, source: Diagnosis, cp, now: float
+    ) -> FailSlowEvent | None:
+        """Build this job's event from another job's diagnosis: shared root
+        cause and components (translated to local ranks), this job's own
+        timing from its verified change-point."""
+        local = self._localize(job, source.components_global)
+        if not local:
+            return None
+        severity = 0.0
+        if cp.mean_after > 0:
+            severity = max(0.0, 1.0 - cp.mean_before / cp.mean_after)
+        event = FailSlowEvent(
+            start_time=now,
+            root_cause=source.event.root_cause,
+            components=local,
+            t_healthy=cp.mean_before,
+            t_slow=cp.mean_after,
+            severity=severity,
+        )
+        return job.detector.adopt_event(event, now)
+
+    # -- introspection ---------------------------------------------------
+    def diagnoses(self, job_id: str | None = None) -> list[Diagnosis]:
+        return [
+            e for e in self.events
+            if isinstance(e, Diagnosis)
+            and (job_id is None or e.job_id == job_id)
+        ]

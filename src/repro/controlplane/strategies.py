@@ -1,0 +1,309 @@
+"""Pluggable mitigation strategies (paper §5, Table 3) + registry.
+
+Each strategy is one class implementing :class:`MitigationStrategy`; the
+:class:`StrategyRegistry` is an ordered table the
+:class:`~repro.core.planner.MitigationPlanner` escalates through (cheapest
+applicable first, the paper's ski-rental rule). The four built-ins port the
+ladder that used to be hand-wired in ``FalconTrainer._apply_strategy``:
+
+* :class:`IgnoreStrategy`          — S1, bookkeeping only.
+* :class:`MicroBatchStrategy`      — S2, ``core.microbatch.solve_allocation``
+  over the profiled per-group speeds.
+* :class:`TopologyStrategy`        — S3, targeted congestion swap /
+  straggler consolidation / QAP local search from ``core.topology``, with
+  the measure-before-commit revert.
+* :class:`CkptRestartStrategy`     — S4, restart onto healthy devices.
+
+A new scenario (e.g. swapping in a hot spare) is one more class registered
+with its overhead — no trainer or planner edit; see docs/control_plane.md
+for a worked example.
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass, field
+from typing import Protocol, runtime_checkable
+
+import numpy as np
+
+from repro.core import microbatch as mb_lib
+from repro.core import topology as topo_lib
+from repro.core.events import FailSlowEvent, RootCause, Strategy, StrategyKey
+from repro.core.planner import DEFAULT_OVERHEADS, MitigationPlanner
+
+
+@dataclass
+class MitigationContext:
+    """Everything a strategy may touch when it fires.
+
+    ``now`` is the job clock at dispatch time (before the strategy's own
+    overhead is charged). ``injector`` is the job's fail-slow injector when
+    one drives the modeled cluster — S4 clears injections that a restart
+    onto healthy hardware escapes.
+    """
+
+    adapter: object
+    event: FailSlowEvent
+    now: float = 0.0
+    job_id: str = ""
+    injector: object | None = None
+
+
+@dataclass(frozen=True)
+class StrategyOutcome:
+    """What a dispatch did: ``applied`` + payload for the caller's runtime."""
+
+    applied: bool
+    detail: dict = field(default_factory=dict)
+
+
+@runtime_checkable
+class MitigationStrategy(Protocol):
+    """One mitigation mechanism, registered under a :data:`StrategyKey`."""
+
+    key: StrategyKey
+
+    def handles(self, event: FailSlowEvent) -> bool:
+        """Whether this strategy can act on the event's root cause."""
+        ...
+
+    def apply(self, ctx: MitigationContext) -> StrategyOutcome:
+        """Perform the mitigation against ``ctx.adapter``."""
+        ...
+
+    def relieve(self, ctx: MitigationContext) -> StrategyOutcome | None:
+        """Undo skew after the fail-slow resolves (None = nothing to do)."""
+        ...
+
+
+# ------------------------------------------------------------------ S1
+@dataclass
+class IgnoreStrategy:
+    """S1 — tolerate the slowdown; zero overhead, always applicable."""
+
+    key: StrategyKey = Strategy.IGNORE
+
+    def handles(self, event: FailSlowEvent) -> bool:
+        return True
+
+    def apply(self, ctx: MitigationContext) -> StrategyOutcome:
+        return StrategyOutcome(applied=True)
+
+    def relieve(self, ctx: MitigationContext) -> StrategyOutcome | None:
+        return None
+
+
+# ------------------------------------------------------------------ S2
+@dataclass
+class MicroBatchStrategy:
+    """S2 — redistribute micro-batches by profiled per-group speed."""
+
+    key: StrategyKey = Strategy.ADJUST_MICROBATCH
+
+    def handles(self, event: FailSlowEvent) -> bool:
+        # Table 3: "No Effect" on slow communication.
+        return event.root_cause is not RootCause.NETWORK_CONGESTION
+
+    def _solve(self, sim) -> list[int] | None:
+        if not hasattr(sim, "per_microbatch_times"):
+            return None
+        return mb_lib.solve_allocation(
+            sim.per_microbatch_times(), sim.job.micro_batches,
+            offset=sim.job.pp - 1,
+        )
+
+    def apply(self, ctx: MitigationContext) -> StrategyOutcome:
+        counts = self._solve(ctx.adapter)
+        if counts is None:
+            return StrategyOutcome(applied=False)
+        ctx.adapter.set_allocation(counts)
+        return StrategyOutcome(applied=True, detail={"allocation": counts})
+
+    def relieve(self, ctx: MitigationContext) -> StrategyOutcome | None:
+        """Post-relief rebalance: recompute the split from the (now healthy)
+        profile so a skewed allocation doesn't outlive the fail-slow it
+        compensated for."""
+        counts = self._solve(ctx.adapter)
+        if counts is None:
+            return None
+        ctx.adapter.set_allocation(counts)
+        return StrategyOutcome(applied=True, detail={"allocation": counts})
+
+
+# ------------------------------------------------------------------ S3
+@dataclass
+class TopologyStrategy:
+    """S3 — placement adjustment, kept only if modeled time improves.
+
+    A blind consolidation can re-expose a congested link the previous
+    targeted swap had evacuated, so mitigation effects are re-measured
+    before being committed.
+    """
+
+    key: StrategyKey = Strategy.ADJUST_TOPOLOGY
+    #: forwarded to the QAP local search (None = library default)
+    max_rounds: int | None = None
+
+    def handles(self, event: FailSlowEvent) -> bool:
+        return True
+
+    def apply(self, ctx: MitigationContext) -> StrategyOutcome:
+        sim = ctx.adapter
+        if not hasattr(sim, "apply_placement"):
+            return StrategyOutcome(applied=False)
+        before_placement = list(sim.placement)
+        before_t = sim.iteration_time()
+        self._plan_and_apply(sim, ctx.event)
+        if sim.iteration_time() > before_t * 0.999:
+            sim.placement = before_placement  # revert: no improvement
+            return StrategyOutcome(applied=True, detail={"reverted": True})
+        return StrategyOutcome(
+            applied=True, detail={"reverted": False, "placement": list(sim.placement)}
+        )
+
+    def _plan_and_apply(self, sim, event: FailSlowEvent) -> None:
+        job, topo = sim.job, sim.job.topology
+        stragglers = [
+            int(c.split(":")[1]) for c in event.components if c.startswith("gpu:")
+        ]
+        slow_links = [
+            tuple(int(x) for x in c.split(":")[1].split("-"))
+            for c in event.components
+            if c.startswith("link:")
+        ]
+        if stragglers and not slow_links and topo.pp > 1:
+            # Straggler consolidation (Fig. 11): pack the positions hosting
+            # slow devices into the fewest PP stages.
+            pos = [p for p, d in enumerate(sim.placement) if d in set(stragglers)]
+            perm = topo_lib.consolidate_stragglers(pos, topo)
+            sim.apply_placement(perm)
+            return
+        m = job.model
+        traffic = topo_lib.build_traffic_matrix(
+            topo,
+            comm_tp=m.comm_tp_bytes(job.tp, job.pp, job.micro_batches),
+            comm_dp=m.comm_dp_bytes(job.tp, job.pp),
+            comm_pp=m.comm_pp_bytes(job.micro_batches),
+        )
+        n = job.n_devices
+        bw = np.full((n, n), np.inf)
+        for i in range(n):
+            for j in range(n):
+                if i != j:
+                    bw[i, j] = sim.state.link_bw(sim.placement[i], sim.placement[j])
+        if slow_links:
+            # Targeted congestion swap (Fig. 10): FALCON pinpointed the slow
+            # physical links; move their endpoints' traffic elsewhere.
+            slow_pos = [
+                p for p, d in enumerate(sim.placement)
+                if any(d in pair for pair in slow_links)
+            ]
+            perm = topo_lib.plan_targeted_swap(traffic, bw, slow_pos)
+        elif self.max_rounds is not None:
+            perm = topo_lib.plan_topology_adjustment(
+                traffic, bw, max_rounds=self.max_rounds
+            )
+        else:
+            perm = topo_lib.plan_topology_adjustment(traffic, bw)
+        sim.apply_placement(perm)
+
+    def relieve(self, ctx: MitigationContext) -> StrategyOutcome | None:
+        return None  # placement stays; it is optimal for the healthy state too
+
+
+# ------------------------------------------------------------------ S4
+@dataclass
+class CkptRestartStrategy:
+    """S4 — checkpoint-and-restart onto healthy devices (last resort)."""
+
+    key: StrategyKey = Strategy.CKPT_AND_RESTART
+
+    def handles(self, event: FailSlowEvent) -> bool:
+        return True
+
+    def apply(self, ctx: MitigationContext) -> StrategyOutcome:
+        sim = ctx.adapter
+        if not hasattr(sim, "restart"):
+            return StrategyOutcome(applied=False)
+        sim.restart()
+        if ctx.injector is not None:
+            # Restart lands on healthy nodes: clear active injections.
+            ctx.injector.injections = [
+                i for i in ctx.injector.injections if not i.active(ctx.now)
+            ]
+        return StrategyOutcome(applied=True, detail={"restarted": True})
+
+    def relieve(self, ctx: MitigationContext) -> StrategyOutcome | None:
+        return None
+
+
+# ------------------------------------------------------------- registry
+class StrategyRegistry:
+    """Ordered strategy table + planner factory.
+
+    Registration order is the tie-break for equal overheads (the planner's
+    sort is stable), so registering S1..S4 in order reproduces the paper's
+    ladder exactly; custom strategies slot in wherever their overhead puts
+    them.
+    """
+
+    def __init__(self) -> None:
+        self._table: dict[StrategyKey, MitigationStrategy] = {}
+        self._overheads: dict[StrategyKey, float] = {}
+
+    # -- population ----------------------------------------------------
+    def register(
+        self, strategy: MitigationStrategy, overhead: float | None = None
+    ) -> "StrategyRegistry":
+        key = strategy.key
+        self._table[key] = strategy
+        if overhead is not None:
+            self._overheads[key] = overhead
+        elif key in DEFAULT_OVERHEADS:
+            self._overheads.setdefault(key, DEFAULT_OVERHEADS[key])
+        else:
+            raise ValueError(f"strategy {key!r} needs an explicit overhead")
+        return self
+
+    def __contains__(self, key: StrategyKey) -> bool:
+        return key in self._table
+
+    def keys(self) -> list[StrategyKey]:
+        return list(self._table)
+
+    def overheads(self, overrides: dict | None = None) -> dict[StrategyKey, float]:
+        out = dict(self._overheads)
+        if overrides:
+            out.update(overrides)
+        return out
+
+    # -- planner + dispatch ---------------------------------------------
+    def candidates(self, event: FailSlowEvent) -> list[StrategyKey]:
+        return [k for k, s in self._table.items() if s.handles(event)]
+
+    def make_planner(
+        self, event: FailSlowEvent, overheads: dict | None = None
+    ) -> MitigationPlanner:
+        return MitigationPlanner(
+            event, self.overheads(overheads), candidates=self.candidates(event)
+        )
+
+    def dispatch(self, key: StrategyKey, ctx: MitigationContext) -> StrategyOutcome:
+        return self._table[key].apply(ctx)
+
+    def relieve(self, ctx: MitigationContext) -> list[tuple[StrategyKey, StrategyOutcome]]:
+        out = []
+        for key, strat in self._table.items():
+            res = strat.relieve(ctx)
+            if res is not None:
+                out.append((key, res))
+        return out
+
+
+def default_registry(max_rounds: int | None = None) -> StrategyRegistry:
+    """The paper's S1-S4 ladder as a registry."""
+    reg = StrategyRegistry()
+    reg.register(IgnoreStrategy())
+    reg.register(MicroBatchStrategy())
+    reg.register(TopologyStrategy(max_rounds=max_rounds))
+    reg.register(CkptRestartStrategy())
+    return reg

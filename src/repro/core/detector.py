@@ -246,28 +246,12 @@ class FalconDetect:
             and self.active_event.components
             and n % self.revalidate_every == 0
         ):
-            if self._components_recovered(self.active_event):
-                self.active_event.end_time = now
-                self.history.append(self.active_event)
-                self.active_event = None
-                return None
-            if iter_time > 1.15 * self.active_event.t_slow:
-                # The fault persists AND the iteration got worse than the
-                # event's recorded severity: a compound fail-slow piled on
-                # (paper Fig. 6). Close the stale event and re-pinpoint so
-                # the planner restarts with the true root-cause set.
-                self.active_event.end_time = now
-                self.history.append(self.active_event)
-                cp = ChangePoint(
-                    index=n - 1,
-                    probability=1.0,
-                    mean_before=self._healthy or self.active_event.t_healthy,
-                    mean_after=iter_time,
-                )
-                event = self._pinpoint(now, cp)
-                event.t_healthy = cp.mean_before
-                self.active_event = event
+            had_active = self.active_event
+            event = self.revalidate(now, iter_time=iter_time, index=n - 1)
+            if event is not None:
                 return event
+            if self.active_event is not had_active:
+                return None  # closed on recovery
         if n < 3 or self._bocd.p_recent_change() <= self.cp_threshold:
             return None
         cp_idx = max(1, n - 1 - self._bocd.map_runlength())
@@ -277,6 +261,21 @@ class FalconDetect:
         )
         if cp is None:
             return None
+        return self.ingest_changepoint(cp, now)
+
+    # ------------------------------------------------------------------
+    def ingest_changepoint(
+        self, cp: ChangePoint, now: float
+    ) -> FailSlowEvent | None:
+        """Onset / compound / relief state machine over one *verified*
+        change-point.
+
+        This is the escalation entry point the fleet screen routes into
+        (:class:`repro.controlplane.ControlPlane`): ``FleetDetect`` verifies
+        the change-point cheaply against the worker's history ring, then this
+        method runs the full profiling + validation pinpoint exactly as the
+        per-job ``observe`` path would.
+        """
         if cp.relative_change > 0:
             if self.active_event is None:
                 # Onset of a fail-slow: run profiling + validation.
@@ -288,8 +287,7 @@ class FalconDetect:
             # top of an active one. Close the old event and re-pinpoint —
             # the caller starts a fresh mitigation ladder for the new state.
             if cp.mean_after > 1.05 * self.active_event.t_slow:
-                self.active_event.end_time = now
-                self.history.append(self.active_event)
+                self._close(now)
                 event = self._pinpoint(now, cp)
                 event.t_healthy = self._healthy or cp.mean_before
                 self.active_event = event
@@ -299,17 +297,64 @@ class FalconDetect:
             # A drop in iteration time can be the fault's relief OR the
             # effect of our own mitigation: when the slow components are
             # known, confirm with the O(1) re-validation before closing.
-            if self.active_event.components and not self._components_recovered(
+            if self.active_event.components and not self.components_recovered(
                 self.active_event
             ):
                 return None
-            self.active_event.end_time = now
-            self.history.append(self.active_event)
-            self.active_event = None
+            self._close(now)
         return None
 
+    def revalidate(
+        self, now: float, iter_time: float | None = None, index: int = -1
+    ) -> FailSlowEvent | None:
+        """Re-run the O(1) component validation of the active event.
+
+        Closes the event when its components measure healthy again (needed
+        because successful mitigation flattens the iteration-time signal —
+        only re-validation can see the fault's relief). When ``iter_time``
+        is supplied and is >1.15x the event's recorded severity, the fault
+        persists AND got worse: a compound fail-slow piled on (paper
+        Fig. 6) — close the stale event, re-pinpoint, and return the new
+        event so the caller restarts the mitigation ladder.
+        """
+        if self.active_event is None or not self.active_event.components:
+            return None
+        if self.components_recovered(self.active_event):
+            self._close(now)
+            return None
+        if iter_time is not None and iter_time > 1.15 * self.active_event.t_slow:
+            stale = self.active_event
+            self._close(now)
+            cp = ChangePoint(
+                index=index,
+                probability=1.0,
+                mean_before=self._healthy or stale.t_healthy,
+                mean_after=iter_time,
+            )
+            event = self._pinpoint(now, cp)
+            event.t_healthy = cp.mean_before
+            self.active_event = event
+            return event
+        return None
+
+    def adopt_event(self, event: FailSlowEvent, now: float) -> FailSlowEvent:
+        """Install an externally produced diagnosis as this job's active
+        event without re-running profiling + validation (cross-job dedupe:
+        another job sharing the hardware already pinpointed the fault)."""
+        if self.active_event is not None:
+            self._close(now)
+        if event.t_healthy > 0:
+            self._healthy = event.t_healthy
+        self.active_event = event
+        return event
+
+    def _close(self, now: float) -> None:
+        self.active_event.end_time = now
+        self.history.append(self.active_event)
+        self.active_event = None
+
     # ------------------------------------------------------------------
-    def _components_recovered(self, event: FailSlowEvent) -> bool:
+    def components_recovered(self, event: FailSlowEvent) -> bool:
         """Cheap re-validation of the flagged components only (O(1))."""
         ref_link = getattr(self.cluster, "healthy_link_time", None)
         ref_gemm = getattr(self.cluster, "healthy_compute_time", None)
@@ -331,7 +376,15 @@ class FalconDetect:
 
     # ------------------------------------------------------------------
     def _pinpoint(self, now: float, cp: ChangePoint) -> FailSlowEvent:
-        """Profiling + validation phases (§4.3)."""
+        """Profiling + validation phases (§4.3).
+
+        The validation sweeps are batched: one ``benchmark_compute`` call
+        covers every suspicious group's ranks and one ``measure_links`` /
+        ``healthy_link_times`` call (when the adapter provides the batch
+        methods) covers every group's ring passes, with the per-group
+        median/threshold math done as array ops — the flagging rules are
+        unchanged from the per-group loop this replaces.
+        """
         group_times = self.cluster.profile_groups()
         suspicious = suspicious_groups(group_times)
         if not suspicious:
@@ -341,29 +394,9 @@ class FalconDetect:
             # parallel + O(1) link passes per group).
             suspicious = list(group_times)
 
-        slow_gpus: list[str] = []
-        slow_links: list[str] = []
-        for g in suspicious:
-            ranks = self.cluster.group_ranks(g)
-            # 1) computation validation: parallel GEMM.
-            comp = self.cluster.benchmark_compute(ranks)
-            if comp:
-                med = float(np.median(list(comp.values())))
-                slow_gpus += [
-                    f"gpu:{r}" for r, t in comp.items() if t > SLOW_COMPONENT_FACTOR * med
-                ]
-            # 2) communication validation: O(1) ring sweep over the group.
-            if len(ranks) >= 2:
-                passes = validation.ring_passes(len(ranks))
-                local_pairs = [
-                    [(ranks[a], ranks[b]) for a, b in p] for p in passes
-                ]
-                reference = getattr(self.cluster, "healthy_link_time", None)
-                slow, _ = validation.validate_links(
-                    local_pairs, self.cluster.measure_link,
-                    reference=reference,
-                )
-                slow_links += [f"link:{a}-{b}" for a, b in slow]
+        group_ranks = [self.cluster.group_ranks(g) for g in suspicious]
+        slow_gpus = self._validate_compute(group_ranks)
+        slow_links = self._validate_links(group_ranks)
 
         if slow_gpus and slow_links:
             cause = RootCause.UNKNOWN  # compound; planner treats as generic
@@ -387,6 +420,93 @@ class FalconDetect:
             t_slow=cp.mean_after,
             severity=severity,
         )
+
+    # ------------------------------------------------------------------
+    def _validate_compute(self, group_ranks: list[list[int]]) -> list[str]:
+        """Computation validation (parallel GEMM), batched over groups.
+
+        One ``benchmark_compute`` call covers the union of all groups'
+        ranks; a rank is flagged per group against that group's median, so
+        results (order and duplicates included) match the former
+        one-call-per-group loop.
+        """
+        all_ranks: list[int] = []
+        seen: set[int] = set()
+        for ranks in group_ranks:
+            for r in ranks:
+                if r not in seen:
+                    seen.add(r)
+                    all_ranks.append(r)
+        comp = self.cluster.benchmark_compute(all_ranks) if all_ranks else {}
+        if not comp:
+            return []
+        # Bucket groups by size so each bucket's medians/thresholds are one
+        # vectorized pass; bucket order preserves first-appearance order.
+        buckets: dict[int, list[int]] = {}
+        for gi, ranks in enumerate(group_ranks):
+            sub = [r for r in ranks if r in comp]
+            if sub:
+                buckets.setdefault(len(sub), []).append(gi)
+        flags: list[list[str]] = [[] for _ in group_ranks]
+        for size, gis in buckets.items():
+            mat = np.array(
+                [[comp[r] for r in group_ranks[gi] if r in comp] for gi in gis],
+                dtype=np.float64,
+            )
+            med = np.median(mat, axis=1)
+            mask = mat > SLOW_COMPONENT_FACTOR * med[:, None]
+            for row, gi in enumerate(gis):
+                sub = [r for r in group_ranks[gi] if r in comp]
+                flags[gi] = [f"gpu:{sub[j]}" for j in np.flatnonzero(mask[row])]
+        return [f for per_group in flags for f in per_group]
+
+    def _validate_links(self, group_ranks: list[list[int]]) -> list[str]:
+        """Communication validation (O(1) ring sweep), batched over groups.
+
+        All groups' pass-schedule pairs are measured in one
+        ``measure_links`` / ``healthy_link_times`` adapter call when
+        available (falling back to per-pair scalars otherwise); the slow
+        rule is then applied per group exactly as
+        :func:`repro.core.validation.validate_links` does.
+        """
+        pair_list: list[tuple[int, int]] = []
+        slices: list[tuple[int, int]] = []  # [start, end) into pair_list
+        for ranks in group_ranks:
+            start = len(pair_list)
+            if len(ranks) >= 2:
+                for p in validation.ring_passes(len(ranks)):
+                    pair_list += [(ranks[a], ranks[b]) for a, b in p]
+            slices.append((start, len(pair_list)))
+        if not pair_list:
+            return []
+        pairs = np.asarray(pair_list, dtype=np.int64)
+        measure_many = getattr(self.cluster, "measure_links", None)
+        if measure_many is not None:
+            t = np.asarray(measure_many(pairs), dtype=np.float64)
+        else:
+            t = np.array(
+                [self.cluster.measure_link((a, b)) for a, b in pair_list]
+            )
+        reference = getattr(self.cluster, "healthy_link_time", None)
+        if reference is not None:
+            ref_many = getattr(self.cluster, "healthy_link_times", None)
+            if ref_many is not None:
+                ref = np.asarray(ref_many(pairs), dtype=np.float64)
+            else:
+                ref = np.array([reference((a, b)) for a, b in pair_list])
+            slow_mask = t > 1.5 * np.maximum(ref, 1e-12)
+        else:
+            # No healthy reference: each group's own median is the yardstick.
+            slow_mask = np.zeros(t.size, dtype=bool)
+            for lo, hi in slices:
+                if hi > lo:
+                    vals = np.sort(t[lo:hi])
+                    slow_mask[lo:hi] = t[lo:hi] > 1.5 * vals[(hi - lo) // 2]
+        return [
+            f"link:{a}-{b}"
+            for (a, b), slow in zip(pair_list, slow_mask, strict=True)
+            if slow
+        ]
 
 
 @dataclass(frozen=True)

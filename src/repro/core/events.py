@@ -39,6 +39,18 @@ class Strategy(enum.Enum):
     CKPT_AND_RESTART = 4
 
 
+#: A mitigation-strategy identifier: the paper's S1-S4 enum members, or a
+#: string for strategies registered by users of the control plane (e.g.
+#: "HOT_SPARE_SWAP"). The planner and the strategy registry are keyed by
+#: this union so new scenarios are one class, not an enum edit.
+StrategyKey = Strategy | str
+
+
+def strategy_label(key: StrategyKey) -> str:
+    """Human-readable name of a strategy key (enum member or string)."""
+    return key.name if isinstance(key, Strategy) else str(key)
+
+
 @dataclass(frozen=True)
 class CommEvent:
     """One logged communication call: (type, timestamp, group, rank)."""

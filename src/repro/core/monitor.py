@@ -12,6 +12,7 @@ from __future__ import annotations
 
 import time
 from collections import deque
+from collections.abc import Callable
 from dataclasses import dataclass, field
 
 import numpy as np
@@ -22,9 +23,17 @@ from repro.core.events import CommEvent, CommOp
 
 @dataclass
 class Monitor:
-    """Per-worker communication-event log with iteration-time inference."""
+    """Per-worker communication-event log with iteration-time inference.
+
+    ``clock`` supplies the timestamp for :meth:`record` calls that don't
+    pass one explicitly. It defaults to ``time.monotonic`` (real hardware),
+    but a driver running on a modeled clock — the trainer's simulated wall
+    time, a trace replay cursor — must inject its own so the event log and
+    the control-plane events downstream share one timebase.
+    """
 
     max_events: int = 65536
+    clock: Callable[[], float] = time.monotonic
     _events: deque[CommEvent] = field(init=False)
 
     def __post_init__(self) -> None:
@@ -42,7 +51,7 @@ class Monitor:
         self._events.append(
             CommEvent(
                 op=op,
-                timestamp=time.monotonic() if timestamp is None else timestamp,
+                timestamp=self.clock() if timestamp is None else timestamp,
                 group=group,
                 rank=rank,
                 duration=duration,

@@ -11,9 +11,10 @@ rule. S1 (ignore) has zero overhead and is always applied first; S4
 """
 from __future__ import annotations
 
+from collections.abc import Sequence
 from dataclasses import dataclass, field
 
-from repro.core.events import FailSlowEvent, RootCause, Strategy
+from repro.core.events import FailSlowEvent, RootCause, Strategy, StrategyKey
 
 #: Which strategies can mitigate which root cause (paper Table 3).
 APPLICABLE: dict[RootCause, tuple[Strategy, ...]] = {
@@ -67,19 +68,27 @@ class MitigationPlanner:
     """
 
     event: FailSlowEvent
-    overheads: dict[Strategy, float] = field(
+    overheads: dict[StrategyKey, float] = field(
         default_factory=lambda: dict(DEFAULT_OVERHEADS)
     )
+    #: explicit candidate ladder (e.g. from a control-plane StrategyRegistry,
+    #: which may include custom string-keyed strategies). None reproduces the
+    #: paper's Table 3 applicability exactly.
+    candidates: Sequence[StrategyKey] | None = None
 
-    _candidates: list[Strategy] = field(init=False)
+    _candidates: list[StrategyKey] = field(init=False)
     _id: int = field(init=False, default=0)
     _slow_iters: int = field(init=False, default=0)
     _impact: float = field(init=False, default=0.0)
-    applied: list[Strategy] = field(init=False, default_factory=list)
+    applied: list[StrategyKey] = field(init=False, default_factory=list)
 
     def __post_init__(self) -> None:
-        cands = list(APPLICABLE[self.event.root_cause])
-        cands.sort(key=lambda s: self.overheads[s])
+        cands = (
+            list(self.candidates)
+            if self.candidates is not None
+            else list(APPLICABLE[self.event.root_cause])
+        )
+        cands.sort(key=lambda s: self.overheads[s])  # stable: order tie-breaks
         self._candidates = cands
 
     @property
@@ -89,7 +98,7 @@ class MitigationPlanner:
 
     def update(
         self, slow_iters: int = 1, current_time: float | None = None
-    ) -> Strategy | None:
+    ) -> StrategyKey | None:
         """Register ``slow_iters`` more degraded iterations; maybe escalate.
 
         ``current_time`` is the *measured* iteration time now — the paper

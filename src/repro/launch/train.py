@@ -2,16 +2,21 @@
 
     PYTHONPATH=src python -m repro.launch.train --arch falcon-demo-100m \
         --steps 50 --seq-len 256 --global-batch 32 [--no-falcon] \
-        [--inject gpu:3:0.5:100:600] [--smoke]
+        [--inject gpu:3:0.5:100:600] [--smoke] [--events]
 
 ``--inject kind:target:severity:start:duration`` adds a fail-slow to the
-attached cluster performance model (kind: gpu|cpu|link).
+attached cluster performance model (kind: gpu|cpu|link). Detection and
+mitigation run through :mod:`repro.controlplane`; ``--events`` dumps the
+control plane's typed event log (diagnoses, strategy dispatches) after the
+run.
 """
 from __future__ import annotations
 
 import argparse
 
 from repro.cluster.injector import FailSlowInjector, Injection, InjectionKind
+from repro.controlplane import Diagnosis, MitigationAction, MitigationResult
+from repro.core.events import strategy_label
 from repro.cluster.simulator import JobSpec, TrainingSimulator
 from repro.cluster.spec import ClusterSpec, ModelSpec
 from repro.configs.base import get_config
@@ -50,6 +55,10 @@ def main() -> None:
     ap.add_argument("--no-falcon", action="store_true")
     ap.add_argument("--inject", action="append", default=[])
     ap.add_argument("--sim-nodes", type=int, default=2)
+    ap.add_argument(
+        "--events", action="store_true",
+        help="dump the control plane's typed event log after the run",
+    )
     args = ap.parse_args()
 
     cfg = get_config(args.arch)
@@ -95,6 +104,18 @@ def main() -> None:
     mean = sum(r.iter_time for r in history) / len(history)
     print(f"# mean iter {mean:.3f}s vs healthy {healthy:.3f}s "
           f"(slowdown {mean / healthy:.2f}x)")
+    if args.events and trainer.control is not None:
+        print("# control-plane events:")
+        for ev in trainer.control.events:
+            if isinstance(ev, Diagnosis):
+                state = "resolved" if ev.resolved else "diagnosed"
+                dedup = f" (deduped from {ev.deduped_from})" if ev.deduped_from else ""
+                print(f"#  t={ev.time:8.1f} {state}: "
+                      f"{ev.event.root_cause.value} {ev.event.components}{dedup}")
+            elif isinstance(ev, MitigationAction):
+                print(f"#  t={ev.time:8.1f} dispatch {strategy_label(ev.strategy)}")
+            elif isinstance(ev, MitigationResult) and ev.kind == "relief":
+                print(f"#  t={ev.time:8.1f} relief rebalance {ev.detail}")
 
 
 if __name__ == "__main__":

@@ -8,36 +8,37 @@ cluster performance model used in the paper-reproduction benchmarks), so
 detection and mitigation operate on honest dynamics while the numerics stay
 real. DESIGN.md §2 documents this split.
 
-Mitigation wiring:
-  * S1 ignore            -> bookkeeping only.
-  * S2 micro-batch       -> ``core.microbatch.solve_allocation`` from the
-    profiled per-group speeds; applied to the adaptive train step's trip
-    counts AND to the simulator.
-  * S3 topology          -> ``core.topology.plan_topology_adjustment`` /
-    ``consolidate_stragglers``; applied to the simulator placement; the
-    runtime analogue (mesh device permutation + state re-put) is exposed as
-    ``remap_mesh`` for multi-device runs.
-  * S4 ckpt-and-restart  -> in-memory checkpoint restore + simulator restart,
-    charging the measured restore overhead.
+Detection and mitigation run through the control plane
+(:mod:`repro.controlplane`): the trainer registers its performance model as
+a job and drives :meth:`ControlPlane.observe` once per step; strategy
+dispatch goes through the job's
+:class:`~repro.controlplane.strategies.StrategyRegistry` (S1 ignore /
+S2 micro-batch / S3 topology / S4 ckpt-restart — each one pluggable class).
+The trainer's only mitigation role is mirroring results into its JAX-side
+state: S2 allocations into the adaptive train step's trip counts, S4 into
+an in-memory checkpoint restore; the runtime analogue of S3 (mesh device
+permutation + state re-put) is exposed as :func:`remap_mesh` for
+multi-device runs. ``FalconTrainer._apply_strategy`` remains as a thin
+deprecation shim over the registry.
 """
 from __future__ import annotations
 
 import time
+import warnings
 from dataclasses import dataclass, field
 
 import jax
 import jax.numpy as jnp
-import numpy as np
 
 from repro.cluster.injector import FailSlowInjector
 from repro.cluster.simulator import TrainingSimulator
 from repro.configs.base import ArchConfig
-from repro.core import microbatch as mb_lib
-from repro.core import topology as topo_lib
+from repro.controlplane import ControlPlane, MitigationResult
+from repro.controlplane.strategies import MitigationContext
 from repro.core.detector import FalconDetect
-from repro.core.events import CommOp, RootCause, Strategy
+from repro.core.events import Strategy, strategy_label
 from repro.core.monitor import Monitor
-from repro.core.planner import DEFAULT_OVERHEADS, MitigationPlanner
+from repro.core.planner import DEFAULT_OVERHEADS
 from repro.data.pipeline import DataConfig, make_batch
 from repro.models import model as model_lib
 from repro.optim import adamw
@@ -70,8 +71,8 @@ class FalconTrainer:
     params: dict = field(init=False)
     opt_state: adamw.AdamWState = field(init=False)
     monitor: Monitor = field(init=False)
+    control: ControlPlane | None = field(init=False, default=None)
     detector: FalconDetect | None = field(init=False, default=None)
-    planner: MitigationPlanner | None = field(init=False, default=None)
     history: list[StepRecord] = field(init=False, default_factory=list)
     allocation: list[int] = field(init=False)
     _wall: float = field(init=False, default=0.0)
@@ -79,14 +80,29 @@ class FalconTrainer:
     def __post_init__(self) -> None:
         self.params = model_lib.init_params(self.cfg, self.seed)
         self.opt_state = adamw.init(self.params)
-        self.monitor = Monitor()
+        # The monitor logs on the trainer's simulated wall clock, so comm
+        # events and control-plane events share one timebase.
+        self.monitor = Monitor(clock=lambda: self._wall)
         self.ckpt = CheckpointManager(self.ckpt_dir)
         self.allocation = [self.data.slots] * self.data.dp_groups
         if self.perf_model is not None:
-            self.detector = FalconDetect(cluster=self.perf_model, verify_window=8)
+            self.control = ControlPlane()
+            self._job = self.control.register_job(
+                "train",
+                self.perf_model,
+                detector=FalconDetect(cluster=self.perf_model, verify_window=8),
+                overheads=dict(self.overheads),
+                injector=self.injector,
+            )
+            self.detector = self._job.detector
         self._step_fn = jax.jit(
             ts_lib.make_train_step(self.cfg, self.opt_cfg)
         )
+
+    @property
+    def planner(self):
+        """The active event's mitigation planner (None when healthy)."""
+        return self._job.planner if self.control is not None else None
 
     # ------------------------------------------------------------------
     def _observed_iter_time(self, measured: float, now: float) -> float:
@@ -97,100 +113,42 @@ class FalconTrainer:
         return self.perf_model.iteration_time()
 
     def _apply_strategy(self, strategy: Strategy, event) -> None:
-        sim = self.perf_model
-        if strategy is Strategy.IGNORE or sim is None:
+        """Deprecated: dispatch through the control-plane strategy registry
+        (kept as a shim for pre-control-plane callers)."""
+        warnings.warn(
+            "FalconTrainer._apply_strategy is deprecated; strategies are "
+            "dispatched through repro.controlplane.StrategyRegistry",
+            DeprecationWarning,
+            stacklevel=2,
+        )
+        if self.control is None:
             return
-        if strategy is Strategy.ADJUST_MICROBATCH:
-            times = sim.per_microbatch_times()
-            counts = mb_lib.solve_allocation(
-                times, sim.job.micro_batches, offset=sim.job.pp - 1
+        outcome = self._job.registry.dispatch(
+            strategy,
+            MitigationContext(
+                adapter=self.perf_model, event=event, now=self._wall,
+                job_id="train", injector=self.injector,
+            ),
+        )
+        self._mirror_result(
+            MitigationResult(
+                job_id="train", time=self._wall, strategy=strategy,
+                applied=outcome.applied, detail=outcome.detail,
             )
-            sim.set_allocation(counts)
-            if len(counts) == self.data.dp_groups:
-                self.allocation = list(counts)
-        elif strategy is Strategy.ADJUST_TOPOLOGY:
-            self._adjust_topology(event)
-        elif strategy is Strategy.CKPT_AND_RESTART:
-            # In-memory checkpoint restore (fast path, Fig. 19 'M').
+        )
+
+    def _mirror_result(self, ev: MitigationResult) -> None:
+        """Reflect a strategy's modeled effects into the JAX-side state."""
+        counts = ev.detail.get("allocation")
+        if counts is not None and len(counts) == self.data.dp_groups:
+            self.allocation = list(counts)
+        if ev.strategy is Strategy.CKPT_AND_RESTART and ev.applied:
+            # In-memory checkpoint restore (fast path, Fig. 19 'M'); the
+            # modeled side (simulator restart + injection relief) already
+            # ran inside CkptRestartStrategy.
             self.ckpt.save_memory(self.params)
             self.params = self.ckpt.restore_memory()
-            sim.restart()
-            if self.injector is not None:
-                # Restart lands on healthy nodes: clear active injections.
-                self.injector.injections = [
-                    i for i in self.injector.injections if not i.active(self._wall)
-                ]
             self.allocation = [self.data.slots] * self.data.dp_groups
-
-    def _rebalance(self) -> None:
-        """Post-relief: recompute the micro-batch split from the (now
-        healthy) profile so a skewed S2 allocation doesn't outlive the
-        fail-slow it compensated for."""
-        sim = self.perf_model
-        if sim is None:
-            return
-        counts = mb_lib.solve_allocation(
-            sim.per_microbatch_times(), sim.job.micro_batches,
-            offset=sim.job.pp - 1,
-        )
-        sim.set_allocation(counts)
-        if len(counts) == self.data.dp_groups:
-            self.allocation = list(counts)
-
-    def _adjust_topology(self, event) -> None:
-        """Apply a placement adjustment, keeping it only if the modeled
-        iteration time improves — mitigation effects are re-measured before
-        being committed (a blind consolidation can re-expose a congested
-        link the previous targeted swap had evacuated)."""
-        sim = self.perf_model
-        before_placement = list(sim.placement)
-        before_t = sim.iteration_time()
-        self._plan_and_apply_topology(event)
-        if sim.iteration_time() > before_t * 0.999:
-            sim.placement = before_placement  # revert: no improvement
-
-    def _plan_and_apply_topology(self, event) -> None:
-        sim = self.perf_model
-        job, topo = sim.job, sim.job.topology
-        stragglers = [
-            int(c.split(":")[1]) for c in event.components if c.startswith("gpu:")
-        ]
-        slow_links = [
-            tuple(int(x) for x in c.split(":")[1].split("-"))
-            for c in event.components
-            if c.startswith("link:")
-        ]
-        if stragglers and not slow_links and topo.pp > 1:
-            # Straggler consolidation (Fig. 11): pack the positions hosting
-            # slow devices into the fewest PP stages.
-            pos = [p for p, d in enumerate(sim.placement) if d in set(stragglers)]
-            perm = topo_lib.consolidate_stragglers(pos, topo)
-            sim.apply_placement(perm)
-            return
-        m = job.model
-        traffic = topo_lib.build_traffic_matrix(
-            topo,
-            comm_tp=m.comm_tp_bytes(job.tp, job.pp, job.micro_batches),
-            comm_dp=m.comm_dp_bytes(job.tp, job.pp),
-            comm_pp=m.comm_pp_bytes(job.micro_batches),
-        )
-        n = job.n_devices
-        bw = np.full((n, n), np.inf)
-        for i in range(n):
-            for j in range(n):
-                if i != j:
-                    bw[i, j] = sim.state.link_bw(sim.placement[i], sim.placement[j])
-        if slow_links:
-            # Targeted congestion swap (Fig. 10): FALCON pinpointed the slow
-            # physical links; move their endpoints' traffic elsewhere.
-            slow_pos = [
-                p for p, d in enumerate(sim.placement)
-                if any(d in pair for pair in slow_links)
-            ]
-            perm = topo_lib.plan_targeted_swap(traffic, bw, slow_pos)
-        else:
-            perm = topo_lib.plan_topology_adjustment(traffic, bw)
-        sim.apply_placement(perm)
 
     # ------------------------------------------------------------------
     def run(self, num_steps: int) -> list[StepRecord]:
@@ -215,25 +173,19 @@ class FalconTrainer:
                 self.monitor.extend([ev])
 
             strategy_applied: str | None = None
-            if self.falcon_enabled and self.detector is not None:
-                had_active = self.detector.active_event is not None
-                new_event = self.detector.observe(iter_time, self._wall)
-                if new_event is not None:
-                    self.planner = MitigationPlanner(new_event, dict(self.overheads))
-                active = self.detector.active_event
-                if active is None:
-                    if had_active:
+            if self.falcon_enabled and self.control is not None:
+                for ev in self.control.observe("train", iter_time, self._wall):
+                    if not isinstance(ev, MitigationResult):
+                        continue
+                    if ev.kind == "relief":
                         # Relief: re-balance micro-batches for the recovered
                         # cluster (S2 with a healthy profile = even split).
-                        self._rebalance()
+                        self._mirror_result(ev)
                         strategy_applied = "REBALANCE"
-                    self.planner = None
-                elif self.planner is not None:
-                    s = self.planner.update(current_time=iter_time)
-                    if s is not None:
-                        self._apply_strategy(s, active)
-                        self._wall += self.overheads.get(s, 0.0)
-                        strategy_applied = s.name
+                    else:
+                        self._mirror_result(ev)
+                        self._wall += ev.overhead
+                        strategy_applied = strategy_label(ev.strategy)
 
             self.history.append(
                 StepRecord(

@@ -1,0 +1,495 @@
+"""Control-plane API tests.
+
+* Strategy-registry dispatch is decision-for-decision equivalent to the old
+  hand-wired ``FalconTrainer._apply_strategy`` ladder on the 64-GPU
+  end-to-end scenario (same escalation sequence, same wall time).
+* Cross-job flag dedupe: two registered jobs sharing a node, one injected
+  fail-slow, one profiling+validation pinpoint, a diagnosis routed to both.
+* The vectorized pinpoint validation sweep matches the scalar per-pair /
+  per-group fallback path component for component.
+* Trace replay, custom strategy registration, screening-path relief, and
+  the Monitor's injectable clock.
+"""
+import numpy as np
+import pytest
+
+from repro.cluster.injector import FailSlowInjector, Injection, InjectionKind
+from repro.cluster.simulator import JobSpec, TrainingSimulator
+from repro.cluster.spec import ClusterSpec, ModelSpec
+from repro.cluster.traces import LabeledEpisode, generate_trace
+from repro.controlplane import (
+    ControlPlane,
+    Diagnosis,
+    MitigationResult,
+    StrategyRegistry,
+    TraceReplayAdapter,
+    default_registry,
+)
+from repro.controlplane.strategies import (
+    IgnoreStrategy,
+    MicroBatchStrategy,
+    MitigationContext,
+    StrategyOutcome,
+)
+from repro.core import microbatch as mb_lib
+from repro.core import topology as topo_lib
+from repro.core.detector import FalconDetect
+from repro.core.events import ChangePoint, RootCause, Strategy
+from repro.core.monitor import Monitor
+from repro.core.planner import MitigationPlanner
+
+MODEL_13B = ModelSpec(layers=40, hidden=5120, seq_len=2048, vocab=50257)
+MODEL_SMALL = ModelSpec(
+    layers=32, hidden=8192, seq_len=2048, vocab=32000, micro_batch=2
+)
+
+OVERHEADS = {
+    Strategy.IGNORE: 0.0,
+    Strategy.ADJUST_MICROBATCH: 2.0,
+    Strategy.ADJUST_TOPOLOGY: 10.0,
+    Strategy.CKPT_AND_RESTART: 1800.0,
+}
+
+
+# ------------------------------------------------- 64-GPU e2e scenario
+def make_64gpu():
+    """The end_to_end benchmark's (16DP, 4PP) job + mixed fail-slow trace."""
+    spec = ClusterSpec(n_nodes=8, gpus_per_node=8)
+    job = JobSpec(model=MODEL_13B, tp=1, dp=16, pp=4, micro_batches=64)
+    sim = TrainingSimulator(cluster=spec, job=job)
+    t = sim.healthy_iteration_time()
+    comp, comm = InjectionKind.GPU_SLOW, InjectionKind.LINK_CONGESTION
+    mk = lambda s, d, kind, tgt, sev: Injection(  # noqa: E731
+        start=s * t, duration=d * t, kind=kind, target=tgt, severity=sev
+    )
+    injections = [
+        mk(25, 250, comp, (5,), 0.3),
+        mk(150, 200, comp, (12,), 0.5),
+        mk(420, 450, comm, (23, 24), 0.7),
+        mk(500, 180, comp, (33,), 0.4),
+    ]
+    return sim, FailSlowInjector(injections)
+
+
+def legacy_apply(strategy, event, sim, injector, wall):
+    """The seed FalconTrainer's hand-wired strategy ladder, verbatim
+    (simulator-side effects; the JAX-side params shuffle doesn't touch the
+    modeled dynamics)."""
+    if strategy is Strategy.IGNORE:
+        return
+    if strategy is Strategy.ADJUST_MICROBATCH:
+        counts = mb_lib.solve_allocation(
+            sim.per_microbatch_times(), sim.job.micro_batches,
+            offset=sim.job.pp - 1,
+        )
+        sim.set_allocation(counts)
+    elif strategy is Strategy.ADJUST_TOPOLOGY:
+        before_placement = list(sim.placement)
+        before_t = sim.iteration_time()
+        job, topo = sim.job, sim.job.topology
+        stragglers = [
+            int(c.split(":")[1]) for c in event.components if c.startswith("gpu:")
+        ]
+        slow_links = [
+            tuple(int(x) for x in c.split(":")[1].split("-"))
+            for c in event.components
+            if c.startswith("link:")
+        ]
+        if stragglers and not slow_links and topo.pp > 1:
+            pos = [p for p, d in enumerate(sim.placement) if d in set(stragglers)]
+            sim.apply_placement(topo_lib.consolidate_stragglers(pos, topo))
+        else:
+            m = job.model
+            traffic = topo_lib.build_traffic_matrix(
+                topo,
+                comm_tp=m.comm_tp_bytes(job.tp, job.pp, job.micro_batches),
+                comm_dp=m.comm_dp_bytes(job.tp, job.pp),
+                comm_pp=m.comm_pp_bytes(job.micro_batches),
+            )
+            n = job.n_devices
+            bw = np.full((n, n), np.inf)
+            for i in range(n):
+                for j in range(n):
+                    if i != j:
+                        bw[i, j] = sim.state.link_bw(
+                            sim.placement[i], sim.placement[j]
+                        )
+            if slow_links:
+                slow_pos = [
+                    p for p, d in enumerate(sim.placement)
+                    if any(d in pair for pair in slow_links)
+                ]
+                sim.apply_placement(
+                    topo_lib.plan_targeted_swap(traffic, bw, slow_pos)
+                )
+            else:
+                sim.apply_placement(topo_lib.plan_topology_adjustment(traffic, bw))
+        if sim.iteration_time() > before_t * 0.999:
+            sim.placement = before_placement
+    elif strategy is Strategy.CKPT_AND_RESTART:
+        sim.restart()
+        if injector is not None:
+            injector.injections = [
+                i for i in injector.injections if not i.active(wall)
+            ]
+
+
+def legacy_drive(sim, injector, n_steps):
+    """The seed trainer's detect/plan/mitigate loop (pre-control-plane)."""
+    detector = FalconDetect(cluster=sim, verify_window=8)
+    planner = None
+    wall = 0.0
+    applied = []
+    for _ in range(n_steps):
+        injector.apply(sim.state, wall)
+        it = sim.iteration_time()
+        wall += it
+        had_active = detector.active_event is not None
+        new_event = detector.observe(it, wall)
+        if new_event is not None:
+            planner = MitigationPlanner(new_event, dict(OVERHEADS))
+        active = detector.active_event
+        if active is None:
+            if had_active:
+                counts = mb_lib.solve_allocation(
+                    sim.per_microbatch_times(), sim.job.micro_batches,
+                    offset=sim.job.pp - 1,
+                )
+                sim.set_allocation(counts)
+                applied.append("REBALANCE")
+            planner = None
+        elif planner is not None:
+            s = planner.update(current_time=it)
+            if s is not None:
+                legacy_apply(s, active, sim, injector, wall)
+                wall += OVERHEADS.get(s, 0.0)
+                applied.append(s.name)
+    return applied, wall
+
+
+def controlplane_drive(sim, injector, n_steps):
+    """The same scenario through the public ControlPlane API."""
+    plane = ControlPlane()
+    plane.register_job(
+        "job", sim,
+        detector=FalconDetect(cluster=sim, verify_window=8),
+        overheads=dict(OVERHEADS), injector=injector,
+    )
+    wall = 0.0
+    applied = []
+    for _ in range(n_steps):
+        injector.apply(sim.state, wall)
+        it = sim.iteration_time()
+        wall += it
+        for ev in plane.observe("job", it, wall):
+            if isinstance(ev, MitigationResult):
+                if ev.kind == "relief":
+                    applied.append("REBALANCE")
+                else:
+                    wall += ev.overhead
+                    applied.append(ev.strategy.name)
+    return applied, wall
+
+
+def test_registry_dispatch_equivalent_to_legacy_ladder_64gpu():
+    """Acceptance: the 64-GPU scenario produces the same strategy escalation
+    sequence and wall time through ControlPlane as through the old
+    hand-wired trainer path."""
+    n_steps = 400
+    sim_a, inj_a = make_64gpu()
+    legacy_strats, legacy_wall = legacy_drive(sim_a, inj_a, n_steps)
+    sim_b, inj_b = make_64gpu()
+    plane_strats, plane_wall = controlplane_drive(sim_b, inj_b, n_steps)
+    assert legacy_strats == plane_strats
+    assert legacy_strats  # the scenario must actually exercise the ladder
+    assert "ADJUST_MICROBATCH" in legacy_strats
+    assert plane_wall == pytest.approx(legacy_wall, rel=1e-12)
+    assert sim_b.allocation == sim_a.allocation
+    assert sim_b.placement == sim_a.placement
+
+
+# --------------------------------------------------- cross-job dedupe
+class CountingSim(TrainingSimulator):
+    """Counts pinpoint entries (profiling-phase calls)."""
+
+    def __post_init__(self):
+        super().__post_init__()
+        self.profile_calls = 0
+
+    def profile_groups(self):
+        self.profile_calls += 1
+        return super().profile_groups()
+
+
+def make_shared_pair():
+    """Two jobs scheduled on the same physical 8-GPU slice."""
+
+    def mk():
+        return CountingSim(
+            cluster=ClusterSpec(n_nodes=2, gpus_per_node=4),
+            job=JobSpec(model=MODEL_SMALL, tp=2, dp=4, pp=1, micro_batches=16),
+        )
+
+    return mk(), mk(), [f"hw{i}" for i in range(8)]
+
+
+def test_cross_job_flag_dedupe_single_diagnosis_routed_to_both():
+    """One shared-hardware fail-slow -> one pinpoint, a deduped diagnosis
+    for the second job carrying the same (translated) components."""
+    sim_a, sim_b, hw = make_shared_pair()
+    plane = ControlPlane()
+    plane.register_job("A", sim_a, hardware=hw)
+    plane.register_job("B", sim_b, hardware=hw)
+    rng = np.random.default_rng(0)
+    wall = 0.0
+    for t in range(120):
+        if t == 60:  # the shared GPU hw1 degrades under both jobs
+            sim_a.state.devices[1].compute_speed = 0.4
+            sim_b.state.devices[1].compute_speed = 0.4
+        ta = sim_a.iteration_time() * float(rng.normal(1, 0.003))
+        tb = sim_b.iteration_time() * float(rng.normal(1, 0.003))
+        wall += max(ta, tb)
+        plane.tick({"A": ta, "B": tb}, wall)
+
+    assert sim_a.profile_calls + sim_b.profile_calls == 1  # single pinpoint
+    open_diags = [d for d in plane.diagnoses() if not d.resolved]
+    assert sorted(d.job_id for d in open_diags) == ["A", "B"]
+    for d in open_diags:
+        assert d.event.root_cause is RootCause.GPU_DEGRADATION
+        assert d.event.components == ["gpu:1"]
+        assert d.components_global == ("gpu:hw1",)
+    by_job = {d.job_id: d for d in open_diags}
+    assert by_job["A"].deduped_from is None
+    assert by_job["B"].deduped_from == "A"
+    # Both jobs' planners escalate on their own copy of the diagnosis.
+    assert plane.job("A").planner is not None
+    assert plane.job("B").planner is not None
+
+
+def test_dedupe_requires_shared_hardware():
+    """Disjoint hardware maps: each job pinpoints for itself."""
+    sim_a, sim_b, hw = make_shared_pair()
+    plane = ControlPlane()
+    plane.register_job("A", sim_a, hardware=[f"a{i}" for i in range(8)])
+    plane.register_job("B", sim_b, hardware=[f"b{i}" for i in range(8)])
+    rng = np.random.default_rng(1)
+    wall = 0.0
+    for t in range(120):
+        if t == 60:
+            sim_a.state.devices[1].compute_speed = 0.4
+            sim_b.state.devices[1].compute_speed = 0.4
+        ta = sim_a.iteration_time() * float(rng.normal(1, 0.003))
+        tb = sim_b.iteration_time() * float(rng.normal(1, 0.003))
+        wall += max(ta, tb)
+        plane.tick({"A": ta, "B": tb}, wall)
+    assert sim_a.profile_calls == 1
+    assert sim_b.profile_calls == 1
+    assert all(d.deduped_from is None for d in plane.diagnoses())
+
+
+# ------------------------------------- screening-path relief + revalidate
+def test_screening_path_closes_event_after_relief():
+    sim, _, hw = make_shared_pair()
+    plane = ControlPlane()
+    plane.register_job("A", sim, hardware=hw)
+    rng = np.random.default_rng(3)
+    wall = 0.0
+    for t in range(240):
+        if t == 80:
+            sim.state.devices[1].compute_speed = 0.4
+        if t == 160:
+            sim.state.devices[1].compute_speed = 1.0
+        it = sim.iteration_time() * float(rng.normal(1, 0.003))
+        wall += it
+        plane.tick({"A": it}, wall)
+    assert plane.job("A").detector.active_event is None
+    diags = plane.diagnoses()
+    assert any(not d.resolved for d in diags)  # onset was diagnosed
+    assert any(d.resolved for d in diags)  # ...and later closed
+    relief = [
+        e for e in plane.events
+        if isinstance(e, MitigationResult) and e.kind == "relief"
+    ]
+    assert relief and relief[-1].detail["allocation"] == [4, 4, 4, 4]
+
+
+# ------------------------------------------------ vectorized pinpoint
+class ScalarOnlyProxy:
+    """Hides the batch validation methods: forces the per-pair fallback."""
+
+    def __init__(self, sim):
+        self._sim = sim
+
+    def profile_groups(self):
+        return self._sim.profile_groups()
+
+    def group_ranks(self, group):
+        return self._sim.group_ranks(group)
+
+    def benchmark_compute(self, ranks):
+        return self._sim.benchmark_compute(ranks)
+
+    def measure_link(self, pair):
+        return self._sim.measure_link(pair)
+
+    def healthy_link_time(self, pair):
+        return self._sim.healthy_link_time(pair)
+
+
+def _random_failslow_sim(rng):
+    tp = int(rng.choice([1, 2, 4]))
+    dp = int(rng.choice([2, 4]))
+    pp = int(rng.choice([1, 2]))
+    n = tp * dp * pp
+    spec = ClusterSpec(n_nodes=max(1, n // 4), gpus_per_node=4)
+    if n > spec.n_devices:
+        return None
+    sim = TrainingSimulator(
+        cluster=spec,
+        job=JobSpec(model=MODEL_SMALL, tp=tp, dp=dp, pp=pp, micro_batches=4 * dp),
+    )
+    kind = rng.choice(["gpu", "link", "both", "none"])
+    if kind in ("gpu", "both"):
+        sim.state.devices[int(rng.integers(n))].compute_speed = float(
+            rng.uniform(0.3, 0.6)
+        )
+    if kind in ("link", "both"):
+        a, b = rng.choice(n, 2, replace=False)
+        sim.state.degrade_link(int(a), int(b), float(rng.uniform(0.1, 0.4)))
+    return sim
+
+
+def test_vectorized_pinpoint_matches_scalar_fallback():
+    """Batched benchmark_compute / measure_links sweeps flag exactly the
+    components the scalar per-group path flags (order included)."""
+    rng = np.random.default_rng(7)
+    cp = ChangePoint(index=50, probability=1.0, mean_before=1.0, mean_after=1.5)
+    tried = 0
+    while tried < 25:
+        sim = _random_failslow_sim(rng)
+        if sim is None:
+            continue
+        tried += 1
+        fast = FalconDetect(cluster=sim)._pinpoint(0.0, cp)
+        slow = FalconDetect(cluster=ScalarOnlyProxy(sim))._pinpoint(0.0, cp)
+        assert fast.components == slow.components
+        assert fast.root_cause is slow.root_cause
+
+
+def test_pinpoint_flags_injected_gpu_and_link():
+    sim, _, _ = make_shared_pair()
+    sim.state.devices[2].compute_speed = 0.5
+    det = FalconDetect(cluster=sim)
+    ev = det._pinpoint(
+        0.0, ChangePoint(index=0, probability=1.0, mean_before=1.0, mean_after=1.4)
+    )
+    assert ev.root_cause is RootCause.GPU_DEGRADATION
+    assert "gpu:2" in ev.components
+
+
+# ------------------------------------------------ trace replay adapter
+def test_trace_replay_adapter_through_control_plane():
+    rng = np.random.default_rng(11)
+    trace = generate_trace(
+        rng, n_iters=300,
+        episodes=[LabeledEpisode(onset=120, relief=260, severity=0.5)],
+    )
+    adapter = TraceReplayAdapter(trace)
+    plane = ControlPlane()
+    plane.register_job("trace", adapter)
+    wall, onset_steps = 0.0, []
+    while (t := adapter.next_observation()) is not None:
+        wall += t
+        for ev in plane.observe("trace", t, wall):
+            if isinstance(ev, Diagnosis) and not ev.resolved:
+                onset_steps.append(plane.job("trace").steps - 1)
+    assert onset_steps, "episode missed"
+    assert abs(onset_steps[0] - 120) <= 12
+    # A scalar trace carries no component evidence: host-level root cause.
+    diag = plane.diagnoses("trace")[0]
+    assert diag.event.root_cause is RootCause.CPU_CONTENTION
+    assert diag.event.components == []
+
+
+# ------------------------------------------------ custom strategies
+class HotSpareStrategy:
+    """Beyond-paper example: swap the slow device for a hot spare."""
+
+    key = "HOT_SPARE_SWAP"
+
+    def __init__(self):
+        self.swapped = []
+
+    def handles(self, event):
+        return event.root_cause is RootCause.GPU_DEGRADATION
+
+    def apply(self, ctx):
+        for comp in ctx.event.components:
+            kind, _, ident = comp.partition(":")
+            if kind == "gpu":
+                dev = int(ident)
+                ctx.adapter.state.devices[dev].compute_speed = 1.0
+                self.swapped.append(dev)
+        return StrategyOutcome(applied=bool(self.swapped))
+
+    def relieve(self, ctx):
+        return None
+
+
+def test_custom_strategy_slots_into_escalation_ladder():
+    """A new scenario is one registered class: the ski-rental ladder places
+    it by overhead (here between S1 and S2), no trainer/planner edit."""
+    sim, _, _ = make_shared_pair()
+    spare = HotSpareStrategy()
+    registry = (
+        StrategyRegistry()
+        .register(IgnoreStrategy())
+        .register(spare, overhead=1.0)
+        .register(MicroBatchStrategy())
+    )
+    plane = ControlPlane()
+    plane.register_job(
+        "A", sim, registry=registry,
+        overheads={Strategy.IGNORE: 0.0, Strategy.ADJUST_MICROBATCH: 5.0},
+    )
+    rng = np.random.default_rng(5)
+    wall, applied = 0.0, []
+    for t in range(140):
+        if t == 60:
+            sim.state.devices[1].compute_speed = 0.4
+        it = sim.iteration_time() * float(rng.normal(1, 0.003))
+        wall += it
+        for ev in plane.observe("A", it, wall):
+            if isinstance(ev, MitigationResult) and ev.kind == "mitigate":
+                wall += ev.overhead
+                applied.append(ev.strategy)
+    assert Strategy.IGNORE in applied
+    assert "HOT_SPARE_SWAP" in applied
+    assert spare.swapped == [1]
+    # The hot spare fixed the fault, so S2 never needed to fire.
+    assert Strategy.ADJUST_MICROBATCH not in applied
+    assert sim.state.devices[1].compute_speed == 1.0
+
+
+def test_default_registry_candidates_match_paper_table3():
+    from repro.core.events import FailSlowEvent
+    from repro.core.planner import APPLICABLE
+
+    reg = default_registry()
+    for cause, expected in APPLICABLE.items():
+        ev = FailSlowEvent(start_time=0.0, root_cause=cause)
+        assert tuple(reg.candidates(ev)) == expected
+
+
+# ------------------------------------------------ monitor clock satellite
+def test_monitor_uses_injected_clock():
+    from repro.core.events import CommOp
+
+    sim_clock = {"now": 100.0}
+    mon = Monitor(clock=lambda: sim_clock["now"])
+    mon.record(CommOp.ALL_REDUCE)
+    sim_clock["now"] = 250.0
+    mon.record(CommOp.ALL_GATHER)
+    mon.record(CommOp.ALL_REDUCE, timestamp=7.5)  # explicit wins
+    stamps = [e.timestamp for e in mon.events]
+    assert stamps == [100.0, 250.0, 7.5]
