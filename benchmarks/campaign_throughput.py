@@ -1,0 +1,64 @@
+"""Campaign engine throughput — ticks/s as the fleet grows.
+
+Drives the full falcon-mode campaign loop (fault translation + injector
+apply + vectorized performance model + fleet screen + pinpoint/dedupe +
+mitigation dispatch + membership churn) for increasing job counts on the
+storm-like fault mix, and reports wall time per tick and per job-tick. The
+subsystem's cost promise: per-tick cost stays near-flat in job count (one
+batched frontier update per warmed cohort plus O(1) per-job bookkeeping),
+so campaign wall time scales with ticks, not with ticks x jobs.
+"""
+from __future__ import annotations
+
+import time
+
+from benchmarks.common import print_table, save_rows
+from repro.scenarios import FaultModel, JobTemplate, ScenarioPreset
+from repro.scenarios.campaign import build_campaign, run_campaign
+
+FLEET_SIZES = (2, 4, 8, 16)
+
+
+def _preset(max_ticks: int) -> ScenarioPreset:
+    return ScenarioPreset(
+        name="bench_storm",
+        description="throughput benchmark workload",
+        n_nodes=2, gpus_per_node=8, tick_seconds=5.0, max_ticks=max_ticks,
+        join_spread_ticks=max_ticks // 4,
+        job_templates=(
+            JobTemplate("yi-9b", tp=1, dp=4, pp=2, micro_batches=16),
+            JobTemplate("granite-3-8b", tp=2, dp=2, pp=1, micro_batches=16,
+                        span_nodes=1),
+        ),
+        fault_model=FaultModel(rate_per_hour=60.0),
+    )
+
+
+def _measure(n_jobs: int, max_ticks: int) -> dict:
+    spec = build_campaign(_preset(max_ticks), n_jobs=n_jobs, seed=0)
+    t0 = time.monotonic()
+    result = run_campaign(spec, "falcon")
+    wall = time.monotonic() - t0
+    ticks = max(result.ticks_run, 1)
+    return {
+        "jobs": n_jobs,
+        "nodes": spec.n_nodes,
+        "ticks": result.ticks_run,
+        "injections": len(spec.schedule),
+        "events": len(result.events),
+        "wall_s": round(wall, 3),
+        "tick_us": round(1e6 * wall / ticks, 1),
+        "job_tick_us": round(1e6 * wall / (ticks * n_jobs), 2),
+    }
+
+
+def run(smoke: bool = False) -> list[dict]:
+    max_ticks = 80 if smoke else 400
+    sizes = (2,) if smoke else FLEET_SIZES
+    rows = [_measure(n, max_ticks) for n in sizes]
+    save_rows("campaign_throughput", rows)
+    return rows
+
+
+if __name__ == "__main__":
+    print_table("Campaign engine throughput", run())

@@ -34,6 +34,7 @@ SUITE = [
     ("roofline", "Roofline — dry-run derived terms (deliverable g)"),
     ("fleet_scale", "Fleet-scale fast path — batched detection + vector sim"),
     ("controlplane_overhead", "Control plane — per-tick overhead at 1-64 jobs"),
+    ("campaign_throughput", "Scenario campaigns — engine ticks/s vs fleet size"),
 ]
 
 

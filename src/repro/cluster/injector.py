@@ -30,7 +30,10 @@ class Injection:
 
     ``severity`` in (0, 1): fraction of performance lost. A GPU_SLOW of 0.3
     runs the GPU at 70 % speed; LINK_CONGESTION of 0.75 leaves 25 % of the
-    bandwidth (the paper's weak/medium/severe ~= 0.2/0.5/0.8).
+    bandwidth (the paper's weak/medium/severe ~= 0.2/0.5/0.8). ``ramp`` > 0
+    builds the severity up linearly over that many seconds from onset —
+    network congestion typically has a gradual onset (§3), the failure mode
+    fixed-offset window detectors miss.
     """
 
     start: float  # wall-clock seconds
@@ -38,6 +41,7 @@ class Injection:
     kind: InjectionKind
     target: tuple[int, ...]  # (device,) / (node,) / (devA, devB)
     severity: float
+    ramp: float = 0.0  # seconds from onset to full severity (0 = step)
 
     @property
     def end(self) -> float:
@@ -45,6 +49,14 @@ class Injection:
 
     def active(self, now: float) -> bool:
         return self.start <= now < self.end
+
+    def severity_at(self, now: float) -> float:
+        """Effective severity at ``now`` (0 outside the episode)."""
+        if not self.active(now):
+            return 0.0
+        if self.ramp <= 0.0:
+            return self.severity
+        return self.severity * min(1.0, (now - self.start) / self.ramp)
 
 
 @dataclass
@@ -57,38 +69,57 @@ class FailSlowInjector:
     def add(self, inj: Injection) -> None:
         self.injections.append(inj)
 
+    def extend(self, injections: list[Injection]) -> "FailSlowInjector":
+        """Compose another schedule onto this injector (campaign layering:
+        a preset's fixed episodes plus a sampled fault-model schedule)."""
+        self.injections.extend(injections)
+        return self
+
     def active(self, now: float) -> list[Injection]:
         return [i for i in self.injections if i.active(now)]
 
     def apply(self, state: ClusterState, now: float) -> list[Injection]:
         """Reset the state and apply all injections active at ``now``.
 
-        Steady state is O(1): when the active set is unchanged since the
-        last apply *and* nobody else mutated the state (checked through its
-        version counter), the reset+reapply — which would invalidate the
-        simulator's memoized iteration time every step — is skipped.
+        Overlapping injections on the same target *compose*: each episode
+        multiplies the target's current multiplier (two 0.5-severity GPU
+        throttles leave 25 % of the speed), so when the earlier episode ends
+        the later one's degradation — not full health — is what remains.
+
+        Steady state is O(1): when the active set and its effective
+        severities are unchanged since the last apply *and* nobody else
+        mutated the state (checked through its version counter), the
+        reset+reapply — which would invalidate the simulator's memoized
+        iteration time every step — is skipped. During a ramp the effective
+        severity moves every call, so ramping episodes reapply each step,
+        as they must.
         """
         act = self.active(now)
-        if self._last_applied == (id(state), tuple(act), state.version):
+        severities = tuple(i.severity_at(now) for i in act)
+        key = (id(state), tuple(act), severities, state.version)
+        if self._last_applied == key:
             return act
         state.reset()
-        for inj in act:
-            mult = 1.0 - inj.severity
+        for inj, severity in zip(act, severities):
+            mult = 1.0 - severity
             if inj.kind is InjectionKind.GPU_SLOW:
                 (dev,) = inj.target
-                state.devices[dev].compute_speed = mult
+                state.devices[dev].compute_speed *= mult
             elif inj.kind is InjectionKind.CPU_CONTENTION:
                 (node,) = inj.target
                 per = state.spec.gpus_per_node
                 for d in range(node * per, (node + 1) * per):
-                    state.devices[d].host_speed = mult
+                    state.devices[d].host_speed *= mult
             elif inj.kind is InjectionKind.NIC_CONGESTION:
                 (node,) = inj.target
-                state.degrade_nic(node, mult)
+                state.degrade_nic(node, state.nic_mult.get(node, 1.0) * mult)
             else:
                 a, b = inj.target
-                state.degrade_link(a, b, mult)
-        self._last_applied = (id(state), tuple(act), state.version)
+                key_ab = (min(a, b), max(a, b))
+                state.degrade_link(
+                    a, b, state.link_mult.get(key_ab, 1.0) * mult
+                )
+        self._last_applied = (id(state), tuple(act), severities, state.version)
         return act
 
 

@@ -407,3 +407,35 @@ class TrainingSimulator:
     def healthy_compute_time(self) -> float:
         """Reference GEMM time on a healthy device."""
         return self.cluster.gemm_ref_time
+
+    # -------------------------------------- node-scoped validation surface
+    def node_of_rank(self, rank: int) -> int:
+        """Node hosting a device rank (NIC/host clustering in validation)."""
+        return self.cluster.node_of(rank)
+
+    def benchmark_host(self, nodes: list[int]) -> dict[int, float]:
+        """Host-side benchmark per node: CPU contention slows the whole
+        node's host path, which the GPU GEMM sweep cannot see."""
+        per = self.cluster.gpus_per_node
+        out: dict[int, float] = {}
+        for n in nodes:
+            speed = min(
+                self.state.devices[d].host_speed
+                for d in range(n * per, (n + 1) * per)
+            )
+            out[n] = self.cluster.host_ref_time / speed
+        return out
+
+    def healthy_host_time(self) -> float:
+        """Reference host benchmark time on a healthy node."""
+        return self.cluster.host_ref_time
+
+    def measure_nic(self, node: int) -> float:
+        """P2P time through one node's NIC port (inter-node path)."""
+        return self.cluster.p2p_payload / (
+            self.cluster.inter_node_bw * self.state.nic_mult.get(node, 1.0)
+        )
+
+    def healthy_nic_time(self) -> float:
+        """Expected healthy inter-node P2P time (NIC at full rate)."""
+        return self.cluster.p2p_payload / self.cluster.inter_node_bw

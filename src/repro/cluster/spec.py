@@ -69,6 +69,10 @@ class ClusterSpec:
     gemm_ref_time: float = 0.05
     #: P2P validation payload (bytes)
     p2p_payload: float = 256e6
+    #: host-side (CPU/dataloader) benchmark reference time on a healthy node
+    #: (s) — the validation probe that exposes CPU contention, which GPU
+    #: GEMMs cannot see (paper case study 1)
+    host_ref_time: float = 0.5
 
     @property
     def n_devices(self) -> int:

@@ -55,6 +55,36 @@ def generate_trace(
     return LabeledTrace(times=np.maximum(t, 1e-6), episodes=list(episodes or []))
 
 
+def episodes_from_injections(
+    injections,
+    tick_seconds: float,
+    n_ticks: int,
+) -> list[LabeledEpisode]:
+    """Express an injection schedule as labeled episodes in tick space.
+
+    Bridges the two ground-truth vocabularies: the scenario engine samples
+    :class:`~repro.cluster.injector.Injection` schedules in wall-clock
+    seconds, while the detector benchmarks and the scoring layer label
+    traces in iteration/tick indices. Episodes entirely outside the horizon
+    are dropped; the rest are clamped to it.
+    """
+    out: list[LabeledEpisode] = []
+    for inj in injections:
+        onset = int(inj.start / tick_seconds)
+        relief = int(np.ceil(inj.end / tick_seconds))
+        if onset >= n_ticks or relief <= 0:
+            continue
+        out.append(
+            LabeledEpisode(
+                onset=max(0, onset),
+                relief=min(relief, n_ticks),
+                severity=float(inj.severity),
+                ramp=int(np.ceil(inj.ramp / tick_seconds)),
+            )
+        )
+    return out
+
+
 def sample_campaign(
     seed: int,
     n_jobs: int,

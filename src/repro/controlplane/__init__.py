@@ -13,6 +13,7 @@ from repro.controlplane.events import (  # noqa: F401
     ControlEvent,
     Diagnosis,
     Flag,
+    Membership,
     MitigationAction,
     MitigationResult,
     Observation,

@@ -38,6 +38,18 @@ class Observation(ControlEvent):
 
 
 @dataclass(frozen=True)
+class Membership(ControlEvent):
+    """A job joined or left the control plane (dynamic fleet churn).
+
+    Emitted by :meth:`ControlPlane.register_job` / ``remove_job`` so the
+    event log alone reconstructs which jobs were live at any time — the
+    campaign scoring layer reads join/leave times from here.
+    """
+
+    action: str = "join"  # "join" | "leave"
+
+
+@dataclass(frozen=True)
 class Flag(ControlEvent):
     """A verified change-point from the fleet screen (pre-pinpoint).
 

@@ -38,6 +38,7 @@ from repro.controlplane.events import (
     ControlEvent,
     Diagnosis,
     Flag,
+    Membership,
     MitigationAction,
     MitigationResult,
     Observation,
@@ -61,17 +62,30 @@ class JobHandle:
     overheads: dict = field(default_factory=dict)
     injector: object | None = None
     #: local device rank -> global hardware id (cross-job dedupe identity);
-    #: None opts the job out of dedupe
+    #: None opts the job out of device-level dedupe
     hardware: tuple[str, ...] | None = None
+    #: local node index -> global host id: the dedupe identity for
+    #: node-scoped components (``node:`` host faults, ``nic:`` ports), which
+    #: co-located jobs share even when their device sets are disjoint
+    hosts: tuple[str, ...] | None = None
+    #: seconds of wall clock one tick() sample stands for (fleet monitors
+    #: scrape on a fixed cadence); None = one sample == one iteration, the
+    #: per-iteration ``observe`` semantics
+    sample_period: float | None = None
     planner: MitigationPlanner | None = None
     steps: int = field(default=0)
+    #: this job's column in the fleet screen (None until the fleet exists)
+    _fleet_col: int | None = field(default=None, repr=False)
     _ticks_active: int = field(default=0)
     #: global hardware id -> local rank (built once; hardware is immutable)
     _hw_inverse: dict[str, int] | None = field(default=None, repr=False)
+    _host_inverse: dict[str, int] | None = field(default=None, repr=False)
 
     def __post_init__(self) -> None:
         if self.hardware is not None:
             self._hw_inverse = {h: r for r, h in enumerate(self.hardware)}
+        if self.hosts is not None:
+            self._host_inverse = {h: n for n, h in enumerate(self.hosts)}
 
     def effective_overheads(self) -> dict:
         return self.registry.overheads(self.overheads)
@@ -104,14 +118,19 @@ class ControlPlane:
         overheads: dict | None = None,
         injector=None,
         hardware: Sequence[str] | None = None,
+        hosts: Sequence[str] | None = None,
+        sample_period: float | None = None,
+        now: float = 0.0,
     ) -> JobHandle:
+        """Register a job — before the first tick or at any point after.
+
+        A job joining mid-flight is added to the fleet screen as a warming
+        stream (:meth:`FleetDetect.add_worker`): established jobs' screening
+        state is untouched, and the newcomer starts being screened once it
+        has ``warmup`` samples.
+        """
         if job_id in self._jobs:
             raise ValueError(f"job {job_id!r} already registered")
-        if self._fleet is not None:
-            raise RuntimeError(
-                "register every job before the first tick(): the fleet "
-                "screen's stream count is fixed at warmup"
-            )
         job = JobHandle(
             job_id=job_id,
             adapter=adapter,
@@ -120,8 +139,35 @@ class ControlPlane:
             overheads=dict(overheads or {}),
             injector=injector,
             hardware=tuple(hardware) if hardware is not None else None,
+            hosts=tuple(hosts) if hosts is not None else None,
+            sample_period=sample_period,
         )
         self._jobs[job_id] = job
+        if self._fleet is not None:
+            job._fleet_col = self._fleet.add_worker()
+        self.events.append(Membership(job_id=job_id, time=now, action="join"))
+        return job
+
+    def remove_job(self, job_id: str, now: float = 0.0) -> JobHandle:
+        """Deregister a job (completion or eviction).
+
+        Its column is sub-sliced out of the fleet screen
+        (:meth:`FleetDetect.remove_worker`), its open diagnosis leaves the
+        dedupe table, and a leave :class:`Membership` event is logged. The
+        returned handle still carries the detector history for post-hoc
+        scoring.
+        """
+        if job_id not in self._jobs:
+            raise KeyError(f"job {job_id!r} not registered")
+        job = self._jobs.pop(job_id)
+        self._active_diag.pop(job_id, None)
+        col = job._fleet_col
+        if self._fleet is not None and col is not None:
+            self._fleet.remove_worker(col)
+            for other in self._jobs.values():
+                if other._fleet_col is not None and other._fleet_col > col:
+                    other._fleet_col -= 1
+        self.events.append(Membership(job_id=job_id, time=now, action="leave"))
         return job
 
     @property
@@ -164,18 +210,26 @@ class ControlPlane:
         or a sequence in registration order.
         """
         jobs = list(self._jobs.values())
-        if isinstance(times, Mapping):
-            vec = np.array([times[j.job_id] for j in jobs], dtype=np.float64)
-        else:
-            vec = np.asarray(times, dtype=np.float64)
-        if vec.shape != (len(jobs),):
-            raise ValueError(f"expected {len(jobs)} times, got {vec.shape}")
         if self._fleet is None:
             self._fleet = FleetDetect(n_workers=len(jobs), **self._fleet_kwargs)
+            for col, job in enumerate(jobs):
+                job._fleet_col = col
+        by_col = {j._fleet_col: j for j in jobs}
+        if isinstance(times, Mapping):
+            per_job = {j.job_id: float(times[j.job_id]) for j in jobs}
+        else:
+            seq = np.asarray(times, dtype=np.float64)
+            if seq.shape != (len(jobs),):
+                raise ValueError(f"expected {len(jobs)} times, got {seq.shape}")
+            per_job = {j.job_id: float(seq[i]) for i, j in enumerate(jobs)}
+        vec = np.empty(len(jobs), dtype=np.float64)
+        for job in jobs:
+            vec[job._fleet_col] = per_job[job.job_id]
         flags = {f.worker: f for f in self._fleet.tick(vec)}
 
         out: list[ControlEvent] = []
-        for w, job in enumerate(jobs):
+        for w in sorted(by_col):
+            job = by_col[w]
             iter_time = float(vec[w])
             out.append(
                 Observation(
@@ -245,7 +299,15 @@ class ControlPlane:
             job.planner = None
             self._active_diag.pop(job.job_id, None)
         elif job.planner is not None:
-            strategy = job.planner.update(current_time=iter_time)
+            # On a sampling clock, one sample stands for sample_period /
+            # iter_time iterations — the ski-rental impact integral counts
+            # iterations so its break-even stays in wall-clock units.
+            weight = 1.0
+            if job.sample_period is not None and iter_time > 0:
+                weight = job.sample_period / iter_time
+            strategy = job.planner.update(
+                slow_iters=weight, current_time=iter_time
+            )
             if strategy is not None:
                 out.append(
                     MitigationAction(
@@ -306,20 +368,27 @@ class ControlPlane:
     def _globalize(
         self, job: JobHandle, components: Sequence[str]
     ) -> tuple[str, ...]:
-        """Translate job-local component ids through the hardware map."""
-        if job.hardware is None:
-            return ()
+        """Translate job-local component ids through the hardware/host maps.
+
+        Device-scoped components (``gpu:``/``link:``) go through the
+        hardware map; node-scoped ones (``node:`` host faults, ``nic:``
+        ports) through the hosts map, so co-located jobs with disjoint
+        device sets still share a dedupe identity for host-level faults.
+        """
         hw = job.hardware
+        hosts = job.hosts
         out = []
         for comp in components:
             kind, _, ident = comp.partition(":")
             try:
-                if kind == "gpu":
+                if kind == "gpu" and hw is not None:
                     out.append(f"gpu:{hw[int(ident)]}")
-                elif kind == "link":
+                elif kind == "link" and hw is not None:
                     a, b = (int(x) for x in ident.split("-"))
                     lo, hi = sorted((hw[a], hw[b]))
                     out.append(f"link:{lo}|{hi}")
+                elif kind in ("node", "nic") and hosts is not None:
+                    out.append(f"{kind}:{hosts[int(ident)]}")
             except (ValueError, IndexError):
                 continue
         return tuple(out)
@@ -328,7 +397,7 @@ class ControlPlane:
         """An unresolved diagnosis from another job touching this job's
         hardware, if any — its pinpoint can be reused instead of re-running
         profiling + validation."""
-        if job.hardware is None:
+        if job.hardware is None and job.hosts is None:
             return None
         for other_id, diag in self._active_diag.items():
             if other_id == job.job_id or not diag.components_global:
@@ -342,18 +411,20 @@ class ControlPlane:
     ) -> list[str]:
         """Global component ids -> this job's local ids (unmapped dropped)."""
         inverse = job._hw_inverse
-        if inverse is None:
-            return []
+        hosts_inv = job._host_inverse
         out = []
         for comp in components_global:
             kind, _, ident = comp.partition(":")
-            if kind == "gpu" and ident in inverse:
+            if kind == "gpu" and inverse is not None and ident in inverse:
                 out.append(f"gpu:{inverse[ident]}")
-            elif kind == "link":
+            elif kind == "link" and inverse is not None:
                 a, _, b = ident.partition("|")
                 if a in inverse and b in inverse:
                     lo, hi = sorted((inverse[a], inverse[b]))
                     out.append(f"link:{lo}-{hi}")
+            elif kind in ("node", "nic") and hosts_inv is not None:
+                if ident in hosts_inv:
+                    out.append(f"{kind}:{hosts_inv[ident]}")
         return out
 
     def _adopt(
@@ -361,9 +432,25 @@ class ControlPlane:
     ) -> FailSlowEvent | None:
         """Build this job's event from another job's diagnosis: shared root
         cause and components (translated to local ranks), this job's own
-        timing from its verified change-point."""
+        timing from its verified change-point.
+
+        Trust but verify: before adopting, the translated components are
+        re-measured through *this* job's adapter (the detector's O(1)
+        component validation). A co-located job can flag for an unrelated
+        reason — e.g. its own GPU fault while a neighbour's NIC is congested
+        — and blindly inheriting the neighbour's diagnosis would both
+        mislabel this job's fault and leave it unpinpointed. If the shared
+        components measure healthy here, the dedupe is rejected and the job
+        runs its own profiling + validation.
+        """
         local = self._localize(job, source.components_global)
         if not local:
+            return None
+        probe = FailSlowEvent(
+            start_time=now, root_cause=source.event.root_cause,
+            components=local,
+        )
+        if job.detector.components_recovered(probe):
             return None
         severity = 0.0
         if cp.mean_after > 0:

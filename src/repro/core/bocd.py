@@ -272,6 +272,34 @@ class BatchedBOCD:
     def n_hypotheses(self) -> int:
         return self._rl.size
 
+    def take_columns(self, idx: np.ndarray) -> None:
+        """Sub-slice the batch to the series in ``idx`` (dynamic membership).
+
+        Columns are statistically independent — truncation in uncapped mode
+        is per-column, and the shared ``max_hypotheses`` frontier only
+        couples which *rows* survive — so each kept column's posterior is
+        carried over unchanged: in uncapped mode it is exactly what a fresh
+        recursion over that column alone would hold. Hypothesis rows now
+        dead in every surviving column are compacted away, shrinking the
+        frontier like the per-tick truncation does.
+        """
+        idx = np.asarray(idx, dtype=np.int64)
+        self.n_series = int(idx.size)
+        self._mu0 = self._mu0[idx]
+        self._log_r = self._log_r[:, idx]
+        self._mu = self._mu[:, idx]
+        self._beta = self._beta[:, idx]
+        alive = np.isfinite(self._log_r).any(axis=1)
+        if alive.size:
+            alive[0] = True
+        if not alive.all():
+            self._log_r = self._log_r[alive]
+            self._mu = self._mu[alive]
+            self._beta = self._beta[alive]
+            self._kappa_row = self._kappa_row[alive]
+            self._alpha_row = self._alpha_row[alive]
+            self._rl = self._rl[alive]
+
     def update(self, x: np.ndarray) -> np.ndarray:
         """Feed one observation per series; return Pr(r_t = 0) per series."""
         x = np.asarray(x, dtype=np.float64)

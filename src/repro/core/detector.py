@@ -372,6 +372,22 @@ class FalconDetect:
                 t = self.cluster.measure_link((a, b))
                 if ref_link is not None and t > 1.5 * ref_link((a, b)):
                     return False
+            elif kind == "node":
+                bench = getattr(self.cluster, "benchmark_host", None)
+                ref = getattr(self.cluster, "healthy_host_time", None)
+                if bench is None or ref is None:
+                    continue  # node comps only come from adapters that have it
+                nd = int(ident)
+                t = bench([nd]).get(nd)
+                if t is None or t > SLOW_COMPONENT_FACTOR * ref():
+                    return False
+            elif kind == "nic":
+                meas = getattr(self.cluster, "measure_nic", None)
+                ref = getattr(self.cluster, "healthy_nic_time", None)
+                if meas is None or ref is None:
+                    continue
+                if meas(int(ident)) > 1.5 * ref():
+                    return False
         return True
 
     # ------------------------------------------------------------------
@@ -396,7 +412,11 @@ class FalconDetect:
 
         group_ranks = [self.cluster.group_ranks(g) for g in suspicious]
         slow_gpus = self._validate_compute(group_ranks)
-        slow_links = self._validate_links(group_ranks)
+        slow_links, pair_list, slow_mask = self._validate_links(group_ranks)
+        slow_nics = self._nic_components(pair_list, slow_mask)
+        slow_hosts: list[str] = []
+        if not slow_gpus and not slow_links:
+            slow_hosts = self._validate_hosts(group_ranks)
 
         if slow_gpus and slow_links:
             cause = RootCause.UNKNOWN  # compound; planner treats as generic
@@ -407,6 +427,8 @@ class FalconDetect:
         else:
             # Uniform slowdown with healthy GPUs and links points at the host
             # (paper case study 1: CPU contention shows no GPU degradation).
+            # When the adapter exposes a host benchmark, the slow node(s) are
+            # pinpointed so co-located jobs can dedupe the diagnosis.
             cause = RootCause.CPU_CONTENTION
 
         severity = 0.0
@@ -415,11 +437,66 @@ class FalconDetect:
         return FailSlowEvent(
             start_time=now,
             root_cause=cause,
-            components=slow_gpus + slow_links,
+            components=slow_gpus + slow_links + slow_nics + slow_hosts,
             t_healthy=cp.mean_before,
             t_slow=cp.mean_after,
             severity=severity,
         )
+
+    # ------------------------------------------------------------------
+    def _validate_hosts(self, group_ranks: list[list[int]]) -> list[str]:
+        """Host validation: CPU benchmarks on the nodes spanned by the
+        suspicious groups (paper case study 1 — a host-level fault shows
+        healthy GPUs and links but a degraded CPU-side benchmark). Requires
+        the ``node_of_rank`` / ``benchmark_host`` / ``healthy_host_time``
+        adapter surface; adapters without it (e.g. scalar trace replay)
+        yield the component-less CPU_CONTENTION diagnosis as before.
+        """
+        node_of = getattr(self.cluster, "node_of_rank", None)
+        bench = getattr(self.cluster, "benchmark_host", None)
+        ref = getattr(self.cluster, "healthy_host_time", None)
+        if node_of is None or bench is None or ref is None:
+            return []
+        nodes = sorted({node_of(r) for ranks in group_ranks for r in ranks})
+        if not nodes:
+            return []
+        times = bench(nodes)
+        healthy = ref()
+        return [
+            f"node:{k}" for k in nodes
+            if times.get(k, 0.0) > SLOW_COMPONENT_FACTOR * healthy
+        ]
+
+    def _nic_components(
+        self, pair_list: list[tuple[int, int]], slow_mask: np.ndarray
+    ) -> list[str]:
+        """Cluster slow inter-node links by NIC port (node-scoped dedupe).
+
+        A congested NIC degrades *every* inter-node flow of its node, so a
+        node whose measured inter-node pairs are all slow — at least two
+        distinct ones, ruling out a single bad cable — is flagged as
+        ``nic:<node>``. Needs ``node_of_rank``; the per-link components are
+        kept alongside (mitigation still routes around individual links).
+        """
+        node_of = getattr(self.cluster, "node_of_rank", None)
+        if node_of is None or not pair_list:
+            return []
+        slow: dict[int, set] = {}
+        total: dict[int, set] = {}
+        for (a, b), is_slow in zip(pair_list, slow_mask, strict=True):
+            na, nb = node_of(a), node_of(b)
+            if na == nb:
+                continue
+            key = (min(a, b), max(a, b))
+            for nd in (na, nb):
+                total.setdefault(nd, set()).add(key)
+                if is_slow:
+                    slow.setdefault(nd, set()).add(key)
+        return [
+            f"nic:{nd}"
+            for nd in sorted(total)
+            if len(slow.get(nd, ())) >= 2 and slow[nd] == total[nd]
+        ]
 
     # ------------------------------------------------------------------
     def _validate_compute(self, group_ranks: list[list[int]]) -> list[str]:
@@ -460,14 +537,18 @@ class FalconDetect:
                 flags[gi] = [f"gpu:{sub[j]}" for j in np.flatnonzero(mask[row])]
         return [f for per_group in flags for f in per_group]
 
-    def _validate_links(self, group_ranks: list[list[int]]) -> list[str]:
+    def _validate_links(
+        self, group_ranks: list[list[int]]
+    ) -> tuple[list[str], list[tuple[int, int]], np.ndarray]:
         """Communication validation (O(1) ring sweep), batched over groups.
 
         All groups' pass-schedule pairs are measured in one
         ``measure_links`` / ``healthy_link_times`` adapter call when
         available (falling back to per-pair scalars otherwise); the slow
         rule is then applied per group exactly as
-        :func:`repro.core.validation.validate_links` does.
+        :func:`repro.core.validation.validate_links` does. Returns the slow
+        components plus the raw (pair, slow) sweep so the caller can cluster
+        link faults by NIC port.
         """
         pair_list: list[tuple[int, int]] = []
         slices: list[tuple[int, int]] = []  # [start, end) into pair_list
@@ -478,7 +559,7 @@ class FalconDetect:
                     pair_list += [(ranks[a], ranks[b]) for a, b in p]
             slices.append((start, len(pair_list)))
         if not pair_list:
-            return []
+            return [], [], np.zeros(0, dtype=bool)
         pairs = np.asarray(pair_list, dtype=np.int64)
         measure_many = getattr(self.cluster, "measure_links", None)
         if measure_many is not None:
@@ -502,11 +583,12 @@ class FalconDetect:
                 if hi > lo:
                     vals = np.sort(t[lo:hi])
                     slow_mask[lo:hi] = t[lo:hi] > 1.5 * vals[(hi - lo) // 2]
-        return [
+        comps = [
             f"link:{a}-{b}"
             for (a, b), slow in zip(pair_list, slow_mask, strict=True)
             if slow
         ]
+        return comps, pair_list, slow_mask
 
 
 @dataclass(frozen=True)
@@ -515,6 +597,21 @@ class FleetFlag:
 
     worker: int
     change_point: ChangePoint
+
+
+@dataclass
+class _Cohort:
+    """Workers warmed together share one :class:`~repro.core.bocd.BatchedBOCD`.
+
+    ``cols`` are current column indices into the fleet history matrix (kept
+    in ascending order; re-indexed on removals), ``start`` is the absolute
+    tick index of the cohort's first sample — its members joined then and
+    have no earlier history. ``batch`` stays None while the cohort warms up.
+    """
+
+    cols: list[int]
+    start: int
+    batch: bocd.BatchedBOCD | None = None
 
 
 @dataclass
@@ -533,6 +630,19 @@ class FleetDetect:
     ``max_hypotheses`` bounds the shared run-length frontier so the per-tick
     cost is flat in stream length; the escalation path re-checks flagged
     workers exactly, so the screen only needs to be sensitive, not precise.
+
+    Dynamic membership (multi-job campaigns with churn): workers
+    :meth:`add_worker` / :meth:`remove_worker` at any point. A leave
+    sub-slices the owning batch (:meth:`~repro.core.bocd.BatchedBOCD.
+    take_columns` — survivors' posteriors carry over exactly). A join opens
+    a warming *cohort*: its stream buffers in the history ring until it has
+    ``warmup`` samples, then warms its own batch — established workers keep
+    their run-length state untouched. :meth:`consolidate` re-warms every
+    warmed cohort into one shared frontier by replaying the common retained
+    window (from the youngest member's join), equivalent to a fresh
+    ``FleetDetect`` fed that window; ``max_cohorts`` triggers it
+    automatically so per-tick cost stays one batched update per cohort,
+    bounded.
     """
 
     n_workers: int
@@ -540,23 +650,150 @@ class FleetDetect:
     cp_threshold: float = bocd.DEFAULT_CP_THRESHOLD
     verify_threshold: float = VERIFY_THRESHOLD
     verify_window: int = 10
+    #: extra verification scales tried after ``verify_window`` (the same
+    #: multi-scale rule as :func:`detect_slow_iterations`): short windows
+    #: catch brief transients, wide windows catch ramped onsets whose local
+    #: slope never crosses the 10 % threshold at one scale
+    verify_windows: tuple[int, ...] = (5, 30)
+    #: drift screen: BOCD's run-length posterior *tracks* a gradual ramp
+    #: (each step is barely surprising, so Pr(r=0) never spikes — congestion
+    #: building up over minutes is invisible to the change-point rule). The
+    #: complementary screen compares each worker's trailing mean against a
+    #: reference window ``drift_ref`` ticks back and escalates when they
+    #: differ by the verification threshold; 0 disables it.
+    drift_ref: int = 40
+    drift_ref_window: int = 10
+    drift_cur_window: int = 5
+    #: consecutive ticks the drift condition must hold before escalating.
+    #: An abrupt step also trips the lagged comparison (the trailing mean
+    #: mixes pre/post samples), but BOCD flags it exactly within a tick or
+    #: two — the hold gives BOCD first claim so one physical change never
+    #: produces both a change-point flag and a sloppier drift flag.
+    drift_hold: int = 5
     warmup: int = 8
     min_gap: int = 3
     recent_window: int = 2
     history_cap: int = 128
     max_hypotheses: int | None = 32
+    #: auto-consolidate when more than this many cohorts are warmed
+    #: (None = never; joins then cost one extra batch each, forever)
+    max_cohorts: int | None = 4
 
     _history: MatrixRingBuffer = field(init=False)
-    _batch: bocd.BatchedBOCD | None = field(init=False, default=None)
-    _scale: np.ndarray | None = field(init=False, default=None)
+    _cohorts: list[_Cohort] = field(init=False)
+    _scale: np.ndarray = field(init=False)
     _last_flag: np.ndarray = field(init=False)
 
     def __post_init__(self) -> None:
+        # The ring must retain every window any screen reads: the widest
+        # verification scale and the drift screen's reference lookback — a
+        # smaller user-set history_cap would silently blind those paths.
+        lookback = (
+            self.drift_ref + self.drift_ref_window if self.drift_ref else 0
+        )
+        widest = 2 * max((self.verify_window, *self.verify_windows))
         self._history = MatrixRingBuffer(
-            max(self.history_cap, self.warmup, 4 * self.verify_window),
+            max(self.history_cap, self.warmup, 4 * self.verify_window,
+                lookback, widest),
             self.n_workers,
         )
+        self._scale = np.full(self.n_workers, np.nan)
         self._last_flag = np.full(self.n_workers, -(10**9), dtype=np.int64)
+        self._drift_count = np.zeros(self.n_workers, dtype=np.int64)
+        self._cohorts = (
+            [_Cohort(cols=list(range(self.n_workers)), start=0)]
+            if self.n_workers
+            else []
+        )
+
+    # -- dynamic membership --------------------------------------------
+    @property
+    def n_cohorts(self) -> int:
+        return len(self._cohorts)
+
+    def add_worker(self) -> int:
+        """Register one more stream; returns its column index.
+
+        The worker joins a warming cohort anchored at the current tick:
+        screening for it starts once it has ``warmup`` samples, while every
+        established cohort's run-length state is left untouched.
+        """
+        w = self._history.add_column(np.nan)
+        self._scale = np.append(self._scale, np.nan)
+        self._last_flag = np.append(self._last_flag, -(10**9))
+        self._drift_count = np.append(self._drift_count, 0)
+        now = len(self._history)
+        if (
+            self._cohorts
+            and self._cohorts[-1].batch is None
+            and self._cohorts[-1].start == now
+        ):
+            self._cohorts[-1].cols.append(w)  # joined in the same gap
+        else:
+            self._cohorts.append(_Cohort(cols=[w], start=now))
+        self.n_workers += 1
+        return w
+
+    def remove_worker(self, w: int) -> None:
+        """Drop one stream; columns above ``w`` shift down by one.
+
+        The owning cohort's batch is column-sub-sliced in place, so the
+        surviving members' posteriors (and future flags) are exactly what
+        they would have been had the departed stream never been tracked
+        (uncapped; under ``max_hypotheses`` the shared frontier may differ).
+        """
+        self._history.remove_column(w)
+        self._scale = np.delete(self._scale, w)
+        self._last_flag = np.delete(self._last_flag, w)
+        self._drift_count = np.delete(self._drift_count, w)
+        for cohort in list(self._cohorts):
+            if w in cohort.cols:
+                if cohort.batch is not None:
+                    keep = [i for i, c in enumerate(cohort.cols) if c != w]
+                    cohort.batch.take_columns(np.asarray(keep, dtype=np.int64))
+                cohort.cols.remove(w)
+                if not cohort.cols:
+                    self._cohorts.remove(cohort)
+                    continue
+            cohort.cols = [c - 1 if c > w else c for c in cohort.cols]
+        self.n_workers -= 1
+
+    def consolidate(self) -> None:
+        """Re-warm all warmed cohorts into one shared frontier.
+
+        Rebuilds a single :class:`~repro.core.bocd.BatchedBOCD` by replaying
+        the retained history window common to every warmed worker (the
+        youngest member's join forward): noise scales are re-estimated from
+        the window's first ``warmup`` rows, so the result is identical to a
+        fresh ``FleetDetect`` fed exactly that window. Run-length memory
+        older than the window is forgotten — the escalation path re-verifies
+        against the full history ring, so sensitivity to *future* changes is
+        what matters. Warming cohorts are left to finish on their own.
+        """
+        warmed = [c for c in self._cohorts if c.batch is not None]
+        if len(warmed) <= 1:
+            return
+        n = len(self._history)
+        start = max(max(c.start for c in warmed), self._history.start)
+        if n - start < self.warmup:
+            return  # not enough common history to re-estimate scales
+        cols = sorted(c for cohort in warmed for c in cohort.cols)
+        warm = self._history.rows(start, n)[:, cols]
+        scale = bocd.noise_scale_batch(warm[: self.warmup])
+        batch = bocd.BatchedBOCD(
+            len(cols),
+            hazard=self.hazard,
+            mu0=warm[0] / scale,
+            cp_threshold=self.cp_threshold,
+            max_hypotheses=self.max_hypotheses,
+        )
+        for row in warm:
+            batch.update(row / scale)
+        self._scale[cols] = scale
+        merged = _Cohort(cols=cols, start=start, batch=batch)
+        self._cohorts = [merged] + [
+            c for c in self._cohorts if c.batch is None
+        ]
 
     # ------------------------------------------------------------------
     def tick(self, times: np.ndarray) -> list[FleetFlag]:
@@ -568,53 +805,117 @@ class FleetDetect:
             )
         self._history.append(times)
         n = len(self._history)
-        if self._batch is None:
-            if n < self.warmup:
-                return []
-            warm = self._history.rows(0, n)
-            self._scale = bocd.noise_scale_batch(warm)
-            self._batch = bocd.BatchedBOCD(
-                self.n_workers,
-                hazard=self.hazard,
-                mu0=warm[0] / self._scale,
-                cp_threshold=self.cp_threshold,
-                max_hypotheses=self.max_hypotheses,
-            )
-            for row in warm[:-1]:
-                self._batch.update(row / self._scale)
-        self._batch.update(times / self._scale)
         i = n - 1
-        if i <= self.recent_window:
-            return []
-        p = self._batch.p_recent_change(self.recent_window)
-        flagged = np.flatnonzero(p > self.cp_threshold)
-        if flagged.size == 0:
-            return []
-        run_lengths = self._batch.map_runlength()
         out: list[FleetFlag] = []
-        for w in flagged:
-            idx = i - int(run_lengths[w])
-            if idx <= 0 or idx - self._last_flag[w] < self.min_gap:
+        for cohort in self._cohorts:
+            cols = np.asarray(cohort.cols, dtype=np.int64)
+            if cohort.batch is None:
+                if n - cohort.start < self.warmup:
+                    continue
+                warm = self._history.rows(cohort.start, n)[:, cols]
+                scale = bocd.noise_scale_batch(warm)
+                self._scale[cols] = scale
+                cohort.batch = bocd.BatchedBOCD(
+                    cols.size,
+                    hazard=self.hazard,
+                    mu0=warm[0] / scale,
+                    cp_threshold=self.cp_threshold,
+                    max_hypotheses=self.max_hypotheses,
+                )
+                for row in warm[:-1]:
+                    cohort.batch.update(row / scale)
+            cohort.batch.update(times[cols] / self._scale[cols])
+            if i - cohort.start <= self.recent_window:
                 continue
-            cp = self._verify(int(w), idx, n)
-            if cp is not None:
-                # Dedup on *confirmed* flags only: the first post-onset ticks
-                # may lack the 2 after-samples verification needs, and the
-                # detection burst must be allowed to retry until one sticks.
-                self._last_flag[w] = idx
-                out.append(FleetFlag(worker=int(w), change_point=cp))
+            p = cohort.batch.p_recent_change(self.recent_window)
+            flagged = np.flatnonzero(p > self.cp_threshold)
+            if flagged.size:
+                run_lengths = cohort.batch.map_runlength()
+                for local_w in flagged:
+                    w = cohort.cols[int(local_w)]
+                    idx = i - int(run_lengths[local_w])
+                    if (
+                        idx <= cohort.start
+                        or idx - self._last_flag[w] < self.min_gap
+                    ):
+                        continue
+                    cp = self._verify(w, idx, n, floor=cohort.start)
+                    if cp is not None:
+                        # Dedup on *confirmed* flags only: the first
+                        # post-onset ticks may lack the 2 after-samples
+                        # verification needs, and the detection burst must
+                        # be allowed to retry until one sticks.
+                        self._last_flag[w] = idx
+                        out.append(FleetFlag(worker=w, change_point=cp))
+            out += self._drift_screen(cohort, cols, n)
+        if (
+            self.max_cohorts is not None
+            and sum(1 for c in self._cohorts if c.batch is not None)
+            > self.max_cohorts
+        ):
+            self.consolidate()
         return out
 
-    def _verify(self, worker: int, idx: int, n: int) -> ChangePoint | None:
-        w = self.verify_window
-        lo = max(0, idx - w, self._history.start)
-        hi = min(n, idx + w)
-        return _verify_windows(
-            self._history.column(worker, lo, idx),
-            self._history.column(worker, idx, hi),
-            idx,
-            self.verify_threshold,
+    def _drift_screen(
+        self, cohort: _Cohort, cols: np.ndarray, n: int
+    ) -> list[FleetFlag]:
+        """Lagged-window drift candidates for one cohort (see ``drift_ref``).
+
+        One vectorized mean-vs-mean comparison per tick; candidates go
+        through the exact multi-scale verification like BOCD flags do, so
+        the screen adds sensitivity to gradual onsets without adding a new
+        false-positive source.
+        """
+        if not self.drift_ref:
+            return []
+        i = n - 1
+        lag_lo = n - self.drift_ref - self.drift_ref_window
+        if lag_lo < max(cohort.start, self._history.start):
+            return []
+        ref = self._history.rows(lag_lo, lag_lo + self.drift_ref_window)[
+            :, cols
+        ].mean(axis=0)
+        cur = self._history.rows(n - self.drift_cur_window, n)[:, cols].mean(
+            axis=0
         )
+        rel = np.abs(cur - ref) / np.maximum(ref, 1e-12)
+        over = rel >= self.verify_threshold
+        self._drift_count[cols[over]] += 1
+        self._drift_count[cols[~over]] = 0
+        out: list[FleetFlag] = []
+        for local_w in np.flatnonzero(over):
+            w = cohort.cols[int(local_w)]
+            # The reference window must postdate the worker's last confirmed
+            # change-point: a drift candidate whose baseline straddles an
+            # already-flagged change is that change re-detected against a
+            # stale reference, not a new fault.
+            if (
+                self._drift_count[w] < self.drift_hold
+                or lag_lo <= self._last_flag[w]
+            ):
+                continue
+            idx = i - self.drift_cur_window + 1
+            cp = self._verify(w, idx, n, floor=cohort.start)
+            if cp is not None:
+                self._last_flag[w] = idx
+                out.append(FleetFlag(worker=w, change_point=cp))
+        return out
+
+    def _verify(
+        self, worker: int, idx: int, n: int, floor: int = 0
+    ) -> ChangePoint | None:
+        for w in (self.verify_window, *self.verify_windows):
+            lo = max(floor, idx - w, self._history.start)
+            hi = min(n, idx + w)
+            cp = _verify_windows(
+                self._history.column(worker, lo, idx),
+                self._history.column(worker, idx, hi),
+                idx,
+                self.verify_threshold,
+            )
+            if cp is not None:
+                return cp
+        return None
 
 
 def suspicious_groups(

@@ -97,9 +97,14 @@ class MitigationPlanner:
         return self._impact
 
     def update(
-        self, slow_iters: int = 1, current_time: float | None = None
+        self, slow_iters: float = 1, current_time: float | None = None
     ) -> StrategyKey | None:
         """Register ``slow_iters`` more degraded iterations; maybe escalate.
+
+        ``slow_iters`` may be fractional: a fleet monitor sampling on a
+        fixed cadence observes ``sample_period / iter_time`` iterations per
+        sample, and the impact integral must count iterations, not samples,
+        for the ski-rental break-even to be in wall-clock units.
 
         ``current_time`` is the *measured* iteration time now — the paper
         escalates only while "the current strategy proves ineffective", so

@@ -97,6 +97,25 @@ class MatrixRingBuffer:
         self._data[self._n % self._data.shape[0]] = row
         self._n += 1
 
+    def add_column(self, fill: float = np.nan) -> int:
+        """Append one worker column (dynamic fleet membership).
+
+        Already-retained ticks get ``fill`` for the new worker — its history
+        genuinely starts now, and NaN-filled rows poison any window that
+        reaches before the join, which is exactly the failure mode we want
+        loud. Returns the new column's index.
+        """
+        cap, w = self._data.shape
+        data = np.empty((cap, w + 1))
+        data[:, :w] = self._data
+        data[:, w] = fill
+        self._data = data
+        return w
+
+    def remove_column(self, idx: int) -> None:
+        """Drop one worker column; columns above ``idx`` shift down by one."""
+        self._data = np.delete(self._data, idx, axis=1)
+
     def rows(self, lo: int, hi: int | None = None) -> np.ndarray:
         """Tick rows ``[lo, hi)`` as a ``(hi - lo, B)`` array (clamped)."""
         cap = self._data.shape[0]

@@ -5,7 +5,7 @@
         [--inject gpu:3:0.5:100:600] [--smoke] [--events]
 
 ``--inject kind:target:severity:start:duration`` adds a fail-slow to the
-attached cluster performance model (kind: gpu|cpu|link). Detection and
+attached cluster performance model (kind: gpu|cpu|link|nic). Detection and
 mitigation run through :mod:`repro.controlplane`; ``--events`` dumps the
 control plane's typed event log (diagnoses, strategy dispatches) after the
 run.
@@ -28,6 +28,7 @@ KIND = {
     "gpu": InjectionKind.GPU_SLOW,
     "cpu": InjectionKind.CPU_CONTENTION,
     "link": InjectionKind.LINK_CONGESTION,
+    "nic": InjectionKind.NIC_CONGESTION,
 }
 
 

@@ -1,0 +1,435 @@
+"""Campaign runner — multi-job fleets under fail-slow workloads.
+
+Builds a deterministic :class:`CampaignSpec` from a preset + seed (job
+placement on the shared hardware map, join schedule, fleet-level fault
+schedule and its per-job translations), then executes it under one of four
+mitigation modes:
+
+* ``healthy`` — no faults, no control plane: the JCT floor.
+* ``faults``  — faults on, no mitigation: the JCT ceiling.
+* ``ckpt``    — faults on, detection + checkpoint-restart-only ladder: the
+  baseline the paper compares its multi-level mitigation against.
+* ``falcon``  — faults on, full S1-S4 ski-rental ladder.
+
+The clock is a *sampling* clock: one tick = ``preset.tick_seconds`` of
+simulated wall time, in which every live job's current iteration time is
+sampled once (exactly how a fleet monitor scrapes heterogeneous jobs whose
+iteration periods differ). A job completes ``tick_seconds / iter_time``
+iterations per tick — minus time spent paying one-off mitigation overheads
+— and *leaves the campaign* when its quota is done, while later jobs join
+mid-flight: the control plane's dynamic-membership path (warming cohorts,
+frontier sub-slicing) is on the hot path of every churny campaign.
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass, field, replace
+
+import numpy as np
+
+from repro.cluster.injector import FailSlowInjector, Injection, InjectionKind
+from repro.cluster.simulator import JobSpec, TrainingSimulator
+from repro.cluster.spec import ClusterSpec, ClusterState
+from repro.controlplane import (
+    CkptRestartStrategy,
+    ControlPlane,
+    IgnoreStrategy,
+    MitigationResult,
+    StrategyRegistry,
+    default_registry,
+)
+from repro.scenarios.presets import JobTemplate, ScenarioPreset, get_preset
+
+MODES = ("healthy", "faults", "ckpt", "falcon")
+
+
+@dataclass(frozen=True)
+class PlacedJob:
+    """One job instance pinned to its slice of the shared hardware map."""
+
+    job_id: str
+    template: JobTemplate
+    #: global device ids, in local-rank order
+    devices: tuple[int, ...]
+    #: global node ids, in local-node order
+    nodes: tuple[int, ...]
+    join_tick: int
+    steps: int
+    #: this job's view of the fleet schedule, in local coordinates
+    local_schedule: tuple[Injection, ...]
+    #: relative iteration-time impact of each local episode applied alone
+    #: to a healthy cluster at full severity (parallel to local_schedule)
+    impacts: tuple[float, ...]
+    #: indices into the campaign's global schedule (parallel again)
+    global_ids: tuple[int, ...]
+    healthy_iter_time: float
+
+    @property
+    def local_cluster(self) -> ClusterSpec:
+        q = len(self.devices) // len(self.nodes)
+        return ClusterSpec(n_nodes=len(self.nodes), gpus_per_node=q)
+
+    def make_sim(self) -> TrainingSimulator:
+        return TrainingSimulator(
+            cluster=self.local_cluster,
+            job=JobSpec(
+                model=self.template.model_spec(),
+                tp=self.template.tp,
+                dp=self.template.dp,
+                pp=self.template.pp,
+                micro_batches=self.template.micro_batches,
+            ),
+        )
+
+    def hardware(self) -> list[str]:
+        return [f"g{d}" for d in self.devices]
+
+    def hosts(self) -> list[str]:
+        return [f"n{n}" for n in self.nodes]
+
+
+@dataclass(frozen=True)
+class CampaignSpec:
+    """Everything a campaign run needs, fixed by (preset, jobs, seed)."""
+
+    preset: ScenarioPreset
+    seed: int
+    n_nodes: int
+    jobs: tuple[PlacedJob, ...]
+    schedule: tuple[Injection, ...]  # fleet coordinates
+
+    @property
+    def tick_seconds(self) -> float:
+        return self.preset.tick_seconds
+
+    @property
+    def max_ticks(self) -> int:
+        return self.preset.max_ticks
+
+
+@dataclass
+class JobOutcome:
+    """Per-job result of one campaign run."""
+
+    job_id: str
+    join_time: float
+    end_time: float | None = None  # None = censored at the horizon
+    iters_done: float = 0.0
+    steps: int = 0
+    overhead_paid: float = 0.0
+    mitigations: dict = field(default_factory=dict)  # strategy label -> count
+
+    @property
+    def finished(self) -> bool:
+        return self.end_time is not None
+
+    def jct(self, horizon_s: float) -> float:
+        return (self.end_time if self.finished else horizon_s) - self.join_time
+
+
+@dataclass
+class RunResult:
+    mode: str
+    outcomes: dict[str, JobOutcome]
+    events: list  # control-plane event log ([] for plane-less modes)
+    ticks_run: int
+    horizon_s: float
+
+
+# ------------------------------------------------------------------ build
+class _Packer:
+    """First-fit placement of job slices onto the shared fleet.
+
+    Whole-node jobs take nodes outright; sub-node jobs (``span_nodes``
+    slices of q devices) take the lowest free q-block of each chosen node,
+    so two 4-GPU jobs land co-located on one 8-GPU node and two half-node
+    slices of a 2-node job straddle a node pair — the co-location patterns
+    the dedupe scenarios need. The fleet grows as needed.
+    """
+
+    def __init__(self, gpus_per_node: int) -> None:
+        self.gpn = gpus_per_node
+        self.free: list[list[int]] = []  # per node, ascending free devices
+
+    def _grow(self) -> int:
+        node = len(self.free)
+        self.free.append(
+            [node * self.gpn + i for i in range(self.gpn)]
+        )
+        return node
+
+    def place(self, template: JobTemplate) -> tuple[list[int], list[int]]:
+        n = template.n_devices
+        span = template.span_nodes
+        if span == 0:
+            span = max(1, n // self.gpn) if n % self.gpn == 0 else 1
+        if n % span:
+            raise ValueError(f"{n} devices cannot span {span} nodes evenly")
+        q = n // span
+        if q > self.gpn:
+            raise ValueError(
+                f"{q} devices per node > {self.gpn} gpus_per_node"
+            )
+        nodes: list[int] = []
+        for node, free in enumerate(self.free):
+            if len(free) >= q:
+                nodes.append(node)
+                if len(nodes) == span:
+                    break
+        while len(nodes) < span:
+            nodes.append(self._grow())
+        devices: list[int] = []
+        for node in nodes:
+            take, self.free[node] = (
+                self.free[node][:q], self.free[node][q:]
+            )
+            devices += take
+        return devices, nodes
+
+    @property
+    def n_nodes(self) -> int:
+        return len(self.free)
+
+
+def _translate(
+    inj: Injection,
+    dev_inverse: dict[int, int],
+    node_inverse: dict[int, int],
+) -> Injection | None:
+    """A fleet-coordinate episode in one job's local coordinates (None =
+    the job's slice is untouched by it)."""
+    if inj.kind is InjectionKind.GPU_SLOW:
+        (d,) = inj.target
+        if d in dev_inverse:
+            return replace(inj, target=(dev_inverse[d],))
+        return None
+    if inj.kind in (InjectionKind.CPU_CONTENTION, InjectionKind.NIC_CONGESTION):
+        (n,) = inj.target
+        if n in node_inverse:
+            return replace(inj, target=(node_inverse[n],))
+        return None
+    a, b = inj.target
+    if a in dev_inverse and b in dev_inverse:
+        return replace(inj, target=(dev_inverse[a], dev_inverse[b]))
+    return None
+
+
+def _impact(sim: TrainingSimulator, local: Injection) -> float:
+    """Relative iteration-time increase of one episode at full severity,
+    applied alone to a healthy cluster — the ground-truth observability of
+    the fault for this job (a congested link no ring traverses is harmless)."""
+    probe = ClusterState(sim.cluster)
+    FailSlowInjector([replace(local, start=0.0, duration=1.0, ramp=0.0)]).apply(
+        probe, 0.5
+    )
+    saved = sim.state
+    sim.state = probe
+    t = sim.iteration_time()
+    sim.state = saved
+    return t / sim.healthy_iteration_time() - 1.0
+
+
+def build_campaign(
+    preset: ScenarioPreset | str,
+    n_jobs: int | None = None,
+    seed: int = 0,
+    max_ticks: int | None = None,
+) -> CampaignSpec:
+    """Deterministically expand (preset, jobs, seed) into a campaign spec."""
+    if isinstance(preset, str):
+        preset = get_preset(preset)
+    if max_ticks is not None:
+        preset = replace(preset, max_ticks=max_ticks)
+    n_jobs = n_jobs or preset.default_jobs
+    rng = np.random.default_rng([seed, 0xFA1C])
+    dt = preset.tick_seconds
+    horizon_s = preset.max_ticks * dt
+
+    packer = _Packer(preset.gpus_per_node)
+    for _ in range(preset.n_nodes):
+        packer._grow()
+
+    # Joins: job 0 anchors the fleet at tick 0, the rest stagger (churn).
+    joins = [0] + sorted(
+        int(rng.integers(0, preset.join_spread_ticks + 1))
+        for _ in range(n_jobs - 1)
+    )
+
+    placements = []
+    for i in range(n_jobs):
+        template = preset.job_templates[i % len(preset.job_templates)]
+        devices, nodes = packer.place(template)
+        placements.append((template, devices, nodes))
+
+    # Fleet-level fault schedule: preset's fixed episodes + sampled model.
+    schedule: list[Injection] = []
+    if preset.fixed_schedule is not None:
+        schedule += preset.fixed_schedule(
+            packer.n_nodes, preset.gpus_per_node, dt
+        )
+    if preset.fault_model is not None:
+        schedule += preset.fault_model.sample_schedule(
+            rng, packer.n_nodes, preset.gpus_per_node, horizon_s
+        )
+    schedule.sort(key=lambda i: (i.start, i.kind.value, i.target))
+
+    jobs: list[PlacedJob] = []
+    for i, (template, devices, nodes) in enumerate(placements):
+        dev_inverse = {d: k for k, d in enumerate(devices)}
+        node_inverse = {n: k for k, n in enumerate(nodes)}
+        placed = PlacedJob(
+            job_id=f"j{i}", template=template, devices=tuple(devices),
+            nodes=tuple(nodes), join_tick=joins[i], steps=0,
+            local_schedule=(), impacts=(), global_ids=(),
+            healthy_iter_time=0.0,
+        )
+        sim = placed.make_sim()
+        it_h = sim.healthy_iteration_time()
+        locals_: list[Injection] = []
+        impacts: list[float] = []
+        gids: list[int] = []
+        for gi, inj in enumerate(schedule):
+            local = _translate(inj, dev_inverse, node_inverse)
+            if local is None:
+                continue
+            impact = _impact(sim, local)
+            if impact <= 1e-9:
+                continue
+            locals_.append(local)
+            impacts.append(impact)
+            gids.append(gi)
+        # Auto quota: finish well inside the horizon even when fail-slows
+        # stretch the job's effective iteration time (censored JCTs would
+        # void the healthy/faults/falcon comparison).
+        steps = template.steps or max(
+            30,
+            int(
+                float(rng.uniform(0.3, 0.5))
+                * (preset.max_ticks - joins[i]) * dt / it_h
+            ),
+        )
+        jobs.append(replace(
+            placed,
+            steps=steps,
+            local_schedule=tuple(locals_),
+            impacts=tuple(impacts),
+            global_ids=tuple(gids),
+            healthy_iter_time=it_h,
+        ))
+    return CampaignSpec(
+        preset=preset, seed=seed, n_nodes=packer.n_nodes,
+        jobs=tuple(jobs), schedule=tuple(schedule),
+    )
+
+
+# -------------------------------------------------------------------- run
+def _registry_for(mode: str):
+    if mode == "falcon":
+        return default_registry()
+    # Checkpoint-restart baseline: detection on, but the only mitigation
+    # mechanism is the paper's S4 (what pre-FALCON production systems do).
+    return (
+        StrategyRegistry()
+        .register(IgnoreStrategy())
+        .register(CkptRestartStrategy())
+    )
+
+
+def run_campaign(spec: CampaignSpec, mode: str) -> RunResult:
+    """Execute one campaign under the given mitigation mode."""
+    if mode not in MODES:
+        raise ValueError(f"mode must be one of {MODES}, got {mode!r}")
+    preset = spec.preset
+    dt = preset.tick_seconds
+    with_faults = mode != "healthy"
+    with_plane = mode in ("ckpt", "falcon")
+    plane = ControlPlane(max_events=1 << 20) if with_plane else None
+
+    pending = sorted(
+        spec.jobs, key=lambda j: (j.join_tick, int(j.job_id[1:]))
+    )
+    live: dict[str, dict] = {}
+    outcomes: dict[str, JobOutcome] = {}
+    ticks = 0
+
+    for tick in range(spec.max_ticks):
+        now = tick * dt
+        while pending and pending[0].join_tick <= tick:
+            placed = pending.pop(0)
+            sim = placed.make_sim()
+            injector = FailSlowInjector(
+                list(placed.local_schedule) if with_faults else []
+            )
+            live[placed.job_id] = {
+                "placed": placed,
+                "sim": sim,
+                "injector": injector,
+                "debt": 0.0,
+                "rng": np.random.default_rng(
+                    [spec.seed, 7, int(placed.job_id[1:])]
+                ),
+            }
+            outcomes[placed.job_id] = JobOutcome(
+                job_id=placed.job_id, join_time=now, steps=placed.steps
+            )
+            if plane is not None:
+                plane.register_job(
+                    placed.job_id, sim,
+                    registry=_registry_for(mode),
+                    overheads=preset.overheads(),
+                    injector=injector,
+                    hardware=placed.hardware(),
+                    hosts=placed.hosts(),
+                    sample_period=dt,
+                    now=now,
+                )
+        if not live and not pending:
+            break
+        ticks = tick + 1
+        now_end = (tick + 1) * dt
+
+        samples: dict[str, float] = {}
+        for job_id, st in live.items():
+            st["injector"].apply(st["sim"].state, now)
+            samples[job_id] = st["sim"].iteration_time() * float(
+                st["rng"].normal(1.0, preset.jitter)
+            )
+
+        if plane is not None and samples:
+            new_events = plane.tick(samples, now_end)
+            for ev in new_events:
+                if isinstance(ev, MitigationResult) and ev.kind == "mitigate":
+                    st = live.get(ev.job_id)
+                    if st is not None and ev.applied:
+                        st["debt"] += ev.overhead
+                        out = outcomes[ev.job_id]
+                        label = (
+                            ev.strategy.name
+                            if hasattr(ev.strategy, "name")
+                            else str(ev.strategy)
+                        )
+                        out.mitigations[label] = (
+                            out.mitigations.get(label, 0) + 1
+                        )
+
+        finished: list[str] = []
+        for job_id, st in live.items():
+            budget = dt
+            pay = min(st["debt"], budget)
+            st["debt"] -= pay
+            budget -= pay
+            out = outcomes[job_id]
+            out.overhead_paid += pay
+            out.iters_done += budget / max(samples[job_id], 1e-12)
+            if out.iters_done >= out.steps:
+                out.end_time = now_end
+                finished.append(job_id)
+        for job_id in finished:
+            del live[job_id]
+            if plane is not None:
+                plane.remove_job(job_id, now_end)
+
+    events = list(plane.events) if plane is not None else []
+    return RunResult(
+        mode=mode, outcomes=outcomes, events=events, ticks_run=ticks,
+        horizon_s=spec.max_ticks * dt,
+    )

@@ -312,3 +312,143 @@ def test_external_mutation_between_applies_is_not_lost():
     sim.state.devices[0].compute_speed = 1.0  # external meddling
     inj.apply(sim.state, 2.0)  # version moved: full reset + re-apply
     assert sim.iteration_time() == pytest.approx(t_ep)
+
+
+# ------------------------------------------- dynamic membership (churn)
+def _posterior(batch, col):
+    """One column's live (run_length, posterior) pairs, sorted."""
+    live = np.isfinite(batch._log_r[:, col])
+    return sorted(
+        zip(batch._rl[live].tolist(), batch._log_r[live, col].tolist())
+    )
+
+
+def test_batched_take_columns_equals_fresh_run():
+    """Sub-slicing mid-stream leaves each survivor's posterior exactly what
+    a fresh (uncapped) recursion over the surviving columns would hold."""
+    x = fleet_matrix(n_workers=10, n_ticks=200, seed=3)
+    scale = bocd.noise_scale_batch(x)
+    keep = [0, 2, 5, 9]
+    full = bocd.BatchedBOCD(10, mu0=x[0] / scale)
+    for t in range(120):
+        full.update(x[t] / scale)
+    full.take_columns(np.array(keep))
+    fresh = bocd.BatchedBOCD(len(keep), mu0=x[0, keep] / scale[keep])
+    for t in range(200):
+        if t >= 120:
+            full.update(x[t, keep] / scale[keep])
+        fresh.update(x[t, keep] / scale[keep])
+    for c in range(len(keep)):
+        a, b = _posterior(full, c), _posterior(fresh, c)
+        assert [rl for rl, _ in a] == [rl for rl, _ in b]
+        assert np.allclose([p for _, p in a], [p for _, p in b])
+    assert np.array_equal(full.map_runlength(), fresh.map_runlength())
+
+
+def test_fleet_remove_worker_matches_fresh_detector():
+    """Flags after a mid-stream leave match a fresh detector that never saw
+    the departed stream (sub-slice equivalence at the FleetDetect level)."""
+    n_t = 200
+    rng = np.random.default_rng(21)
+    x = np.asarray(rng.normal(1.0, 0.01, (n_t, 6)))
+    x[150:, 4] *= 1.4  # onset after the leave, on a surviving stream
+    keep = [0, 1, 3, 4, 5]
+    a = FleetDetect(n_workers=6, max_hypotheses=None)
+    b = FleetDetect(n_workers=5, max_hypotheses=None)
+    flags_a, flags_b = [], []
+    for t in range(n_t):
+        if t == 100:
+            a.remove_worker(2)
+        row = x[t, keep]
+        if t < 100:
+            flags_a += a.tick(x[t])
+        else:
+            flags_a += [f for f in a.tick(row)]
+        flags_b += b.tick(row)
+    assert [(f.worker, f.change_point.index) for f in flags_a] == [
+        (f.worker, f.change_point.index) for f in flags_b
+    ]
+    assert any(f.worker == 3 for f in flags_b)  # old column 4, shifted
+
+
+def test_fleet_add_worker_warms_and_detects():
+    """A stream joining mid-flight is screened after its own warmup and its
+    fail-slow is flagged; established streams are unaffected."""
+    rng = np.random.default_rng(9)
+    fd = FleetDetect(n_workers=3)
+    for t in range(60):
+        fd.tick(rng.normal(1.0, 0.01, 3))
+    w = fd.add_worker()
+    assert (w, fd.n_workers, fd.n_cohorts) == (3, 4, 2)
+    hits = {}
+    for t in range(80):
+        row = np.empty(4)
+        row[:3] = rng.normal(1.0, 0.01, 3)
+        row[3] = rng.normal(2.0 if t < 40 else 2.9, 0.02)
+        for f in fd.tick(row):
+            hits.setdefault(f.worker, t)
+    assert list(hits) == [3]
+    assert abs(hits[3] - 40) <= 4
+
+
+def test_fleet_consolidate_matches_fresh_window_detector():
+    """Re-warming cohorts into one frontier equals a fresh detector fed the
+    common retained history window, flag for flag."""
+    rng = np.random.default_rng(4)
+    fd = FleetDetect(n_workers=3, max_cohorts=None)
+    hist = []
+    for t in range(40):
+        row = rng.normal(1.0, 0.01, 3)
+        hist.append(row)
+        fd.tick(row)
+    fd.add_worker()
+    for t in range(30):
+        row = np.empty(4)
+        row[:3] = rng.normal(1.0, 0.01, 3)
+        row[3] = rng.normal(1.5, 0.015)
+        hist.append(row)
+        fd.tick(row)
+    assert fd.n_cohorts == 2
+    fd.consolidate()
+    assert fd.n_cohorts == 1
+    # Fresh detector over the common window (the join tick onward).
+    window = np.asarray([h for h in hist if len(h) == 4])
+    fresh = FleetDetect(n_workers=4, max_cohorts=None)
+    for row in window:
+        fresh.tick(row)
+    onset = 70
+    flags_a, flags_b = [], []
+    for t in range(40):
+        row = np.empty(4)
+        row[:3] = rng.normal(1.0, 0.01, 3)
+        row[3] = rng.normal(1.5, 0.015)
+        if t >= 10:
+            row[1] *= 1.45
+        flags_a += fd.tick(row)
+        flags_b += fresh.tick(row)
+    assert [f.worker for f in flags_a] == [f.worker for f in flags_b]
+    # Absolute indices differ by the 40 pre-join ticks the fresh one skipped.
+    assert [f.change_point.index - 40 for f in flags_a] == [
+        f.change_point.index for f in flags_b
+    ]
+
+
+def test_fleet_drift_screen_catches_ramped_onset():
+    """A gradual ramp (invisible to the run-length rule — each step is
+    barely surprising) is flagged by the lagged drift screen."""
+    rng = np.random.default_rng(0)
+    n_t = 250
+    prof = np.concatenate([
+        np.zeros(100), np.linspace(0.0, 0.3, 40), np.full(n_t - 140, 0.3)
+    ])
+    fd = FleetDetect(n_workers=1)
+    hits = []
+    for t in range(n_t):
+        hits += [
+            (t, f.change_point.relative_change)
+            for f in fd.tick(np.array([(1 + prof[t]) * rng.normal(1, 0.003)]))
+        ]
+    assert hits, "ramp missed"
+    t0, rel = hits[0]
+    assert 100 < t0 < 140  # confirmed during the ramp
+    assert rel > 0.1
