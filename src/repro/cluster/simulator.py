@@ -74,6 +74,23 @@ class _Layout:
     """
 
     def __init__(self, placement: list[int], job: JobSpec) -> None:
+        self.tp_keys = [
+            f"tp:s{s}d{d}" for s in range(job.pp) for d in range(job.dp)
+        ]
+        self.dp_keys = [
+            f"dp:s{s}t{k}" for s in range(job.pp) for k in range(job.tp)
+        ]
+        self.update(placement, job)
+
+    def update(self, placement: list[int], job: JobSpec) -> None:
+        """Refresh the index tensors for a new placement *in place*.
+
+        The incremental rebuild path for :meth:`TrainingSimulator.
+        remap_groups`: the group-key strings (the expensive part of a full
+        build, and placement-independent) survive; only the device grid and
+        the ring/hop endpoint gathers are recomputed — O(devices) array
+        work with no Python-level string formatting.
+        """
         grid = np.asarray(placement, dtype=np.int64).reshape(
             job.pp, job.dp, job.tp
         )
@@ -93,12 +110,6 @@ class _Layout:
             self.hop_edges = (
                 grid[:-1, :, 0].reshape(-1), grid[1:, :, 0].reshape(-1)
             )
-        self.tp_keys = [
-            f"tp:s{s}d{d}" for s in range(job.pp) for d in range(job.dp)
-        ]
-        self.dp_keys = [
-            f"dp:s{s}t{k}" for s in range(job.pp) for k in range(job.tp)
-        ]
 
 
 @dataclass
@@ -320,6 +331,32 @@ class TrainingSimulator:
         if sorted(perm) != list(range(self.job.n_devices)):
             raise ValueError("not a permutation")
         self.placement = [self.placement[p] for p in perm]
+
+    def remap_groups(self, placement: list[int]) -> None:
+        """Re-shape communication groups to an explicit device placement.
+
+        ``placement`` lists the physical device for every logical position
+        (HybridTopology stage-major order) and must permute the job's
+        *current* device set — this is the placement-aware mitigation hook
+        (:mod:`repro.core.placement`): swapping ranks across DP groups
+        concentrates a slow host's members into few groups so S2/S3 have
+        skew to exploit.
+
+        Unlike reassigning ``placement`` directly, the cached
+        :class:`_Layout` is refreshed *incrementally* (index tensors
+        rebuilt in place, group-key strings reused) instead of being built
+        from scratch on the next evaluation.
+        """
+        new = [int(p) for p in placement]
+        if sorted(new) != sorted(self.placement):
+            raise ValueError("remap must permute the job's current devices")
+        d = self.__dict__
+        lay = d.get("_layout_cache")
+        fresh = lay is not None and d.get("_layout_ver") == d.get("_place_ver")
+        self.placement = new  # bumps placement/config versions
+        if fresh:
+            lay.update(new, self.job)
+            d["_layout_ver"] = d["_place_ver"]
 
     def restart(self) -> None:
         """S4: checkpoint-and-restart onto healthy devices (modeled as a

@@ -25,8 +25,11 @@ from repro.controlplane.strategies import (  # noqa: F401
     MicroBatchStrategy,
     MitigationContext,
     MitigationStrategy,
+    PlacementMicroBatchStrategy,
+    PlacementTopologyStrategy,
     StrategyOutcome,
     StrategyRegistry,
     TopologyStrategy,
     default_registry,
+    placement_registry,
 )

@@ -66,6 +66,11 @@ class ClusterAdapter(ClusterInterface, Protocol):
         """Compose a logical->physical permutation onto placement (S3)."""
         ...
 
+    def remap_groups(self, placement: list[int]) -> None:
+        """Re-shape communication groups to an explicit device placement
+        (S2P/S3P — the placement-aware mitigation rungs)."""
+        ...
+
     def restart(self) -> None:
         """Checkpoint-and-restart onto healthy devices (S4)."""
         ...

@@ -26,13 +26,14 @@ strategies plug in without touching this orchestrator.
 from __future__ import annotations
 
 from collections import deque
-from collections.abc import Mapping, Sequence
+from collections.abc import Callable, Mapping, Sequence
 from dataclasses import dataclass, field
 
 import numpy as np
 
 from repro.core.detector import FalconDetect, FleetDetect
-from repro.core.events import FailSlowEvent
+from repro.core.duration import DurationModel
+from repro.core.events import FailSlowEvent, Strategy
 from repro.core.planner import MitigationPlanner
 from repro.controlplane.events import (
     ControlEvent,
@@ -72,8 +73,18 @@ class JobHandle:
     #: scrape on a fixed cadence); None = one sample == one iteration, the
     #: per-iteration ``observe`` semantics
     sample_period: float | None = None
+    #: remaining useful work of the job in wall-clock seconds — caps the
+    #: benefit any mitigation can still deliver (the predictive ski-rental
+    #: horizon is min(fault remaining, job remaining)); None = unbounded
+    work_remaining: Callable[[], float] | None = None
     planner: MitigationPlanner | None = None
     steps: int = field(default=0)
+    #: wall clock of this job's last checkpoint-restart (None = never)
+    _last_restart: float | None = field(default=None, repr=False)
+    #: set when a restart's bought healthy window did not even cover its
+    #: own overhead — restarts cannot win in this fault environment, so
+    #: S4 is withheld from later ladders for this job
+    _s4_burned: bool = field(default=False, repr=False)
     #: this job's column in the fleet screen (None until the fleet exists)
     _fleet_col: int | None = field(default=None, repr=False)
     _ticks_active: int = field(default=0)
@@ -95,11 +106,24 @@ class ControlPlane:
     """Multi-job FALCON orchestrator over typed control-plane events."""
 
     def __init__(
-        self, fleet_kwargs: dict | None = None, max_events: int = 65536
+        self,
+        fleet_kwargs: dict | None = None,
+        max_events: int = 65536,
+        duration_model: DurationModel | None = None,
     ) -> None:
         self._jobs: dict[str, JobHandle] = {}
         self._fleet: FleetDetect | None = None
         self._fleet_kwargs = dict(fleet_kwargs or {})
+        #: fleet-shared fault-duration survival curves: every job's
+        #: resolved diagnoses sharpen every other job's ski-rental
+        #: break-even; None keeps the paper's fixed-horizon rule
+        self.duration_model = duration_model
+        #: accumulated job-seconds watched and fresh incidents seen — their
+        #: ratio is the observed mean time between incidents per job, the
+        #: healthy window any mitigation can actually buy (caps the
+        #: predictive break-even's benefit under fail-slow storms)
+        self._watched_s: float = 0.0
+        self._fresh_onsets: int = 0
         #: job_id -> latest unresolved Diagnosis (the cross-job dedupe table)
         self._active_diag: dict[str, Diagnosis] = {}
         #: event log in emission order, bounded like the Monitor's comm log
@@ -120,6 +144,7 @@ class ControlPlane:
         hardware: Sequence[str] | None = None,
         hosts: Sequence[str] | None = None,
         sample_period: float | None = None,
+        work_remaining: Callable[[], float] | None = None,
         now: float = 0.0,
     ) -> JobHandle:
         """Register a job — before the first tick or at any point after.
@@ -141,6 +166,7 @@ class ControlPlane:
             hardware=tuple(hardware) if hardware is not None else None,
             hosts=tuple(hosts) if hosts is not None else None,
             sample_period=sample_period,
+            work_remaining=work_remaining,
         )
         self._jobs[job_id] = job
         if self._fleet is not None:
@@ -193,6 +219,7 @@ class ControlPlane:
             )
         ]
         job.steps += 1
+        self._watched_s += max(iter_time, 0.0)
         had_active = job.detector.active_event is not None
         new_event = job.detector.observe(iter_time, now)
         out += self._after_detection(job, new_event, had_active, iter_time, now)
@@ -238,6 +265,11 @@ class ControlPlane:
                 )
             )
             job.steps += 1
+            self._watched_s += (
+                job.sample_period
+                if job.sample_period is not None
+                else max(iter_time, 0.0)
+            )
             had_active = job.detector.active_event is not None
             new_event: FailSlowEvent | None = None
             deduped_from: str | None = None
@@ -282,6 +314,22 @@ class ControlPlane:
     ) -> list[ControlEvent]:
         out: list[ControlEvent] = []
         if new_event is not None:
+            # Every onset — fresh, compound pile-on, or adopted from a
+            # co-located job — is one more fault arrival hitting a job:
+            # together with the job-seconds watched it yields the observed
+            # incident inter-arrival time (see :meth:`incident_gap`).
+            self._fresh_onsets += 1
+            if (
+                job._last_restart is not None
+                and not job._s4_burned
+                and now - job._last_restart
+                <= job.effective_overheads().get(Strategy.CKPT_AND_RESTART, 0.0)
+            ):
+                # Fool me once: the last restart's healthy window did not
+                # even pay back its own overhead before the next incident
+                # landed — the fault environment, not any one fault, is
+                # the bottleneck, and further restarts cannot win.
+                job._s4_burned = True
             diag = Diagnosis(
                 job_id=job.job_id,
                 time=now,
@@ -291,7 +339,16 @@ class ControlPlane:
             )
             out.append(diag)
             self._active_diag[job.job_id] = diag
-            job.planner = job.registry.make_planner(new_event, job.overheads)
+            job.planner = job.registry.make_planner(
+                new_event,
+                job.overheads,
+                estimator=self.duration_model,
+                work_remaining=job.work_remaining,
+                incident_gap=self.incident_gap,
+                exclude=(
+                    (Strategy.CKPT_AND_RESTART,) if job._s4_burned else None
+                ),
+            )
         active = job.detector.active_event
         if active is None:
             if had_active:
@@ -322,6 +379,8 @@ class ControlPlane:
                         job_id=job.job_id, injector=job.injector,
                     ),
                 )
+                if strategy is Strategy.CKPT_AND_RESTART and outcome.applied:
+                    job._last_restart = now
                 out.append(
                     MitigationResult(
                         job_id=job.job_id,
@@ -340,6 +399,18 @@ class ControlPlane:
         micro-batch split for the recovered cluster)."""
         out: list[ControlEvent] = []
         closed = job.detector.history[-1] if job.detector.history else None
+        if closed is not None and self.duration_model is not None:
+            # Feed the survival curves. A fault our own restart cleared
+            # would have lasted longer — record it right-censored so
+            # mitigation does not bias the curve short.
+            censored = job.planner is not None and any(
+                k is Strategy.CKPT_AND_RESTART for k in job.planner.applied
+            )
+            self.duration_model.observe(
+                closed.root_cause,
+                closed.duration(now),
+                censored=censored,
+            )
         if closed is not None:
             out.append(
                 Diagnosis(
@@ -466,6 +537,19 @@ class ControlPlane:
         return job.detector.adopt_event(event, now)
 
     # -- introspection ---------------------------------------------------
+    def incident_gap(self) -> float:
+        """Observed mean wall-clock gap between fresh incidents per job.
+
+        Derived from the plane's own event stream (job-seconds watched over
+        fresh onset diagnoses). This is the healthy window a successful
+        mitigation can expect to buy before the next fault lands — under a
+        fail-slow storm it, not the current fault's remaining duration,
+        bounds what an expensive action (S4) is worth. The +1 is Laplace
+        smoothing for the systematic undercount early in a fleet's life:
+        detection warmup and latency mean arrivals are always seen late.
+        """
+        return self._watched_s / (self._fresh_onsets + 1)
+
     def diagnoses(self, job_id: str | None = None) -> list[Diagnosis]:
         return [
             e for e in self.events

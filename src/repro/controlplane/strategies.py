@@ -14,12 +14,29 @@ ladder that used to be hand-wired in ``FalconTrainer._apply_strategy``:
   the measure-before-commit revert.
 * :class:`CkptRestartStrategy`     — S4, restart onto healthy devices.
 
+Two *placement-aware* rungs extend the ladder beyond the paper
+(:func:`placement_registry`; Malleus-style group malleability, see
+:mod:`repro.core.placement` and docs/mitigation.md):
+
+* :class:`PlacementMicroBatchStrategy` — ``S2P``: when a host-scoped fault
+  hits every DP group equally (node-spanning groups leave S2 no skew),
+  re-shape the groups so the slow host concentrates in as few of them as
+  possible, then re-solve the micro-batch split over the restored skew.
+* :class:`PlacementTopologyStrategy`   — ``S3P``: when congestion hits a
+  re-shaped layout whose DP rings now cross the congested fabric, restore
+  the canonical stage-contiguous placement to internalize ring traffic.
+
+Both measure the modeled iteration time before committing and revert when
+the re-shape does not pay (a concentrated layout sends DP rings across
+the inter-node fabric — whether that trade wins depends on severity).
+
 A new scenario (e.g. swapping in a hot spare) is one more class registered
 with its overhead — no trainer or planner edit; see docs/control_plane.md
 for a worked example.
 """
 from __future__ import annotations
 
+from collections.abc import Callable, Collection
 from dataclasses import dataclass, field
 from typing import Protocol, runtime_checkable
 
@@ -27,8 +44,15 @@ import numpy as np
 
 from repro.core import microbatch as mb_lib
 from repro.core import topology as topo_lib
+from repro.core.duration import DurationModel
 from repro.core.events import FailSlowEvent, RootCause, Strategy, StrategyKey
+from repro.core.placement import PlacementPlanner, slow_devices_for
 from repro.core.planner import DEFAULT_OVERHEADS, MitigationPlanner
+
+#: default wall-clock overheads of the placement rungs: a group re-shape
+#: exchanges optimizer/parameter shards between the swapped ranks —
+#: heavier than an S2 re-split, comparable to an S3 placement swap
+PLACEMENT_OVERHEADS: dict[StrategyKey, float] = {"S2P": 8.0, "S3P": 12.0}
 
 
 @dataclass
@@ -210,6 +234,168 @@ class TopologyStrategy:
         return None  # placement stays; it is optimal for the healthy state too
 
 
+# ----------------------------------------------------------------- S2P
+def _remap_surface(sim) -> bool:
+    return all(
+        hasattr(sim, a)
+        for a in ("remap_groups", "per_microbatch_times", "set_allocation")
+    )
+
+
+def _solve_alloc(sim) -> list[int]:
+    return mb_lib.solve_allocation(
+        sim.per_microbatch_times(), sim.job.micro_batches,
+        offset=sim.job.pp - 1,
+    )
+
+
+@dataclass
+class PlacementMicroBatchStrategy:
+    """S2P — re-shape DP groups around a host fault, then re-split batches.
+
+    The remap is committed only if the modeled iteration time beats the
+    best S2-alone split on the *current* placement: concentration trades
+    intra-node DP rings for inter-node ones, a trade that wins for severe
+    faults and loses for weak ones (measured, not assumed).
+    """
+
+    key: StrategyKey = "S2P"
+    planner: PlacementPlanner = field(default_factory=PlacementPlanner)
+
+    def handles(self, event: FailSlowEvent) -> bool:
+        # Compute-side faults with located components: host-scoped (node:)
+        # or device-scoped (gpu:) — S2P, like S2, cannot fix slow comm.
+        if event.root_cause is RootCause.NETWORK_CONGESTION:
+            return False
+        return any(
+            c.partition(":")[0] in ("node", "gpu") for c in event.components
+        )
+
+    #: a concentration must beat the S2-alone split by this factor to be
+    #: committed (hysteresis: marginal remaps are not worth carrying into
+    #: whatever fault comes next); restoring the canonical layout only
+    #: needs to not lose
+    commit_factor: float = 0.97
+
+    def apply(self, ctx: MitigationContext) -> StrategyOutcome:
+        sim = ctx.adapter
+        if not _remap_surface(sim):
+            return StrategyOutcome(applied=False)
+        node_of = getattr(sim, "node_of_rank", None)
+        slow = slow_devices_for(ctx.event, sim.job.n_devices, node_of)
+        remap = self.planner.plan(
+            tp=sim.job.tp, dp=sim.job.dp, pp=sim.job.pp,
+            placement=sim.placement, slow=slow, node_of=node_of,
+        )
+        # Candidate shapes for the *current* diagnosis: concentrate around
+        # it, or fall back to the canonical layout (un-doing a previous
+        # concentration whose fault has moved on — compound events replace
+        # the diagnosis without a relief, so S2P must re-shape both ways).
+        shapes: list[tuple[str, list[int], float]] = []
+        if remap is not None:
+            shapes.append(
+                ("concentrated", list(remap.placement), self.commit_factor)
+            )
+        canonical = sorted(sim.placement)
+        if canonical != list(sim.placement):
+            shapes.append(("canonical", canonical, 0.999))
+        if not shapes:
+            return StrategyOutcome(applied=False, detail={"no_remap": True})
+        saved_place = list(sim.placement)
+        base_alloc = _solve_alloc(sim)
+        sim.set_allocation(base_alloc)
+        best_t = sim.iteration_time()
+        best: tuple[str, list[int], list[int]] | None = None
+        for name, place, factor in shapes:
+            sim.remap_groups(place)
+            alloc = _solve_alloc(sim)
+            sim.set_allocation(alloc)
+            t = sim.iteration_time()
+            if t < best_t * factor:
+                best_t, best = t, (name, place, alloc)
+            sim.remap_groups(saved_place)
+        if best is None:
+            # No shape beats the S2-alone split on the current placement.
+            sim.set_allocation(base_alloc)
+            return StrategyOutcome(applied=True, detail={"reverted": True})
+        name, place, alloc = best
+        sim.remap_groups(place)
+        sim.set_allocation(alloc)
+        detail: dict = {"reverted": False, "shape": name, "allocation": alloc}
+        if name == "concentrated" and remap is not None:
+            detail["slow_groups"] = list(remap.slow_groups)
+        return StrategyOutcome(applied=True, detail=detail)
+
+    def relieve(self, ctx: MitigationContext) -> StrategyOutcome | None:
+        """A concentrated layout is *not* optimal for a healthy cluster
+        (its DP rings cross nodes): after relief, restore the canonical
+        placement when that measures faster."""
+        sim = ctx.adapter
+        if not _remap_surface(sim):
+            return None
+        canonical = sorted(sim.placement)
+        if canonical == list(sim.placement):
+            return None
+        saved_place = list(sim.placement)
+        sim.set_allocation(_solve_alloc(sim))
+        base_t = sim.iteration_time()
+        sim.remap_groups(canonical)
+        sim.set_allocation(_solve_alloc(sim))
+        if sim.iteration_time() >= base_t * 0.999:
+            sim.remap_groups(saved_place)
+            sim.set_allocation(_solve_alloc(sim))
+            return None
+        return StrategyOutcome(applied=True, detail={"restored": True})
+
+
+# ----------------------------------------------------------------- S3P
+@dataclass
+class PlacementTopologyStrategy:
+    """S3P — internalize ring traffic away from congested inter-node fabric.
+
+    The compound-fault counterpart of S2P: a NIC congests *while* a
+    re-shaped (concentrated) layout has DP rings crossing that NIC. The
+    canonical stage-contiguous placement sends only the light PP
+    activations across nodes; restore it when the model says it wins.
+    """
+
+    key: StrategyKey = "S3P"
+
+    def handles(self, event: FailSlowEvent) -> bool:
+        if event.root_cause not in (
+            RootCause.NETWORK_CONGESTION, RootCause.UNKNOWN
+        ):
+            return False
+        return any(
+            c.partition(":")[0] in ("nic", "link") for c in event.components
+        )
+
+    def apply(self, ctx: MitigationContext) -> StrategyOutcome:
+        sim = ctx.adapter
+        if not _remap_surface(sim):
+            return StrategyOutcome(applied=False)
+        canonical = sorted(sim.placement)
+        if canonical == list(sim.placement):
+            return StrategyOutcome(applied=False, detail={"no_remap": True})
+        saved_place = list(sim.placement)
+        # Fair comparison: re-solve the split on the current placement too
+        # (its allocation may be stale for the new fault state) before
+        # measuring it against the canonical restore.
+        base_alloc = _solve_alloc(sim)
+        sim.set_allocation(base_alloc)
+        base_t = sim.iteration_time()
+        sim.remap_groups(canonical)
+        sim.set_allocation(_solve_alloc(sim))
+        if sim.iteration_time() >= base_t * 0.999:
+            sim.remap_groups(saved_place)
+            sim.set_allocation(base_alloc)
+            return StrategyOutcome(applied=True, detail={"reverted": True})
+        return StrategyOutcome(applied=True, detail={"reverted": False})
+
+    def relieve(self, ctx: MitigationContext) -> StrategyOutcome | None:
+        return None  # canonical placement is optimal for the healthy state
+
+
 # ------------------------------------------------------------------ S4
 @dataclass
 class CkptRestartStrategy:
@@ -260,6 +446,8 @@ class StrategyRegistry:
             self._overheads[key] = overhead
         elif key in DEFAULT_OVERHEADS:
             self._overheads.setdefault(key, DEFAULT_OVERHEADS[key])
+        elif key in PLACEMENT_OVERHEADS:
+            self._overheads.setdefault(key, PLACEMENT_OVERHEADS[key])
         else:
             raise ValueError(f"strategy {key!r} needs an explicit overhead")
         return self
@@ -281,10 +469,24 @@ class StrategyRegistry:
         return [k for k, s in self._table.items() if s.handles(event)]
 
     def make_planner(
-        self, event: FailSlowEvent, overheads: dict | None = None
+        self,
+        event: FailSlowEvent,
+        overheads: dict | None = None,
+        estimator: DurationModel | None = None,
+        work_remaining: Callable[[], float] | None = None,
+        incident_gap: Callable[[], float] | None = None,
+        exclude: Collection[StrategyKey] | None = None,
     ) -> MitigationPlanner:
+        cands = self.candidates(event)
+        if exclude:
+            cands = [k for k in cands if k not in set(exclude)]
         return MitigationPlanner(
-            event, self.overheads(overheads), candidates=self.candidates(event)
+            event,
+            self.overheads(overheads),
+            candidates=cands,
+            estimator=estimator,
+            work_remaining=work_remaining,
+            incident_gap=incident_gap,
         )
 
     def dispatch(self, key: StrategyKey, ctx: MitigationContext) -> StrategyOutcome:
@@ -305,5 +507,22 @@ def default_registry(max_rounds: int | None = None) -> StrategyRegistry:
     reg.register(IgnoreStrategy())
     reg.register(MicroBatchStrategy())
     reg.register(TopologyStrategy(max_rounds=max_rounds))
+    reg.register(CkptRestartStrategy())
+    return reg
+
+
+def placement_registry(max_rounds: int | None = None) -> StrategyRegistry:
+    """The S1-S4 ladder extended with the placement rungs (S2P/S3P).
+
+    Escalation order follows the overheads: S1, S2, S2P, S3, S3P, S4 —
+    the cheap paper rungs get first claim, the re-shapes fire when the
+    skewless/congested cases leave them ineffective.
+    """
+    reg = StrategyRegistry()
+    reg.register(IgnoreStrategy())
+    reg.register(MicroBatchStrategy())
+    reg.register(PlacementMicroBatchStrategy())
+    reg.register(TopologyStrategy(max_rounds=max_rounds))
+    reg.register(PlacementTopologyStrategy())
     reg.register(CkptRestartStrategy())
     return reg

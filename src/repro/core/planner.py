@@ -8,12 +8,39 @@ more costly) one once the *accumulated* fail-slow impact
 exceeds that strategy's one-off action overhead — the ski-rental break-even
 rule. S1 (ignore) has zero overhead and is always applied first; S4
 (checkpoint-and-restart) is the last resort.
+
+Predictive break-even (beyond Alg. 1)
+-------------------------------------
+The classic rule prices every escalation against an *infinite* rental
+horizon: it pays overhead B only after suffering B of impact, and it pays
+it even when the fault (or the job itself) is about to end. When the
+planner is given a :class:`~repro.core.duration.DurationModel` the
+break-even uses the predicted benefit instead,
+
+    benefit = min(E[T - age | T > age], work_remaining) * residual_rate
+
+the expected remaining fail-slow impact if nothing more is done, capped by
+how much work the job has left and by the observed incident inter-arrival
+time (clearing a fault only buys a healthy window until the next one
+lands — under a fail-slow storm that window, not the fault's tail, bounds
+what any mitigation is worth). Following ski-rental with predictions
+(Purohit et al.), the prediction *replaces* the fixed horizon: the rung
+fires at ``lambda * B`` when the predicted benefit clearly exceeds the
+overhead (``benefit > margin * B`` — act early, the fault will outlast the
+investment) and only at ``B / lambda`` otherwise (hold out — the
+robustness cap that bounds the damage of a wrong prediction). The margin
+matters in practice: under a fail-slow storm the predicted benefit of a
+restart hovers right at its overhead, and acting on coin-flip predictions
+pays the overhead over and over for healthy windows that never
+materialize. With no estimator, the paper's fixed-horizon rule is
+reproduced exactly.
 """
 from __future__ import annotations
 
-from collections.abc import Sequence
+from collections.abc import Callable, Sequence
 from dataclasses import dataclass, field
 
+from repro.core.duration import DurationModel
 from repro.core.events import FailSlowEvent, RootCause, Strategy, StrategyKey
 
 #: Which strategies can mitigate which root cause (paper Table 3).
@@ -75,11 +102,30 @@ class MitigationPlanner:
     #: which may include custom string-keyed strategies). None reproduces the
     #: paper's Table 3 applicability exactly.
     candidates: Sequence[StrategyKey] | None = None
+    #: per-cause fault-duration survival curves; None = the paper's fixed
+    #: (infinite) ski-rental horizon
+    estimator: DurationModel | None = None
+    #: remaining useful work of the job in wall-clock seconds (caps the
+    #: benefit any mitigation can still deliver); None = unbounded
+    work_remaining: Callable[[], float] | None = None
+    #: observed mean wall-clock gap between fresh incidents hitting a job
+    #: (the healthy window a successful mitigation can actually buy before
+    #: the next fault lands); None = unbounded
+    incident_gap: Callable[[], float] | None = None
+    #: prediction trust factor in (0, 1]: predicted-profitable escalations
+    #: fire at lambda*B, predicted-unprofitable ones only at B/lambda.
+    #: 1.0 degenerates to the classic rule even with an estimator.
+    prediction_lambda: float = 0.25
+    #: required benefit/overhead ratio (>= 1) before the prediction is
+    #: trusted enough to escalate early
+    prediction_margin: float = 1.5
 
     _candidates: list[StrategyKey] = field(init=False)
     _id: int = field(init=False, default=0)
     _slow_iters: int = field(init=False, default=0)
     _impact: float = field(init=False, default=0.0)
+    #: wall-clock seconds this planner has watched the event degrade
+    _age: float = field(init=False, default=0.0)
     applied: list[StrategyKey] = field(init=False, default_factory=list)
 
     def __post_init__(self) -> None:
@@ -119,6 +165,8 @@ class MitigationPlanner:
         if self.event.resolved or self._id >= len(self._candidates):
             return None
         self._slow_iters += slow_iters
+        t_now = current_time if current_time is not None else self.event.t_slow
+        self._age += slow_iters * max(t_now, 0.0)
         delta = (
             max(self.event.t_slow - self.event.t_healthy, 0.0)
             if current_time is None
@@ -129,11 +177,35 @@ class MitigationPlanner:
             return None
         self._impact += slow_iters * delta
         nxt = self._candidates[self._id]
-        if self.slow_impact > self.overheads[nxt]:
+        if self.slow_impact > self._threshold(nxt, delta, t_now):
             self._id += 1
             self.applied.append(nxt)
             return nxt
         return None
+
+    def _threshold(self, nxt: StrategyKey, delta: float, t_now: float) -> float:
+        """Escalation threshold for the next rung (see module docstring)."""
+        overhead = self.overheads[nxt]
+        if self.estimator is None or overhead <= 0.0:
+            return overhead
+        # Residual excess per wall-clock second if we stop here — the live
+        # measurement, consistent with the paper's "current strategy
+        # proves ineffective" escalation condition.
+        rate = delta / max(t_now, 1e-12)
+        # Wall-clock window the fault can keep hurting us: its predicted
+        # remaining duration, curtailed by the job's remaining work and by
+        # the next incident's arrival.
+        window = self.estimator.expected_remaining(
+            self.event.root_cause, self._age
+        )
+        if self.work_remaining is not None:
+            window = min(window, max(self.work_remaining(), 0.0))
+        if self.incident_gap is not None:
+            window = min(window, max(self.incident_gap(), 0.0))
+        benefit = window * rate
+        lam = min(max(self.prediction_lambda, 1e-3), 1.0)
+        margin = max(self.prediction_margin, 1.0)
+        return overhead * lam if benefit > overhead * margin else overhead / lam
 
     def exhausted(self) -> bool:
         return self._id >= len(self._candidates)

@@ -35,8 +35,9 @@ from repro.controlplane import (
     IgnoreStrategy,
     MitigationResult,
     StrategyRegistry,
-    default_registry,
+    placement_registry,
 )
+from repro.core.duration import DurationModel
 from repro.scenarios.presets import JobTemplate, ScenarioPreset, get_preset
 
 MODES = ("healthy", "faults", "ckpt", "falcon")
@@ -324,7 +325,8 @@ def build_campaign(
 # -------------------------------------------------------------------- run
 def _registry_for(mode: str):
     if mode == "falcon":
-        return default_registry()
+        # The full ladder including the placement rungs (S2P/S3P).
+        return placement_registry()
     # Checkpoint-restart baseline: detection on, but the only mitigation
     # mechanism is the paper's S4 (what pre-FALCON production systems do).
     return (
@@ -342,7 +344,14 @@ def run_campaign(spec: CampaignSpec, mode: str) -> RunResult:
     dt = preset.tick_seconds
     with_faults = mode != "healthy"
     with_plane = mode in ("ckpt", "falcon")
-    plane = ControlPlane(max_events=1 << 20) if with_plane else None
+    plane = None
+    if with_plane:
+        # Only the full FALCON mode gets the predictive ski-rental horizon;
+        # the ckpt baseline keeps the classic fixed-horizon break-even.
+        plane = ControlPlane(
+            max_events=1 << 20,
+            duration_model=DurationModel() if mode == "falcon" else None,
+        )
 
     pending = sorted(
         spec.jobs, key=lambda j: (j.join_tick, int(j.job_id[1:]))
@@ -368,9 +377,10 @@ def run_campaign(spec: CampaignSpec, mode: str) -> RunResult:
                     [spec.seed, 7, int(placed.job_id[1:])]
                 ),
             }
-            outcomes[placed.job_id] = JobOutcome(
+            out = JobOutcome(
                 job_id=placed.job_id, join_time=now, steps=placed.steps
             )
+            outcomes[placed.job_id] = out
             if plane is not None:
                 plane.register_job(
                     placed.job_id, sim,
@@ -380,6 +390,12 @@ def run_campaign(spec: CampaignSpec, mode: str) -> RunResult:
                     hardware=placed.hardware(),
                     hosts=placed.hosts(),
                     sample_period=dt,
+                    # The predictive break-even caps any mitigation's
+                    # benefit by the job's remaining useful work.
+                    work_remaining=(
+                        lambda o=out, t=placed.healthy_iter_time:
+                        max(o.steps - o.iters_done, 0.0) * t
+                    ),
                     now=now,
                 )
         if not live and not pending:

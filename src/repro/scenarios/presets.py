@@ -87,12 +87,20 @@ class ScenarioPreset:
     jitter: float = 0.003
 
     def overheads(self) -> dict[StrategyKey, float]:
-        """Ski-rental one-off action costs on this preset's clock."""
+        """Ski-rental one-off action costs on this preset's clock.
+
+        The placement rungs (S2P/S3P) sit between their paper siblings:
+        a group re-shape moves optimizer/parameter shards between the
+        swapped ranks, heavier than an S2 re-split but in the same class
+        as an S3 placement swap.
+        """
         dt = self.tick_seconds
         return {
             Strategy.IGNORE: 0.0,
             Strategy.ADJUST_MICROBATCH: 0.5 * dt,
+            "S2P": 1.5 * dt,
             Strategy.ADJUST_TOPOLOGY: 3.0 * dt,
+            "S3P": 4.0 * dt,
             Strategy.CKPT_AND_RESTART: self.ckpt_overhead_ticks * dt,
         }
 

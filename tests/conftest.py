@@ -1,20 +1,40 @@
 """Test-suite bootstrap.
 
-The property tests use ``hypothesis``; this container does not ship it and
-installing packages is not allowed. Register the deterministic stub from
-``tests/_hypothesis_stub.py`` so the suite still collects and the property
-tests run a fixed sample of random examples. When the real library is
-available it is used unchanged.
+The property tests use ``hypothesis``; bare containers do not ship it and
+installing packages there is not allowed, so ``tests/_hypothesis_stub.py``
+provides a deterministic stand-in that runs a fixed sample of random
+examples per ``@given`` test.
+
+Detection is spec-based (``importlib.util.find_spec``), not import-based:
+a real installed hypothesis must always win. The old try/except-import
+bootstrap could silently shadow a real installation — any transitive
+``ImportError`` raised *inside* the real package (a broken dependency, a
+half-upgraded environment) took the except branch and replaced the library
+with the stub without a word. Now the stub is registered only when no
+``hypothesis`` distribution exists at all, never overwrites an existing
+``sys.modules`` entry, and says so on the first test run (CI installs the
+real package and must exercise the genuine shrinking search).
 """
+import importlib.util
 import os
 import sys
 
-sys.path.insert(0, os.path.dirname(__file__))
+_TESTS_DIR = os.path.dirname(__file__)
+if _TESTS_DIR not in sys.path:
+    sys.path.insert(0, _TESTS_DIR)
 
-try:  # pragma: no cover - depends on environment
-    import hypothesis  # noqa: F401
-except ImportError:
+HAS_REAL_HYPOTHESIS = importlib.util.find_spec("hypothesis") is not None
+
+if not HAS_REAL_HYPOTHESIS and "hypothesis" not in sys.modules:
     import _hypothesis_stub
 
     sys.modules["hypothesis"] = _hypothesis_stub
     sys.modules["hypothesis.strategies"] = _hypothesis_stub.strategies
+
+
+def pytest_report_header(config):
+    return (
+        "hypothesis: real package"
+        if HAS_REAL_HYPOTHESIS
+        else "hypothesis: deterministic stub (tests/_hypothesis_stub.py)"
+    )

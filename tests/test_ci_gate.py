@@ -1,0 +1,100 @@
+"""The CI workflow's own contracts, covered by tier-1.
+
+The regression gate (`.github/workflows/ci.yml` sweep-gate job) only
+protects the repo if the committed baseline actually parses, matches the
+schema `repro.launch.sweep` expects, and the gate arithmetic does what the
+workflow believes — all of which would otherwise only fail *in* CI, after
+the fact.
+"""
+import json
+import os
+import subprocess
+import sys
+
+import pytest
+
+from repro.launch import sweep as sweep_mod
+
+REPO = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
+BASELINE = os.path.join(
+    REPO, "results", "sweeps", "single_gpu_throttle-j1.baseline.json"
+)
+WORKFLOW = os.path.join(REPO, ".github", "workflows", "ci.yml")
+
+
+def load_baseline() -> dict:
+    with open(BASELINE) as f:
+        return json.load(f)
+
+
+def test_committed_baseline_parses_and_matches_gate_schema():
+    baseline = load_baseline()
+    for key in sweep_mod.GATE_SCHEMA_KEYS:
+        assert key in baseline, f"baseline missing {key!r}"
+    gate = baseline["gate"]
+    metric = gate["metric"]
+    assert metric in dict(sweep_mod.METRICS), metric
+    assert float(gate["max_drop_pct_points"]) > 0
+    m = baseline["metrics"][metric]
+    assert m["mean"] is not None
+    assert m["n"] == baseline["seeds"] > 1
+    # The gated preset/shape must match what the workflow runs.
+    assert baseline["preset"] == "single_gpu_throttle"
+    assert baseline["jobs"] == 1
+
+
+def test_gate_arithmetic_passes_identity_and_fails_regression():
+    baseline = load_baseline()
+    identity = {"metrics": baseline["metrics"]}
+    passed, _ = sweep_mod.check_gate(identity, baseline)
+    assert passed
+    metric = baseline["gate"]["metric"]
+    allowed = baseline["gate"]["max_drop_pct_points"]
+    regressed = {
+        "metrics": {
+            metric: {
+                "mean": baseline["metrics"][metric]["mean"] - allowed - 0.01
+            }
+        }
+    }
+    passed, verdict = sweep_mod.check_gate(regressed, baseline)
+    assert not passed
+    assert metric in verdict
+
+
+def test_workflow_invokes_the_gate_against_the_committed_baseline():
+    with open(WORKFLOW) as f:
+        text = f.read()
+    assert "repro.launch.sweep" in text
+    assert "results/sweeps/single_gpu_throttle-j1.baseline.json" in text
+    assert "repro.launch.campaign" in text  # determinism job
+    assert "results/campaigns/single_gpu_throttle-j1-s0.json" in text
+    assert "benchmarks.run --smoke" in text
+    assert "pytest -x -q" in text
+
+
+def test_committed_determinism_report_exists_for_the_ci_diff():
+    path = os.path.join(
+        REPO, "results", "campaigns", "single_gpu_throttle-j1-s0.json"
+    )
+    with open(path) as f:
+        report = json.load(f)
+    assert report["campaign"]["preset"] == "single_gpu_throttle"
+    assert report["campaign"]["seed"] == 0
+    assert report["campaign"]["n_jobs"] == 1
+
+
+@pytest.mark.slow
+def test_sweep_cli_gate_mode_end_to_end(tmp_path):
+    """The exact command CI runs, end to end, including the exit code."""
+    out = subprocess.run(
+        [
+            sys.executable, "-m", "repro.launch.sweep",
+            "--preset", "single_gpu_throttle", "--jobs", "1", "--seeds", "3",
+            "--out", str(tmp_path), "--gate", BASELINE, "--quiet",
+        ],
+        env={**os.environ, "PYTHONPATH": os.path.join(REPO, "src")},
+        capture_output=True, text=True, timeout=1200,
+    )
+    assert out.returncode == 0, out.stdout + out.stderr
+    assert "GATE PASS" in out.stdout

@@ -7,6 +7,8 @@ With a generous capacity factor (no token drops — per-shard capacity is the
 one intentional semantic difference), outputs must agree.
 """
 import os
+
+import pytest
 import subprocess
 import sys
 
@@ -59,6 +61,7 @@ print("MOE-EP-OK")
 """
 
 
+@pytest.mark.slow
 def test_expert_parallel_moe_matches_dense_host():
     env = dict(os.environ)
     env["PYTHONPATH"] = os.path.join(os.path.dirname(__file__), "..", "src")

@@ -211,6 +211,7 @@ def test_head_masks_padding_columns():
 
 
 # ------------------------------------------------- benchmark smoke pass
+@pytest.mark.slow
 def test_benchmark_suite_smoke_pass():
     """`benchmarks.run --smoke` executes every registered benchmark at toy
     scale — perf entry points that never run, silently rot. Subprocess so the

@@ -1,0 +1,363 @@
+"""Placement-aware mitigation tests (S2P/S3P + remap_groups + planner).
+
+* ``remap_groups`` incremental layout refresh is equivalent to a fresh
+  simulator built with the same placement (grid, edge tensors, iteration
+  time, profiling keys).
+* The placement planner concentrates a slow host's devices into the
+  minimum number of DP groups and skips no-op proposals.
+* On the node-spanning scenario from the ROADMAP (a host fault that hits
+  one cell of *every* DP group), S2 alone finds no skew while S2P restores
+  it and measurably improves the modeled iteration time.
+* The predictive ski-rental break-even: with a duration model that has
+  learned short faults, the expensive S4 rung no longer fires where the
+  fixed-horizon rule would have fired it.
+"""
+import numpy as np
+import pytest
+
+from repro.cluster.simulator import JobSpec, TrainingSimulator, _Layout
+from repro.cluster.spec import ClusterSpec, ModelSpec
+from repro.controlplane.strategies import (
+    MitigationContext,
+    PlacementMicroBatchStrategy,
+    PlacementTopologyStrategy,
+    placement_registry,
+)
+from repro.core import microbatch as mb_lib
+from repro.core.duration import DurationModel
+from repro.core.events import FailSlowEvent, RootCause, Strategy
+from repro.core.placement import PlacementPlanner, slow_devices_for
+from repro.core.planner import MitigationPlanner
+
+MODEL = ModelSpec(layers=40, hidden=5120, seq_len=2048, vocab=32000)
+
+
+def make_sim(tp=1, dp=8, pp=2, n_nodes=2, gpn=8, micro_batches=32):
+    return TrainingSimulator(
+        cluster=ClusterSpec(n_nodes=n_nodes, gpus_per_node=gpn),
+        job=JobSpec(model=MODEL, tp=tp, dp=dp, pp=pp,
+                    micro_batches=micro_batches),
+    )
+
+
+def slow_host(sim, node, severity=0.5):
+    per = sim.cluster.gpus_per_node
+    for d in range(node * per, (node + 1) * per):
+        sim.state.devices[d].host_speed = 1.0 - severity
+
+
+# ------------------------------------------------- remap_groups equivalence
+@pytest.mark.parametrize("tp,dp,pp", [(1, 8, 2), (2, 4, 2), (4, 4, 1)])
+def test_remap_groups_matches_fresh_layout_build(tp, dp, pp):
+    sim = make_sim(tp=tp, dp=dp, pp=pp)
+    rng = np.random.default_rng(7)
+    new_place = list(rng.permutation(sim.job.n_devices))
+    sim.iteration_time()  # force the layout cache so the update path runs
+    sim.remap_groups(new_place)
+    updated = sim._layout()
+
+    fresh_sim = make_sim(tp=tp, dp=dp, pp=pp)
+    fresh_sim.placement = list(new_place)
+    fresh = _Layout(fresh_sim.placement, fresh_sim.job)
+
+    np.testing.assert_array_equal(updated.grid, fresh.grid)
+    for attr in ("tp_edges", "dp_edges", "hop_edges"):
+        a, b = getattr(updated, attr), getattr(fresh, attr)
+        if a is None or b is None:
+            assert a is None and b is None
+        else:
+            np.testing.assert_array_equal(a[0], b[0])
+            np.testing.assert_array_equal(a[1], b[1])
+    assert updated.tp_keys == fresh.tp_keys
+    assert updated.dp_keys == fresh.dp_keys
+    assert sim.iteration_time() == pytest.approx(
+        fresh_sim.iteration_time(), abs=0.0
+    )
+    assert sim.profile_groups() == fresh_sim.profile_groups()
+    # And against the loop oracle, under a degraded state for good measure.
+    slow_host(sim, 1, 0.5)
+    assert sim.iteration_time() == pytest.approx(
+        sim.iteration_time_reference(), abs=1e-12
+    )
+
+
+def test_remap_groups_rejects_foreign_devices():
+    sim = make_sim()
+    with pytest.raises(ValueError):
+        sim.remap_groups(list(range(1, sim.job.n_devices + 1)))
+
+
+# ------------------------------------------------------ placement planner
+def test_planner_concentrates_slow_node_into_fewest_groups():
+    sim = make_sim()  # tp1 dp8 pp2 over 2 nodes: every group spans both
+    planner = PlacementPlanner()
+    slow = {d for d in range(16) if d // 8 == 1}
+    remap = planner.plan(
+        tp=1, dp=8, pp=2, placement=sim.placement, slow=slow,
+        node_of=sim.node_of_rank,
+    )
+    assert remap is not None
+    # 8 slow devices / (pp*tp = 2 per group) = 4 groups minimum.
+    assert remap.groups_hit_before == 8
+    assert remap.groups_hit_after == 4
+    assert remap.slow_groups == (4, 5, 6, 7)
+    assert sorted(remap.placement) == sorted(sim.placement)
+    # Healthy groups must hold no slow device at all.
+    grid = np.asarray(remap.placement).reshape(2, 8, 1)
+    for d in range(4):
+        assert not (set(grid[:, d, 0].tolist()) & slow)
+
+
+def test_planner_skips_when_already_concentrated():
+    sim = make_sim(tp=4, dp=2, pp=1, n_nodes=2, gpn=4, micro_batches=16)
+    # Default placement: group 0 = node 0, group 1 = node 1.
+    remap = PlacementPlanner().plan(
+        tp=4, dp=2, pp=1, placement=sim.placement,
+        slow=set(range(4, 8)), node_of=sim.node_of_rank,
+    )
+    assert remap is None
+
+
+def test_slow_devices_for_expands_node_components():
+    ev = FailSlowEvent(start_time=0.0, components=["node:1", "gpu:2"])
+    sim = make_sim()
+    assert slow_devices_for(ev, 16, sim.node_of_rank) == {2, *range(8, 16)}
+
+
+# -------------------------------------------- S2P restores skew (ROADMAP)
+def test_s2p_restores_skew_on_node_spanning_host_fault():
+    """The ROADMAP loss case: a host fault on a node-spanning dp8 x pp2 job
+    slows one cell of every DP group, so S2's solver sees uniform speeds
+    and returns the even split. S2P re-shapes the groups, after which the
+    solver has skew to exploit and the modeled iteration time drops."""
+    sim = make_sim()
+    severity = 0.8
+    slow_host(sim, 1, severity)
+    faulted = sim.iteration_time()
+
+    # S2 alone: no skew — the even split stands and nothing improves.
+    even = list(sim.allocation)
+    s2_counts = mb_lib.solve_allocation(
+        sim.per_microbatch_times(), sim.job.micro_batches,
+        offset=sim.job.pp - 1,
+    )
+    assert s2_counts == even
+    event = FailSlowEvent(
+        start_time=0.0, root_cause=RootCause.CPU_CONTENTION,
+        components=["node:1"], t_healthy=sim.healthy_iteration_time(),
+        t_slow=faulted, severity=severity,
+    )
+    strategy = PlacementMicroBatchStrategy()
+    assert strategy.handles(event)
+    outcome = strategy.apply(MitigationContext(adapter=sim, event=event))
+    assert outcome.applied and not outcome.detail["reverted"]
+    assert outcome.detail["shape"] == "concentrated"
+    assert outcome.detail["slow_groups"] == [4, 5, 6, 7]
+    # Skew restored: the committed allocation is no longer even...
+    assert sim.allocation != even
+    # ...and starves the concentrated groups in favor of the healthy ones.
+    assert min(sim.allocation[:4]) > max(sim.allocation[4:])
+    assert sim.iteration_time() < 0.8 * faulted
+
+
+def test_s2p_reverts_when_concentration_does_not_pay():
+    """A weak host fault: concentrating sends DP rings across the
+    inter-node fabric for almost no skew gain — measure-before-commit
+    must keep the original placement."""
+    sim = make_sim()
+    slow_host(sim, 1, 0.15)
+    before = list(sim.placement)
+    event = FailSlowEvent(
+        start_time=0.0, root_cause=RootCause.CPU_CONTENTION,
+        components=["node:1"],
+        t_healthy=sim.healthy_iteration_time(), t_slow=sim.iteration_time(),
+    )
+    outcome = PlacementMicroBatchStrategy().apply(
+        MitigationContext(adapter=sim, event=event)
+    )
+    assert outcome.applied and outcome.detail["reverted"]
+    assert sim.placement == before
+
+
+def test_s2p_restores_canonical_after_fault_moves_on():
+    """A concentrated layout must not outlive its fault: when the next
+    diagnosis has nothing to concentrate, S2P measures the canonical
+    layout and un-remaps."""
+    sim = make_sim()
+    slow_host(sim, 1, 0.8)
+    event = FailSlowEvent(
+        start_time=0.0, root_cause=RootCause.CPU_CONTENTION,
+        components=["node:1"],
+        t_healthy=sim.healthy_iteration_time(), t_slow=sim.iteration_time(),
+    )
+    s2p = PlacementMicroBatchStrategy()
+    assert not s2p.apply(MitigationContext(adapter=sim, event=event)).detail[
+        "reverted"
+    ]
+    # Host fault ends; a plain single-GPU fault is diagnosed next.
+    sim.state.reset()
+    sim.state.devices[3].compute_speed = 0.5
+    gpu_event = FailSlowEvent(
+        start_time=100.0, root_cause=RootCause.GPU_DEGRADATION,
+        components=["gpu:3"],
+        t_healthy=sim.healthy_iteration_time(), t_slow=sim.iteration_time(),
+    )
+    outcome = s2p.apply(MitigationContext(adapter=sim, event=gpu_event))
+    assert outcome.applied and outcome.detail["shape"] == "canonical"
+    assert sim.placement == sorted(sim.placement)
+
+
+def test_s3p_internalizes_rings_when_nic_congests_remapped_layout():
+    sim = make_sim()
+    # A previous S2P left the layout concentrated...
+    slow_host(sim, 1, 0.8)
+    ev = FailSlowEvent(
+        start_time=0.0, root_cause=RootCause.CPU_CONTENTION,
+        components=["node:1"],
+        t_healthy=sim.healthy_iteration_time(), t_slow=sim.iteration_time(),
+    )
+    PlacementMicroBatchStrategy().apply(MitigationContext(adapter=sim, event=ev))
+    assert sim.placement != sorted(sim.placement)
+    # ...then the host fault clears and a NIC congests: the concentrated
+    # DP rings now cross the congested port.
+    sim.state.reset()
+    sim.state.degrade_nic(0, 0.3)
+    nic_event = FailSlowEvent(
+        start_time=200.0, root_cause=RootCause.NETWORK_CONGESTION,
+        components=["nic:0"],
+        t_healthy=sim.healthy_iteration_time(), t_slow=sim.iteration_time(),
+    )
+    s3p = PlacementTopologyStrategy()
+    assert s3p.handles(nic_event)
+    before_t = sim.iteration_time()
+    outcome = s3p.apply(MitigationContext(adapter=sim, event=nic_event))
+    assert outcome.applied and not outcome.detail["reverted"]
+    assert sim.placement == sorted(sim.placement)
+    assert sim.iteration_time() < before_t
+
+
+def test_placement_registry_ladder_order():
+    reg = placement_registry()
+    ev = FailSlowEvent(
+        start_time=0.0, root_cause=RootCause.CPU_CONTENTION,
+        components=["node:0"],
+    )
+    planner = reg.make_planner(ev, overheads={
+        Strategy.IGNORE: 0.0, Strategy.ADJUST_MICROBATCH: 1.0,
+        "S2P": 2.0, Strategy.ADJUST_TOPOLOGY: 3.0, "S3P": 4.0,
+        Strategy.CKPT_AND_RESTART: 5.0,
+    })
+    # S3P requires nic:/link: evidence, so it is not a candidate here.
+    assert planner._candidates == [
+        Strategy.IGNORE, Strategy.ADJUST_MICROBATCH, "S2P",
+        Strategy.ADJUST_TOPOLOGY, Strategy.CKPT_AND_RESTART,
+    ]
+
+
+# -------------------------------------- predictive ski-rental break-even
+def _drive_planner(planner, t_healthy=1.0, t_slow=2.0, iters=400):
+    fired = []
+    for _ in range(iters):
+        s = planner.update(slow_iters=1, current_time=t_slow)
+        if s is not None:
+            fired.append(s)
+    return fired
+
+
+def test_predictive_break_even_skips_s4_for_learned_short_faults():
+    """A ~150 s throttle against a 60 s restart overhead: fixed-horizon
+    Alg. 1 pays the restart at t = 120 s — 28 s before the fault's natural
+    relief, recovering a fraction of what it spent. The predictive
+    break-even, fit on a population of such short faults, sees that the
+    expected remaining benefit never clearly exceeds the overhead and
+    holds out for the fault's whole lifetime."""
+    overheads = {Strategy.IGNORE: 0.0, Strategy.CKPT_AND_RESTART: 60.0}
+    cands = (Strategy.IGNORE, Strategy.CKPT_AND_RESTART)
+    fault_iters = 74  # just under 150 s of wall clock at t_slow = 2 s
+
+    def make_event():
+        return FailSlowEvent(
+            start_time=0.0, root_cause=RootCause.GPU_DEGRADATION,
+            t_healthy=1.0, t_slow=2.0,
+        )
+
+    fixed = MitigationPlanner(make_event(), dict(overheads), candidates=cands)
+    fired_fixed = _drive_planner(fixed, iters=fault_iters)
+    assert Strategy.CKPT_AND_RESTART in fired_fixed  # classic: at impact 61
+
+    model = DurationModel(prior_weight=0.1)
+    for _ in range(30):  # every observed GPU fault lasted ~150 s
+        model.observe(RootCause.GPU_DEGRADATION, 150.0)
+    predictive = MitigationPlanner(
+        make_event(), dict(overheads), candidates=cands, estimator=model,
+    )
+    fired = _drive_planner(predictive, iters=fault_iters)
+    assert Strategy.CKPT_AND_RESTART not in fired
+    assert Strategy.IGNORE in fired  # zero-overhead rung unaffected
+
+
+def test_predictive_break_even_fires_early_for_learned_long_faults():
+    overheads = {Strategy.IGNORE: 0.0, Strategy.CKPT_AND_RESTART: 100.0}
+    cands = (Strategy.IGNORE, Strategy.CKPT_AND_RESTART)
+    model = DurationModel(prior_weight=0.5)
+    for _ in range(30):  # every observed GPU fault lasted hours
+        model.observe(RootCause.GPU_DEGRADATION, 7200.0)
+    event = FailSlowEvent(
+        start_time=0.0, root_cause=RootCause.GPU_DEGRADATION,
+        t_healthy=1.0, t_slow=2.0,
+    )
+    predictive = MitigationPlanner(
+        event, dict(overheads), candidates=cands, estimator=model,
+    )
+    impact_at_fire = None
+    for _ in range(400):
+        s = predictive.update(slow_iters=1, current_time=2.0)
+        if s is Strategy.CKPT_AND_RESTART:
+            impact_at_fire = predictive.slow_impact
+            break
+    assert impact_at_fire is not None
+    # lambda * overhead, not the classic full overhead
+    assert impact_at_fire < overheads[Strategy.CKPT_AND_RESTART]
+
+
+def test_duration_model_censored_observations_lengthen_the_curve():
+    censored = DurationModel(prior_weight=0.0)
+    exact = DurationModel(prior_weight=0.0)
+    for _ in range(10):
+        censored.observe(RootCause.CPU_CONTENTION, 100.0, censored=True)
+        censored.observe(RootCause.CPU_CONTENTION, 300.0)
+        exact.observe(RootCause.CPU_CONTENTION, 100.0)
+        exact.observe(RootCause.CPU_CONTENTION, 300.0)
+    # Kaplan-Meier: a censored 100 s episode is a *lower bound*, so the
+    # expected remaining at age 50 must exceed the all-exact estimate.
+    assert censored.expected_remaining(
+        RootCause.CPU_CONTENTION, 50.0
+    ) > exact.expected_remaining(RootCause.CPU_CONTENTION, 50.0)
+
+
+def test_duration_model_prior_spans_characterization_range():
+    model = DurationModel()
+    # Fresh model: conditional mean remaining is finite, positive, and
+    # decreasing in age once the heavy tail is consumed.
+    r0 = model.expected_remaining(RootCause.GPU_DEGRADATION, 0.0)
+    r1 = model.expected_remaining(RootCause.GPU_DEGRADATION, 30_000.0)
+    assert 0.0 < r1 < r0 < 36_000.0
+    assert model.expected_remaining(RootCause.GPU_DEGRADATION, 50_000.0) == 0.0
+
+
+def test_duration_model_survival_curve_is_a_survival_curve():
+    model = DurationModel(prior_weight=0.0)
+    for d in (100.0, 200.0, 400.0):
+        for _ in range(5):
+            model.observe(RootCause.CPU_CONTENTION, d)
+    cause = RootCause.CPU_CONTENTION
+    # Conditional on T > 50: nothing has died by horizon 60.
+    assert model.survival(cause, 50.0, 60.0) == pytest.approx(1.0)
+    s150 = model.survival(cause, 50.0, 150.0)  # the 100 s third died
+    s250 = model.survival(cause, 50.0, 250.0)
+    assert s150 == pytest.approx(2.0 / 3.0)
+    assert s250 == pytest.approx(1.0 / 3.0)
+    assert model.survival(cause, 50.0, 500.0) == pytest.approx(0.0)
+    # Conditioning on a later age renormalizes the curve upward.
+    assert model.survival(cause, 150.0, 250.0) == pytest.approx(0.5)
+    assert model.n_observed(cause) == 15

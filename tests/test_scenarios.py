@@ -280,11 +280,14 @@ def test_campaign_translates_global_faults_to_affected_jobs_only():
 
 def test_mixed_fleet_acceptance_campaign():
     """The acceptance criterion, pinned: `--preset mixed_fleet --jobs 8
-    --seed 0` completes with mid-run churn and >= 0.9 precision/recall."""
+    --seed 0` detects with precision/recall 1.0 and — with the placement
+    rungs and the predictive ski-rental horizon — mitigates >= 45 % of the
+    fail-slow slowdown (was 29 % with the paper ladder alone)."""
     spec, runs, report = run_and_score("mixed_fleet", n_jobs=8, seed=0)
     det = report["detection"]["overall"]
-    assert det["precision"] >= 0.9
-    assert det["recall"] >= 0.9
+    assert det["precision"] == 1.0
+    assert det["recall"] == 1.0
+    assert report["mitigation"]["slowdown_mitigated_pct"] >= 45.0
     # Churn: at least one job joins after the campaign starts and at least
     # one leaves before it ends.
     falcon = runs["falcon"]

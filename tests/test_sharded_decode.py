@@ -8,6 +8,8 @@ Runs in a subprocess because the host device count must be fixed before JAX
 initializes.
 """
 import os
+
+import pytest
 import subprocess
 import sys
 
@@ -55,6 +57,7 @@ print("SHARDED-DECODE-OK")
 """
 
 
+@pytest.mark.slow
 def test_seq_sharded_cache_decode_matches_reference():
     env = dict(os.environ)
     env["PYTHONPATH"] = os.path.join(os.path.dirname(__file__), "..", "src")

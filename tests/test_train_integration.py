@@ -35,6 +35,8 @@ def make_sim(dp=4):
     )
 
 
+@pytest.mark.slow
+@pytest.mark.slow
 def test_loss_decreases_over_training():
     cfg = tiny_cfg()
     data = DataConfig(seq_len=64, global_batch=8, slots=2, dp_groups=1)
@@ -48,6 +50,8 @@ def test_loss_decreases_over_training():
     assert last < first - 0.3, (first, last)
 
 
+@pytest.mark.slow
+@pytest.mark.slow
 def test_falcon_detects_and_mitigates_injected_failslow():
     """End-to-end: GPU fail-slow injected mid-run; FALCON detects it,
     escalates S1 -> S2, and the post-mitigation iteration time improves."""
