@@ -1,0 +1,197 @@
+"""Per-event simulator update cost under campaign-rate fault churn.
+
+The fleet-scale benchmark tracks healthy-step and full-recompute
+throughput; this one tracks what dominates a *churny* fleet: the cost of
+one fail-slow event — a single injector-style state mutation followed by
+``iteration_time()``. The event-scoped invalidation path (typed dirty sets
+consumed through per-reader cursors, docs/simulator.md) re-reduces only the
+cells the event touches; the baseline column forces the pre-refactor
+behavior (``sim.incremental = False``): every event invalidates the whole
+memo and triggers the full vectorized recompute.
+
+Events alternate degrade/restore per component class so the active fault
+set stays bounded, like a campaign where episodes arrive and resolve; the
+``campaign_mix`` row weights the four classes by the fault model's default
+cause mix (:mod:`repro.scenarios.faults`: gpu 0.30 / cpu 0.20 / link 0.30 /
+nic 0.20). A ``remap`` row times one S2P-style ``remap_groups`` candidate
+swap + re-measure. Every mode's final state is checked bit-identical
+against the ``iteration_time_reference()`` loop oracle.
+
+Results land in ``results/bench/event_rate.json`` and are mirrored to
+``BENCH_events.json`` at the repo root (the tracked perf-trajectory
+artifact; acceptance: >= 10x on the campaign mix at 10k devices).
+"""
+from __future__ import annotations
+
+import json
+import os
+import statistics
+import time
+
+from benchmarks.common import print_table, save_rows
+from repro.cluster.simulator import JobSpec, TrainingSimulator
+from repro.cluster.spec import ClusterSpec, ModelSpec
+
+MODEL = ModelSpec(layers=40, hidden=5120, seq_len=2048, vocab=50257)
+ROOT_JSON = os.path.join(os.path.dirname(__file__), "..", "BENCH_events.json")
+
+#: default cause mix of repro.scenarios.faults.FaultModel
+MIX = (("gpu", 0.30), ("cpu", 0.20), ("link", 0.30), ("nic", 0.20))
+
+
+def _make_sim(n_devices: int) -> TrainingSimulator:
+    tp, pp = 8, 8
+    dp = n_devices // (tp * pp)
+    job = JobSpec(model=MODEL, tp=tp, dp=dp, pp=pp, micro_batches=2 * dp)
+    return TrainingSimulator(
+        cluster=ClusterSpec(n_nodes=n_devices // 8), job=job
+    )
+
+
+def _mutate(sim: TrainingSimulator, mode: str, i: int, salt: int) -> None:
+    """One fail-slow event: a degrade on even steps, the matching restore
+    on odd ones (bounded active set — campaign churn, not accumulation)."""
+    n = sim.cluster.n_devices
+    nodes = sim.cluster.n_nodes
+    eps = 1e-9 * (i + salt)  # every degrade is a fresh value, never a no-op
+    if mode == "gpu":
+        sim.state.devices[((i // 2) * 37) % n].compute_speed = (
+            0.9 - eps if i % 2 == 0 else 1.0
+        )
+    elif mode == "cpu":
+        node = ((i // 2) * 11) % nodes
+        per = sim.cluster.gpus_per_node
+        v = 0.8 - eps if i % 2 == 0 else 1.0
+        for d in range(node * per, (node + 1) * per):
+            sim.state.devices[d].host_speed = v
+    elif mode == "link":
+        j = i // 2
+        a = (j * 13) % n
+        b = (a + 64) % n
+        if i % 2 == 0:
+            sim.state.degrade_link(a, b, 0.5 - eps)
+        else:
+            sim.state.restore_link(a, b)
+    else:  # nic
+        node = ((i // 2) * 7) % nodes
+        if i % 2 == 0:
+            sim.state.degrade_nic(node, 0.6 - eps)
+        else:
+            sim.state.restore_nic(node)
+
+
+def _per_event_ms(
+    sim: TrainingSimulator, mode: str, incremental: bool,
+    reps: int, trials: int,
+) -> float:
+    sim.incremental = incremental
+    times = []
+    for trial in range(trials):
+        sim.state.reset()
+        sim.iteration_time()
+        t0 = time.perf_counter()
+        for i in range(reps):
+            _mutate(sim, mode, i, salt=trial * reps)
+            sim.iteration_time()
+        times.append((time.perf_counter() - t0) / reps * 1e3)
+    return statistics.median(times)
+
+
+def _remap_ms(sim: TrainingSimulator, incremental: bool,
+              reps: int, trials: int) -> float:
+    """One S2P-style measure-before-commit step: swap two ranks across DP
+    groups, re-measure, swap back (the candidate-evaluation inner loop)."""
+    sim.incremental = incremental
+    tp = sim.job.tp
+    times = []
+    for _ in range(trials):
+        sim.state.reset()
+        sim.state.devices[3].compute_speed = 0.5  # something to evaluate
+        sim.iteration_time()
+        t0 = time.perf_counter()
+        for i in range(reps):
+            perm = list(sim.placement)
+            a = (i * tp) % len(perm)
+            b = (a + tp) % len(perm)
+            perm[a], perm[b] = perm[b], perm[a]
+            sim.remap_groups(perm)
+            sim.iteration_time()
+        times.append((time.perf_counter() - t0) / reps * 1e3)
+    return statistics.median(times)
+
+
+def _dirty_per_event(sim: TrainingSimulator, mode: str, reps: int = 64) -> float:
+    """Mean typed components dirtied per event, read through the
+    ClusterAdapter cursor surface (``state_cursor`` / ``dirty_since`` —
+    the per-reader protocol of docs/simulator.md). This is the quantity
+    the event-scoped recompute's cost is proportional to."""
+    sim.state.reset()
+    sim.iteration_time()
+    total = 0
+    cursor = sim.state_cursor()
+    for i in range(reps):
+        _mutate(sim, mode, i, salt=0)
+        ds = sim.dirty_since(cursor)
+        cursor = sim.state_cursor()
+        total += len(ds.devices) + len(ds.links) + len(ds.nics)
+        sim.iteration_time()
+    sim.state.reset()
+    return total / reps
+
+
+def _rows_for(n_devices: int, reps: int, trials: int) -> list[dict]:
+    sim = _make_sim(n_devices)
+    sim.iteration_time()
+    rows = []
+    mix_full = mix_inc = 0.0
+    for mode, weight in MIX:
+        full = _per_event_ms(sim, mode, False, reps, trials)
+        inc = _per_event_ms(sim, mode, True, reps, trials)
+        assert sim.iteration_time() == sim.iteration_time_reference()
+        mix_full += weight * full
+        mix_inc += weight * inc
+        rows.append({
+            "devices": n_devices,
+            "event": mode,
+            "dirty_per_event": round(_dirty_per_event(sim, mode), 1),
+            "full_ms": round(full, 4),
+            "incremental_ms": round(inc, 4),
+            "speedup": round(full / inc, 1),
+        })
+    rows.append({
+        "devices": n_devices,
+        "event": "campaign_mix",
+        "full_ms": round(mix_full, 4),
+        "incremental_ms": round(mix_inc, 4),
+        "speedup": round(mix_full / mix_inc, 1),
+    })
+    full = _remap_ms(sim, False, max(reps // 4, 10), trials)
+    inc = _remap_ms(sim, True, max(reps // 4, 10), trials)
+    assert sim.iteration_time() == sim.iteration_time_reference()
+    rows.append({
+        "devices": n_devices,
+        "event": "remap_swap",
+        "full_ms": round(full, 4),
+        "incremental_ms": round(inc, 4),
+        "speedup": round(full / inc, 1),
+    })
+    return rows
+
+
+def run(smoke: bool = False) -> list[dict]:
+    if smoke:
+        cfgs = [(256, 60, 2)]
+    else:
+        cfgs = [(1024, 600, 7), (10240, 600, 7)]
+    rows: list[dict] = []
+    for n_devices, reps, trials in cfgs:
+        rows += _rows_for(n_devices, reps, trials)
+    save_rows("event_rate", rows)
+    if not smoke:  # the tracked perf-trajectory artifact
+        with open(ROOT_JSON, "w") as f:
+            json.dump(rows, f, indent=1)
+    return rows
+
+
+if __name__ == "__main__":
+    print_table("Event-rate: per-event update + iteration_time", run())

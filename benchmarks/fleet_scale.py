@@ -103,11 +103,16 @@ def _simulator_rows(n_devices: int, healthy_steps: int, recomputes: int) -> dict
         wall += sim.iteration_time()
     healthy_s = time.perf_counter() - t0
 
+    # Keep this column's meaning stable across PRs: the cost of one *full*
+    # vectorized pass (the event-scoped incremental path has its own
+    # benchmark, benchmarks/event_rate.py).
+    sim.incremental = False
     t0 = time.perf_counter()
     for i in range(recomputes):  # every step invalidates -> full recompute
         sim.state.devices[5].compute_speed = 0.9 - 1e-9 * i
         sim.iteration_time()
     recompute_s = time.perf_counter() - t0
+    sim.incremental = True
 
     t0 = time.perf_counter()
     ref_reps = max(1, recomputes // 10)

@@ -33,6 +33,7 @@ SUITE = [
     ("end_to_end", "Fig. 20 / Table 7 — 64-GPU end-to-end"),
     ("roofline", "Roofline — dry-run derived terms (deliverable g)"),
     ("fleet_scale", "Fleet-scale fast path — batched detection + vector sim"),
+    ("event_rate", "Event rate — event-scoped incremental recompute cost"),
     ("controlplane_overhead", "Control plane — per-tick overhead at 1-64 jobs"),
     ("campaign_throughput", "Scenario campaigns — engine ticks/s vs fleet size"),
 ]

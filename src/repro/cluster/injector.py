@@ -61,64 +61,148 @@ class Injection:
 
 @dataclass
 class FailSlowInjector:
-    """Applies the set of active injections to a ClusterState at time t."""
+    """Applies the set of active injections to a ClusterState at time t.
+
+    Schedule mutation contract: change ``injections`` only through
+    :meth:`add` / :meth:`extend` or by *reassigning the whole list* (the
+    S4 restart-clearing pattern, ``injector.injections = [...]``) — all
+    three bump ``epoch``, which schedule consumers (the campaign runner's
+    per-job fault cursors) rely on to detect staleness. Mutating the list
+    in place (``injections.append(...)``) bypasses the epoch and those
+    consumers will silently never re-apply.
+    """
 
     injections: list[Injection] = field(default_factory=list)
     _last_applied: tuple | None = field(init=False, default=None)
+    #: last-applied per-component multipliers, keyed by
+    #: ("c", dev) / ("h", dev) / ("l", (lo, hi)) / ("n", node)
+    _applied_vals: dict | None = field(init=False, default=None, repr=False)
+
+    def __setattr__(self, name: str, value) -> None:
+        object.__setattr__(self, name, value)
+        if name == "injections":
+            # Schedule identity epoch: consumers holding a cursor over this
+            # injector (campaign per-job fault cursors) must re-apply after
+            # any wholesale reassignment — S4 clears active episodes this
+            # way when a restart escapes onto healthy hardware.
+            d = self.__dict__
+            d["epoch"] = d.get("epoch", 0) + 1
 
     def add(self, inj: Injection) -> None:
         self.injections.append(inj)
+        self.epoch += 1
 
     def extend(self, injections: list[Injection]) -> "FailSlowInjector":
         """Compose another schedule onto this injector (campaign layering:
         a preset's fixed episodes plus a sampled fault-model schedule)."""
         self.injections.extend(injections)
+        self.epoch += 1
         return self
 
     def active(self, now: float) -> list[Injection]:
         return [i for i in self.injections if i.active(now)]
 
-    def apply(self, state: ClusterState, now: float) -> list[Injection]:
-        """Reset the state and apply all injections active at ``now``.
+    def _target_values(
+        self, state: ClusterState, act: list[Injection], severities
+    ) -> dict:
+        """Composed per-component multipliers of the active set.
 
-        Overlapping injections on the same target *compose*: each episode
-        multiplies the target's current multiplier (two 0.5-severity GPU
-        throttles leave 25 % of the speed), so when the earlier episode ends
-        the later one's degradation — not full health — is what remains.
+        Multiplication runs in episode order, exactly the chain the
+        sequential ``*=`` reapply used to produce — overlapping episodes on
+        one target compose (two 0.5-severity GPU throttles leave 25 % of
+        the speed), and when the earlier episode ends the later one's
+        degradation, not full health, is what remains.
+        """
+        vals: dict = {}
+        per = state.spec.gpus_per_node
+        for inj, severity in zip(act, severities):
+            mult = 1.0 - severity
+            if inj.kind is InjectionKind.GPU_SLOW:
+                (dev,) = inj.target
+                k = ("c", dev)
+                vals[k] = vals.get(k, 1.0) * mult
+            elif inj.kind is InjectionKind.CPU_CONTENTION:
+                (node,) = inj.target
+                for d in range(node * per, (node + 1) * per):
+                    k = ("h", d)
+                    vals[k] = vals.get(k, 1.0) * mult
+            elif inj.kind is InjectionKind.NIC_CONGESTION:
+                (node,) = inj.target
+                k = ("n", node)
+                vals[k] = vals.get(k, 1.0) * mult
+            else:
+                a, b = inj.target
+                k = ("l", (min(a, b), max(a, b)))
+                vals[k] = vals.get(k, 1.0) * mult
+        return vals
+
+    @staticmethod
+    def _write(state: ClusterState, k, v: float) -> None:
+        kind, ident = k
+        if kind == "c":
+            state.devices[ident].compute_speed = v
+        elif kind == "h":
+            state.devices[ident].host_speed = v
+        elif kind == "n":
+            state.nic_mult[ident] = v
+        else:
+            state.link_mult[ident] = v
+
+    @staticmethod
+    def _restore(state: ClusterState, k) -> None:
+        kind, ident = k
+        if kind == "c":
+            state.devices[ident].compute_speed = 1.0
+        elif kind == "h":
+            state.devices[ident].host_speed = 1.0
+        elif kind == "n":
+            state.nic_mult.pop(ident, None)
+        else:
+            state.link_mult.pop(ident, None)
+
+    def apply(self, state: ClusterState, now: float) -> list[Injection]:
+        """Bring ``state`` to the set of injections active at ``now``.
 
         Steady state is O(1): when the active set and its effective
         severities are unchanged since the last apply *and* nobody else
-        mutated the state (checked through its version counter), the
-        reset+reapply — which would invalidate the simulator's memoized
-        iteration time every step — is skipped. During a ramp the effective
-        severity moves every call, so ramping episodes reapply each step,
-        as they must.
+        mutated the state (checked through its version counter), nothing is
+        touched and the simulator's memoized iteration time survives.
+
+        On a transition (an episode starting, ending, or ramping), the new
+        per-component target multipliers are *diffed* against what this
+        injector last wrote: only components whose value actually changed
+        are written (and components whose episodes all ended are restored),
+        so the state's mutation log — and therefore the simulator's
+        incremental recompute — stays scoped to the event instead of a
+        whole-state reset+reapply. If anyone else mutated the state since
+        our last apply, the diff basis is void and the pre-refactor
+        reset+reapply runs (same final multipliers either way, since the
+        diff writes the identical composed products).
         """
         act = self.active(now)
         severities = tuple(i.severity_at(now) for i in act)
         key = (id(state), tuple(act), severities, state.version)
         if self._last_applied == key:
             return act
-        state.reset()
-        for inj, severity in zip(act, severities):
-            mult = 1.0 - severity
-            if inj.kind is InjectionKind.GPU_SLOW:
-                (dev,) = inj.target
-                state.devices[dev].compute_speed *= mult
-            elif inj.kind is InjectionKind.CPU_CONTENTION:
-                (node,) = inj.target
-                per = state.spec.gpus_per_node
-                for d in range(node * per, (node + 1) * per):
-                    state.devices[d].host_speed *= mult
-            elif inj.kind is InjectionKind.NIC_CONGESTION:
-                (node,) = inj.target
-                state.degrade_nic(node, state.nic_mult.get(node, 1.0) * mult)
-            else:
-                a, b = inj.target
-                key_ab = (min(a, b), max(a, b))
-                state.degrade_link(
-                    a, b, state.link_mult.get(key_ab, 1.0) * mult
-                )
+        new_vals = self._target_values(state, act, severities)
+        prev = self._applied_vals
+        if (
+            prev is not None
+            and self._last_applied is not None
+            and self._last_applied[0] == id(state)
+            and self._last_applied[3] == state.version
+        ):
+            # Diff basis valid: the state is exactly what we last wrote.
+            for k in prev.keys() - new_vals.keys():
+                self._restore(state, k)
+            for k, v in new_vals.items():
+                if prev.get(k) != v:
+                    self._write(state, k, v)
+        else:
+            state.reset()
+            for k, v in new_vals.items():
+                self._write(state, k, v)
+        self._applied_vals = new_vals
         self._last_applied = (id(state), tuple(act), severities, state.version)
         return act
 

@@ -20,17 +20,27 @@ run on a vectorized core instead of the original nested Python loops:
   grid, the ring-edge endpoint arrays of every TP cell and DP ring, the PP
   hop endpoints and the profiling-group key strings. It is rebuilt only when
   the placement (or job/cluster) changes.
-* Per evaluation, cell speeds and ring times reduce to a handful of gathers
-  over :meth:`ClusterState.effective_speeds` / ``link_bw_many`` plus
-  ``min``/``max``/``sum`` reductions — O(devices) array work instead of
-  O(pp*dp*tp) Python-level calls.
-* Results are memoized. The invalidation contract: ``ClusterState.version``
-  covers every health mutation (device-speed writes, link/NIC multiplier
-  changes, ``reset``), and the simulator bumps an internal config version
-  whenever ``placement``/``allocation``/``state`` are reassigned (including
-  through ``set_allocation``/``apply_placement``/``restart``). Healthy steps
+* Per-cell partial reductions are cached in :class:`_Cells` (cell speed
+  minima, per-edge ring bandwidths and their ring minima, hop bandwidths,
+  derived stage times) aligned with the ``_Layout`` index tensors.
+* Invalidation is *event-scoped*: the simulator holds a cursor into its
+  :class:`~repro.cluster.spec.ClusterState`'s typed mutation log and
+  re-reduces only what a :class:`~repro.cluster.spec.DirtySet` touches —
+  device dirt refreshes one cell's speed/stage, link dirt only the ring/hop
+  edges that traverse that link, NIC dirt the port's cross-node incident
+  edges, and ``remap_groups`` only the cells whose membership changed.
+  A single fail-slow event therefore costs O(dirty cells), not O(devices);
+  see docs/simulator.md for the full contract.
+* Results are memoized on top: ``ClusterState.version`` covers every health
+  mutation (device-speed writes, link/NIC multiplier changes, ``reset``),
+  and the simulator bumps an internal config version whenever
+  ``placement``/``allocation``/``state`` are reassigned (including through
+  ``set_allocation``/``apply_placement``/``restart``). Healthy steps
   between fail-slow events therefore cost O(1); mutate state only through
   those surfaces (lists must be *reassigned*, not edited in place).
+  Reassigning ``placement``/``state``/``job``/``cluster`` wholesale drops
+  the cell cache (full rebuild on next evaluation — the pre-refactor cost);
+  ``sim.incremental = False`` forces that mode permanently (benchmarks).
 
 The original loop implementations remain as ``*_reference()`` methods; the
 fast path matches them bit for bit (equivalence-tested), so benchmark
@@ -44,7 +54,7 @@ import numpy as np
 
 from repro.core.events import CommEvent, CommOp
 from repro.core.topology import HybridTopology
-from repro.cluster.spec import ClusterSpec, ClusterState, ModelSpec
+from repro.cluster.spec import ClusterSpec, ClusterState, DirtySet, ModelSpec
 
 
 @dataclass
@@ -91,10 +101,14 @@ class _Layout:
         the ring/hop endpoint gathers are recomputed — O(devices) array
         work with no Python-level string formatting.
         """
-        grid = np.asarray(placement, dtype=np.int64).reshape(
-            job.pp, job.dp, job.tp
-        )
+        flat = np.asarray(placement, dtype=np.int64)
+        grid = flat.reshape(job.pp, job.dp, job.tp)
         self.grid = grid
+        #: inverse index: physical device -> flat logical position (-1 =
+        #: device not used by this job); dirty components map through it to
+        #: the (stage, dp, tp) cells incremental recomputation must touch
+        self.dev_pos = np.full(int(flat.max()) + 1, -1, dtype=np.int64)
+        self.dev_pos[flat] = np.arange(flat.size, dtype=np.int64)
         self.tp_edges = None
         self.dp_edges = None
         self.hop_edges = None
@@ -110,11 +124,69 @@ class _Layout:
             self.hop_edges = (
                 grid[:-1, :, 0].reshape(-1), grid[1:, :, 0].reshape(-1)
             )
+        #: lazy node -> incident cross-node edge index per edge class,
+        #: built on the first NIC-scoped dirty update for this placement
+        self.nic_index = None
+
+    def build_nic_index(self, per: int) -> dict:
+        """node -> flat ids of the cross-node edges touching it, per edge
+        class (sorted-by-node arrays for searchsorted range queries)."""
+
+        def index(edges):
+            if edges is None:
+                return None
+            a, b = edges
+            na = a // per
+            nb = b // per
+            cross = np.flatnonzero(na != nb)
+            nodes = np.concatenate([na[cross], nb[cross]])
+            ids = np.concatenate([cross, cross])
+            order = np.argsort(nodes, kind="stable")
+            return nodes[order], ids[order]
+
+        self.nic_index = {
+            "tp": index(self.tp_edges),
+            "dp": index(self.dp_edges),
+            "hop": index(self.hop_edges),
+        }
+        return self.nic_index
+
+
+class _Cells:
+    """Per-cell partial reductions over the current placement and state.
+
+    ``cell_speed[s, d]`` is the slowest effective device speed of TP cell
+    (stage, dp_rank); ``tp_edge``/``dp_edge`` hold every ring edge's
+    bandwidth (shape ``(pp, dp, tp)``; edge ``k`` of a TP cell connects tp
+    ranks ``k -> k+1``, edge ``d`` of a DP ring connects dp ranks
+    ``d -> d+1``), with ``tp_bw``/``dp_bw`` their per-cell / per-ring
+    minima; ``hop_bw[s, d]`` the stage-``s``→``s+1`` activation-hop
+    bandwidth of DP rank ``d``; ``stage[s, d]`` the derived one-micro-batch
+    stage time. These are exactly the O(devices) gather+reduce products of
+    the vectorized pass — everything downstream is O(cells). A
+    :class:`~repro.cluster.spec.DirtySet` maps through the layout's inverse
+    index to positions, then to the incident edges and containing
+    cells/rings, so a fail-slow event re-reduces only what it touches (see
+    docs/simulator.md).
+    """
+
+    __slots__ = (
+        "cell_speed", "tp_edge", "tp_bw", "dp_edge", "dp_bw", "hop_bw",
+        "stage", "stage_max", "hop2",
+        # job-constant formula terms, factored once per build so the scalar
+        # update paths replay the exact arithmetic of the array formulas
+        "c_flops", "c_speed", "c_tp", "pp_vol", "c_dp",
+    )
 
 
 @dataclass
 class TrainingSimulator:
     """Iteration-time model + FALCON ClusterInterface implementation."""
+
+    #: event-scoped invalidation switch (class-level; set ``sim.incremental
+    #: = False`` to force the pre-dirty-set behavior of one full vectorized
+    #: recompute per state mutation — kept for benchmarking the two paths)
+    incremental = True
 
     cluster: ClusterSpec
     job: JobSpec
@@ -144,6 +216,8 @@ class TrainingSimulator:
             d["_place_ver"] = d.get("_place_ver", 0) + 1
         if name in ("placement", "allocation", "state", "job", "cluster"):
             d["_cfg_ver"] = d.get("_cfg_ver", 0) + 1
+        if name in ("allocation", "job"):
+            d["_alloc_arr"] = None  # caches allocation + pp - 1
         if name in ("job", "cluster"):
             d["_healthy_cache"] = None  # healthy time depends only on these
 
@@ -162,59 +236,430 @@ class TrainingSimulator:
         return [self.device_at(stage, dp_rank, k) for k in range(self.job.tp)]
 
     # --------------------------------------------- vectorized fast path
-    def _stage_times(self) -> np.ndarray:
-        """Per-(stage, dp_rank) time of one micro-batch, shape (pp, dp)."""
-        lay = self._layout()
+    def _stage_from(self, cell_speed, tp_bw):
+        """The (pp, dp)-shaped stage-time formula — one chain of elementwise
+        ops, applied identically to the full arrays (rebuild) and to dirty
+        sub-slices (incremental update), so both paths agree bit for bit."""
         m = self.job.model
-        cell_speed = self.state.effective_speeds()[lay.grid].min(axis=2)
         compute = (
             m.flops_per_microbatch() / self.job.pp
         ) / (self.job.tp * self.cluster.gpu_flops * cell_speed)
-        if lay.tp_edges is not None:
+        if tp_bw is not None:
             tp_vol = m.comm_tp_bytes(self.job.tp, self.job.pp, 1)
-            bw = self.state.link_bw_many(*lay.tp_edges).reshape(
-                self.job.pp, self.job.dp, self.job.tp
-            ).min(axis=2)
-            compute += 2.0 * (self.job.tp - 1) / self.job.tp * tp_vol / bw
+            compute += 2.0 * (self.job.tp - 1) / self.job.tp * tp_vol / tp_bw
         return compute
 
-    def _dp_ring_times(self, volume: float) -> np.ndarray:
-        """All-reduce time of every (stage, tp_rank) DP ring, shape (pp, tp)."""
-        lay = self._layout()
-        bw = self.state.link_bw_many(*lay.dp_edges).reshape(
-            self.job.pp, self.job.dp, self.job.tp
+    def _cells_rebuild(self, lay: _Layout) -> _Cells:
+        """Full vectorized pass: every per-cell reduction from scratch."""
+        state = self.state
+        job = self.job
+        m = job.model
+        pp, dp, tp = job.pp, job.dp, job.tp
+        c = _Cells()
+        c.cell_speed = state.effective_speeds()[lay.grid].min(axis=2)
+        c.tp_edge = c.tp_bw = c.dp_edge = c.dp_bw = c.hop_bw = None
+        if lay.tp_edges is not None:
+            c.tp_edge = state.link_bw_many(*lay.tp_edges).reshape(pp, dp, tp)
+            c.tp_bw = c.tp_edge.min(axis=2)
+        if lay.dp_edges is not None:
+            c.dp_edge = state.link_bw_many(*lay.dp_edges).reshape(pp, dp, tp)
+            c.dp_bw = c.dp_edge.min(axis=1)
+        if lay.hop_edges is not None:
+            c.hop_bw = state.link_bw_many(*lay.hop_edges).reshape(pp - 1, dp)
+        c.stage = self._stage_from(c.cell_speed, c.tp_bw)
+        c.stage_max = c.stage.max(axis=0)
+        # Factored formula terms: each is the exact left-to-right prefix of
+        # the corresponding array expression, so the scalar update paths
+        # reproduce the same float chains.
+        c.c_flops = m.flops_per_microbatch() / pp
+        c.c_speed = tp * self.cluster.gpu_flops
+        c.c_tp = (
+            2.0 * (tp - 1) / tp * m.comm_tp_bytes(tp, pp, 1)
+            if c.tp_bw is not None else 0.0
+        )
+        c.pp_vol = m.comm_pp_bytes(1)
+        c.c_dp = 2.0 * (dp - 1) / dp * m.comm_dp_bytes(tp, pp)
+        c.hop2 = (
+            0.0 if c.hop_bw is None
+            else 2.0 * (c.pp_vol / c.hop_bw).sum(axis=0)
+        )
+        return c
+
+    def _apply_dirty(self, cache: _Cells, lay: _Layout, ds) -> None:
+        """Event-scoped cache refresh from a typed
+        :class:`~repro.cluster.spec.DirtySet`.
+
+        Device dirt re-reduces only the containing cell's speed minimum and
+        stage time (edge bandwidths do not depend on device speeds); link
+        dirt re-measures only the cached ring/hop edges that actually
+        traverse that physical link (a degraded link no ring uses costs
+        nothing — the same observability rule the campaign's impact filter
+        applies); NIC dirt re-measures the node's devices' incident
+        *cross-node* edges (intra-node edges carry no NIC factor). All
+        refreshed entries replay the full pass's exact operation chains.
+        """
+        state = self.state
+        pp, dp, tp = self.job.pp, self.job.dp, self.job.tp
+        grid = lay.grid
+        dev_pos = lay.dev_pos
+        span = dp * tp
+        cell_dirty: set[tuple[int, int]] = set()   # cell_speed changed
+        tp_e: set[tuple[int, int, int]] = set()
+        dp_e: set[tuple[int, int, int]] = set()
+        hop_e: set[tuple[int, int]] = set()
+
+        def pos_of(dev: int) -> int | None:
+            if 0 <= dev < dev_pos.size:
+                p = dev_pos[dev]
+                if p >= 0:
+                    return int(p)
+            return None
+
+        for dev in ds.devices:
+            p = pos_of(dev)
+            if p is not None:
+                s, r = divmod(p, span)
+                cell_dirty.add((s, r // tp))
+        for a, b in ds.links:
+            pa, pb = pos_of(a), pos_of(b)
+            if pa is None or pb is None:
+                continue
+            sa, ra = divmod(pa, span)
+            sb, rb = divmod(pb, span)
+            da, ka = divmod(ra, tp)
+            db, kb = divmod(rb, tp)
+            if sa == sb:
+                if da == db and cache.tp_edge is not None:
+                    if (ka + 1) % tp == kb:
+                        tp_e.add((sa, da, ka))
+                    if (kb + 1) % tp == ka:
+                        tp_e.add((sa, da, kb))
+                if ka == kb and cache.dp_edge is not None:
+                    if (da + 1) % dp == db:
+                        dp_e.add((sa, da, ka))
+                    if (db + 1) % dp == da:
+                        dp_e.add((sa, db, ka))
+            elif (
+                cache.hop_bw is not None
+                and ka == 0 and kb == 0 and da == db
+                and abs(sa - sb) == 1
+            ):
+                hop_e.add((min(sa, sb), da))
+        tp_cells: set[tuple[int, int]] = set()
+        dp_rings: set[tuple[int, int]] = set()
+        hop_cols: set[int] = set()
+        if ds.nics:
+            # Node-scoped dirt: look the port's incident cross-node edges
+            # up in the layout's (lazily built) incidence index — only
+            # those carry the NIC factor — and re-measure them in one
+            # batched sweep per edge class.
+            per = state.spec.gpus_per_node
+            idx = lay.nic_index or lay.build_nic_index(per)
+            for node in ds.nics:
+                for cls, edges, arr in (
+                    ("tp", lay.tp_edges, cache.tp_edge),
+                    ("dp", lay.dp_edges, cache.dp_edge),
+                    ("hop", lay.hop_edges, cache.hop_bw),
+                ):
+                    if idx[cls] is None or arr is None:
+                        continue
+                    nodes_arr, eids = idx[cls]
+                    lo = np.searchsorted(nodes_arr, node)
+                    hi = np.searchsorted(nodes_arr, node + 1)
+                    if lo == hi:
+                        continue
+                    ids = eids[lo:hi]
+                    arr.reshape(-1)[ids] = state.link_bw_many(
+                        edges[0][ids], edges[1][ids]
+                    )
+                    if cls == "tp":
+                        cf = np.unique(ids // tp)
+                        tp_cells.update(
+                            zip((cf // dp).tolist(), (cf % dp).tolist())
+                        )
+                    elif cls == "dp":
+                        rf = np.unique((ids // span) * tp + ids % tp)
+                        dp_rings.update(
+                            zip((rf // tp).tolist(), (rf % tp).tolist())
+                        )
+                    else:
+                        hop_cols.update(np.unique(ids % dp).tolist())
+
+        link_bw = state.link_bw
+        for s, d2, e in tp_e:
+            cache.tp_edge[s, d2, e] = link_bw(
+                int(grid[s, d2, e]), int(grid[s, d2, (e + 1) % tp])
+            )
+            tp_cells.add((s, d2))
+        for s, f, k2 in dp_e:
+            cache.dp_edge[s, f, k2] = link_bw(
+                int(grid[s, f, k2]), int(grid[s, (f + 1) % dp, k2])
+            )
+            dp_rings.add((s, k2))
+        for hs, d2 in hop_e:
+            cache.hop_bw[hs, d2] = link_bw(
+                int(grid[hs, d2, 0]), int(grid[hs + 1, d2, 0])
+            )
+            hop_cols.add(d2)
+
+        compute = state._compute
+        host = state._host
+        for s, d2 in cell_dirty:
+            row = grid[s, d2]
+            cache.cell_speed[s, d2] = (compute[row] * host[row]).min()
+        for s, d2 in tp_cells:
+            cache.tp_bw[s, d2] = cache.tp_edge[s, d2].min()
+        stage_cols: set[int] = set()
+        for s, d2 in cell_dirty | tp_cells:
+            # Scalar replay of _stage_from through the factored constants.
+            t = cache.c_flops / (cache.c_speed * cache.cell_speed[s, d2])
+            if cache.tp_bw is not None:
+                t += cache.c_tp / cache.tp_bw[s, d2]
+            cache.stage[s, d2] = t
+            stage_cols.add(d2)
+        for d2 in stage_cols:
+            cache.stage_max[d2] = max(cache.stage[:, d2].tolist())
+        if len(dp_rings) > 2:
+            rs = np.fromiter((s for s, _ in dp_rings), np.int64, len(dp_rings))
+            rk = np.fromiter((k for _, k in dp_rings), np.int64, len(dp_rings))
+            cache.dp_bw[rs, rk] = cache.dp_edge[rs, :, rk].min(axis=1)
+        else:
+            for s, k2 in dp_rings:
+                cache.dp_bw[s, k2] = cache.dp_edge[s, :, k2].min()
+        for d2 in hop_cols:
+            # Sequential accumulation: the full pass's axis-0 sum reduces
+            # row by row (never pairwise along the outer axis), and a 1-D
+            # .sum() would switch to pairwise at >= 9 hops and drift a ulp.
+            acc = 0.0
+            for bw in cache.hop_bw[:, d2].tolist():
+                acc += cache.pp_vol / bw
+            cache.hop2[d2] = 2.0 * acc
+
+    def _cells_update_positions(
+        self, cache: _Cells, lay: _Layout, pos: np.ndarray
+    ) -> None:
+        """Re-reduce only what the logical positions ``pos`` touch: their
+        incident ring edges, then the containing cells' speed minima, stage
+        times, ring minima and activation hops.
+
+        Each update applies the exact operation chain of the full pass to
+        the touched slices (same gathers, same reduction order over the
+        same cached values), so the arrays stay bit-identical to a
+        from-scratch rebuild.
+        """
+        state = self.state
+        pp, dp, tp = self.job.pp, self.job.dp, self.job.tp
+        grid = lay.grid
+        if pos.size <= 3:
+            # The batched path below costs ~30 small array ops regardless of
+            # size; for the 1-2 positions a device or link event dirties,
+            # per-position scalar updates are cheaper (re-reducing a shared
+            # cell twice just re-stores the same bits). Node-scoped dirt
+            # (CPU/NIC: a whole node's devices) stays on the batched path.
+            for p in pos:
+                self._cell_update_one(cache, lay, int(p))
+            return
+        s = pos // (dp * tp)
+        rem = pos % (dp * tp)
+        dd = rem // tp
+        kk = rem % tp
+        cells = np.unique(s * dp + dd)
+        cs, cd = cells // dp, cells % dp
+        rows = grid[cs, cd]  # (m, tp)
+        cache.cell_speed[cs, cd] = (
+            state._compute[rows] * state._host[rows]
         ).min(axis=1)
+        # One fused link_bw_many sweep over every dirty ring/hop edge, then
+        # scatter the results back per edge class. A position's incident
+        # edges: k-1 -> k and k -> k+1 in its TP cell, d-1 -> d and d -> d+1
+        # in its DP ring (indices mod size; duplicates re-store equal bits).
+        seg_a: list[np.ndarray] = []
+        seg_b: list[np.ndarray] = []
+        tp_idx = dp_idx = hop_idx = None
+        if cache.tp_edge is not None:
+            es = np.concatenate([s, s])
+            ed = np.concatenate([dd, dd])
+            ek = np.concatenate([(kk - 1) % tp, kk])
+            tp_idx = (es, ed, ek)
+            seg_a.append(grid[es, ed, ek])
+            seg_b.append(grid[es, ed, (ek + 1) % tp])
+        if cache.dp_edge is not None:
+            es = np.concatenate([s, s])
+            ek = np.concatenate([kk, kk])
+            ed = np.concatenate([(dd - 1) % dp, dd])
+            dp_idx = (es, ed, ek)
+            seg_a.append(grid[es, ed, ek])
+            seg_b.append(grid[es, (ed + 1) % dp, ek])
+        if cache.hop_bw is not None:
+            hs, hd = s[kk == 0], dd[kk == 0]
+            up, down = hs > 0, hs < pp - 1
+            hops = np.unique(np.concatenate(
+                [(hs[up] - 1) * dp + hd[up], hs[down] * dp + hd[down]]
+            ))
+            if hops.size:
+                hop_idx = (hops // dp, hops % dp)
+                seg_a.append(grid[hop_idx[0], hop_idx[1], 0])
+                seg_b.append(grid[hop_idx[0] + 1, hop_idx[1], 0])
+        if seg_a:
+            bw = state.link_bw_many(
+                np.concatenate(seg_a), np.concatenate(seg_b)
+            )
+            off = 0
+            if tp_idx is not None:
+                m = tp_idx[0].size
+                cache.tp_edge[tp_idx] = bw[off:off + m]
+                off += m
+                cache.tp_bw[cs, cd] = cache.tp_edge[cs, cd].min(axis=1)
+            if dp_idx is not None:
+                m = dp_idx[0].size
+                cache.dp_edge[dp_idx] = bw[off:off + m]
+                off += m
+                rings = np.unique(s * tp + kk)
+                rs, rk = rings // tp, rings % tp
+                cache.dp_bw[rs, rk] = cache.dp_edge[rs, :, rk].min(axis=1)
+            if hop_idx is not None:
+                cache.hop_bw[hop_idx] = bw[off:]
+        cache.stage[cs, cd] = self._stage_from(
+            cache.cell_speed[cs, cd],
+            None if cache.tp_bw is None else cache.tp_bw[cs, cd],
+        )
+        cache.stage_max[cd] = cache.stage[:, cd].max(axis=0)
+        if cache.hop_bw is not None:
+            cache.hop2[cd] = 2.0 * (
+                cache.pp_vol / cache.hop_bw[:, cd]
+            ).sum(axis=0)
+
+    def _cell_update_one(self, cache: _Cells, lay: _Layout, p: int) -> None:
+        """Scalar fast path of :meth:`_cells_update_positions` for the
+        single-position dirt a typical fail-slow event produces — plain
+        index arithmetic instead of array batching, same operation chains
+        (``link_bw`` and ``link_bw_many`` are kept in bit-identical
+        lockstep, see :mod:`repro.cluster.spec`)."""
+        state = self.state
+        pp, dp, tp = self.job.pp, self.job.dp, self.job.tp
+        grid = lay.grid
+        s, rem = divmod(p, dp * tp)
+        d2, k2 = divmod(rem, tp)
+        row = grid[s, d2]  # (tp,) view
+        cache.cell_speed[s, d2] = (
+            state._compute[row] * state._host[row]
+        ).min()
+        if cache.tp_edge is not None:
+            e0 = (k2 - 1) % tp
+            for e in (e0, k2) if e0 != k2 else (k2,):
+                cache.tp_edge[s, d2, e] = state.link_bw(
+                    int(row[e]), int(row[(e + 1) % tp])
+                )
+            cache.tp_bw[s, d2] = cache.tp_edge[s, d2].min()
+        cache.stage[s, d2] = self._stage_from(
+            cache.cell_speed[s, d2],
+            None if cache.tp_bw is None else cache.tp_bw[s, d2],
+        )
+        if cache.dp_edge is not None:
+            f0 = (d2 - 1) % dp
+            for f in (f0, d2) if f0 != d2 else (d2,):
+                cache.dp_edge[s, f, k2] = state.link_bw(
+                    int(grid[s, f, k2]), int(grid[s, (f + 1) % dp, k2])
+                )
+            cache.dp_bw[s, k2] = cache.dp_edge[s, :, k2].min()
+        if cache.hop_bw is not None and k2 == 0:
+            for hs in (s - 1, s):
+                if 0 <= hs < pp - 1:
+                    cache.hop_bw[hs, d2] = state.link_bw(
+                        int(grid[hs, d2, 0]), int(grid[hs + 1, d2, 0])
+                    )
+        cache.stage_max[d2] = cache.stage[:, d2].max()
+        if cache.hop_bw is not None:
+            # Sequential like the full pass's axis-0 sum (see _apply_dirty).
+            acc = 0.0
+            for bw in cache.hop_bw[:, d2].tolist():
+                acc += cache.pp_vol / bw
+            cache.hop2[d2] = 2.0 * acc
+
+    def _cells_if_current(self) -> _Cells | None:
+        """The cell cache, brought up to date with the state's mutation log
+        — or None when it must be rebuilt (placement/state/job/cluster
+        reassigned, incremental mode off, or the reader's cursor fell off
+        the retained log). Single source of the freshness rule for both
+        :meth:`_cells` and :meth:`remap_groups`."""
+        d = self.__dict__
+        cache = d.get("_cells_cache")
+        if (
+            cache is None
+            or not self.incremental
+            or d.get("_cells_place_ver") != d["_place_ver"]
+            or d.get("_cells_state_uid") != self.state.uid
+        ):
+            return None
+        ds = self.state.dirty_since(d["_cells_cursor"])
+        d["_cells_cursor"] = self.state.cursor()
+        if ds.full:
+            return None
+        if ds:
+            self._apply_dirty(cache, self._layout(), ds)
+        return cache
+
+    def _cells(self) -> _Cells:
+        """The cached per-cell reductions, refreshed event-scoped.
+
+        Consumes the state's mutation log from this simulator's cursor:
+        an empty dirty set returns the cache untouched, a typed dirty set
+        re-reduces only the affected cells, and a full/overflowed one (or
+        any placement/job/cluster/state reassignment) rebuilds everything —
+        the pre-refactor behavior.
+        """
+        cache = self._cells_if_current()
+        if cache is not None:
+            return cache
+        d = self.__dict__
+        lay = self._layout()
+        cache = self._cells_rebuild(lay)
+        d["_cells_cache"] = cache
+        d["_cells_place_ver"] = d["_place_ver"]
+        d["_cells_state_uid"] = self.state.uid
+        d["_cells_cursor"] = self.state.cursor()
+        return cache
+
+    def _stage_times(self) -> np.ndarray:
+        """Per-(stage, dp_rank) time of one micro-batch, shape (pp, dp)."""
+        return self._cells().stage
+
+    def _dp_ring_times(self, volume: float, c: _Cells | None = None) -> np.ndarray:
+        """All-reduce time of every (stage, tp_rank) DP ring, shape (pp, tp)."""
+        bw = (c or self._cells()).dp_bw
         return 2.0 * (self.job.dp - 1) / self.job.dp * volume / bw
+
+    def _alloc_off(self) -> np.ndarray:
+        """``allocation + pp - 1`` as an int64 array, memoized until the
+        allocation list is reassigned (integer arithmetic, order-exact)."""
+        d = self.__dict__
+        if d.get("_alloc_arr") is None:
+            d["_alloc_arr"] = (
+                np.asarray(self.allocation, dtype=np.int64) + self.job.pp - 1
+            )
+        return d["_alloc_arr"]
 
     def iteration_time(self) -> float:
         key = (self.__dict__["_cfg_ver"], self.state.version)
         d = self.__dict__
         if d.get("_it_key") == key:
             return d["_it_val"]
-        lay = self._layout()
-        stage_t = self._stage_times().max(axis=0)  # (dp,)
-        if lay.hop_edges is not None:
-            pp_vol = self.job.model.comm_pp_bytes(1)
-            hop = (
-                pp_vol / self.state.link_bw_many(*lay.hop_edges).reshape(
-                    self.job.pp - 1, self.job.dp
-                )
-            ).sum(axis=0)
-        else:
-            hop = 0.0
-        alloc = np.asarray(self.allocation, dtype=np.int64)
-        pipe = (alloc + self.job.pp - 1) * stage_t + 2.0 * hop
+        c = self._cells()
+        pipe = self._alloc_off() * c.stage_max
+        if c.hop_bw is not None:
+            pipe += c.hop2
         t = float(pipe.max())
         if self.job.dp > 1:
-            vol = self.job.model.comm_dp_bytes(self.job.tp, self.job.pp)
-            t += float(self._dp_ring_times(vol).max())
+            # max over C / bw == C / bw.min(): the winning element is the
+            # same division of the same two doubles either way.
+            t += float(c.c_dp / c.dp_bw.min())
         d["_it_key"] = key
         d["_it_val"] = t
         return t
 
     def per_microbatch_times(self) -> list[float]:
         """Per-DP-group per-micro-batch processing time (S2 solver input)."""
-        return [float(v) for v in self._stage_times().max(axis=0)]
+        return [float(v) for v in self._cells().stage_max]
 
     def healthy_iteration_time(self) -> float:
         """Iteration time with all components healthy and even allocation.
@@ -345,18 +790,40 @@ class TrainingSimulator:
         Unlike reassigning ``placement`` directly, the cached
         :class:`_Layout` is refreshed *incrementally* (index tensors
         rebuilt in place, group-key strings reused) instead of being built
-        from scratch on the next evaluation.
+        from scratch on the next evaluation — and the per-cell reduction
+        cache stays live: only cells whose membership actually changed (plus
+        any pending state dirt) are re-reduced, so a measure-before-commit
+        candidate sweep (S2P/S3P) pays per remapped cell, not per cluster.
         """
-        new = [int(p) for p in placement]
-        if sorted(new) != sorted(self.placement):
+        new_arr = np.asarray(placement, dtype=np.int64)
+        old_arr = np.asarray(self.placement, dtype=np.int64)
+        if new_arr.shape != old_arr.shape:
             raise ValueError("remap must permute the job's current devices")
+        changed = np.flatnonzero(new_arr != old_arr)
+        # Permutation check on the changed subset only (unchanged positions
+        # cancel out of the multiset comparison) — O(moved log moved), not
+        # O(devices log devices) per candidate evaluation.
+        if not np.array_equal(
+            np.sort(new_arr[changed]), np.sort(old_arr[changed])
+        ):
+            raise ValueError("remap must permute the job's current devices")
+        new = new_arr.tolist()
         d = self.__dict__
         lay = d.get("_layout_cache")
         fresh = lay is not None and d.get("_layout_ver") == d.get("_place_ver")
+        # Sync any unapplied state dirt against the *old* grid first (the
+        # cache must equal a rebuild for the old placement before the
+        # membership delta is applied on top).
+        cache = self._cells_if_current()
         self.placement = new  # bumps placement/config versions
         if fresh:
             lay.update(new, self.job)
             d["_layout_ver"] = d["_place_ver"]
+        if cache is not None:
+            # Re-reduce only the positions whose device changed.
+            if changed.size:
+                self._cells_update_positions(cache, self._layout(), changed)
+            d["_cells_place_ver"] = d["_place_ver"]
 
     def restart(self) -> None:
         """S4: checkpoint-and-restart onto healthy devices (modeled as a
@@ -376,20 +843,41 @@ class TrainingSimulator:
             for i, op in enumerate(self.ITER_PATTERN)
         ]
 
+    # --------------------------------------- dirty-cursor adapter surface
+    def state_cursor(self) -> tuple[int, int]:
+        """Opaque cursor over the hardware mutation log: (state identity,
+        log position — see :meth:`repro.cluster.spec.ClusterState.cursor`).
+        Control-plane readers store this and poll :meth:`dirty_since` to
+        learn which hardware components moved — each registered job keeps
+        its own cursor, so one job's faults cost co-registered jobs
+        nothing. The identity token guards against ``sim.state`` being
+        reassigned wholesale (probe swaps, restarts onto a fresh state):
+        a cursor from the old state reads as everything-dirty, never as
+        clean."""
+        return (self.state.uid, self.state.cursor())
+
+    def dirty_since(self, cursor: tuple[int, int]):
+        """Typed :class:`~repro.cluster.spec.DirtySet` of components mutated
+        since ``cursor`` (device ranks, link pairs, NIC nodes — all in this
+        job's local coordinates). Full-dirty when the cursor belongs to a
+        previous state object."""
+        uid, pos = cursor
+        if uid != self.state.uid:
+            return DirtySet(full=True)
+        return self.state.dirty_since(pos)
+
     # ------------------------------------- ClusterInterface (FALCON R1)
     def profile_groups(self) -> dict[str, float]:
         """Per-communication-group transfer time (profiling phase)."""
         lay = self._layout()
+        c = self._cells()
         out: dict[str, float] = {}
         m = self.job.model
-        if lay.tp_edges is not None:
+        if c.tp_bw is not None:
             tp_vol = m.comm_tp_bytes(self.job.tp, self.job.pp, 1)
-            bw = self.state.link_bw_many(*lay.tp_edges).reshape(
-                self.job.pp, self.job.dp, self.job.tp
-            ).min(axis=2)
-            times = 2.0 * (self.job.tp - 1) / self.job.tp * tp_vol / bw
+            times = 2.0 * (self.job.tp - 1) / self.job.tp * tp_vol / c.tp_bw
             out.update(zip(lay.tp_keys, times.reshape(-1).tolist(), strict=True))
-        if lay.dp_edges is not None:
+        if c.dp_bw is not None:
             dp_vol = m.comm_dp_bytes(self.job.tp, self.job.pp)
             times = self._dp_ring_times(dp_vol)
             out.update(zip(lay.dp_keys, times.reshape(-1).tolist(), strict=True))

@@ -6,6 +6,7 @@ TPU v5e for the roofline analysis of the JAX runtime (the dry-run target).
 """
 from __future__ import annotations
 
+import itertools
 from dataclasses import dataclass, field
 
 import numpy as np
@@ -102,13 +103,48 @@ class ClusterSpec:
         return np.where(a == b, np.inf, bw)
 
 
+#: retained mutation-log entries; readers whose cursor falls off the tail
+#: get a conservative full-dirty set (they rebuild, exactly as before the
+#: log existed), so the cap bounds memory without a correctness cliff
+_LOG_CAP = 8192
+
+#: unique ClusterState identity tokens — ``id()`` can be reused after GC,
+#: which would let a reader mistake a fresh state for the one its cursor
+#: (and cached reductions) were built against
+_STATE_UIDS = itertools.count()
+
+
+@dataclass(frozen=True)
+class DirtySet:
+    """Typed components mutated since a reader's cursor.
+
+    ``full`` means the reader's cursor predates the retained log (or a
+    legacy whole-state bump happened): everything must be treated dirty.
+    The three component sets mirror the state's storage: device indices
+    (compute *or* host speed changed), ``(min, max)`` link keys, NIC nodes.
+    """
+
+    full: bool = False
+    devices: frozenset[int] = frozenset()
+    links: frozenset[tuple[int, int]] = frozenset()
+    nics: frozenset[int] = frozenset()
+
+    def __bool__(self) -> bool:
+        return self.full or bool(self.devices or self.links or self.nics)
+
+
+_EMPTY_DIRTY = DirtySet()
+_FULL_DIRTY = DirtySet(full=True)
+
+
 class DeviceState:
     """Dynamic per-device health (multipliers; 1.0 = healthy).
 
     A view into the owning :class:`ClusterState`'s speed arrays: writes land
-    in the vectorized storage and bump the state version, so the simulator's
-    memoized iteration time invalidates on *any* mutation path — including
-    direct ``state.devices[i].compute_speed = ...`` assignments.
+    in the vectorized storage and append to the state's mutation log, so the
+    simulator's memoized iteration time invalidates on *any* mutation path —
+    including direct ``state.devices[i].compute_speed = ...`` assignments —
+    and incremental readers learn exactly which device moved.
     """
 
     __slots__ = ("_state", "_idx")
@@ -125,7 +161,7 @@ class DeviceState:
     def compute_speed(self, v: float) -> None:
         if self._state._compute[self._idx] != v:
             self._state._compute[self._idx] = v
-            self._state._bump()
+            self._state._note_device(self._idx)
 
     @property
     def host_speed(self) -> float:  # CPU contention (affects whole node)
@@ -135,7 +171,7 @@ class DeviceState:
     def host_speed(self, v: float) -> None:
         if self._state._host[self._idx] != v:
             self._state._host[self._idx] = v
-            self._state._bump()
+            self._state._note_device(self._idx)
 
     def __repr__(self) -> str:
         return (f"DeviceState(compute_speed={self.compute_speed}, "
@@ -143,45 +179,50 @@ class DeviceState:
 
 
 class _VersionedDict(dict):
-    """Dict that bumps its owner's state version on real mutations."""
+    """Dict that logs key-scoped mutations into its owner's mutation log."""
 
-    __slots__ = ("_owner",)
+    __slots__ = ("_owner", "_kind")
 
-    def __init__(self, owner: "ClusterState", *args) -> None:
+    def __init__(self, owner: "ClusterState", kind: str, *args) -> None:
         super().__init__(*args)
         self._owner = owner
+        self._kind = kind
 
     def __setitem__(self, key, value) -> None:
         if key in self and dict.__getitem__(self, key) == value:
             return
         super().__setitem__(key, value)
-        self._owner._bump()
+        self._owner._note(self._kind, key)
 
     def __delitem__(self, key) -> None:
         super().__delitem__(key)
-        self._owner._bump()
+        self._owner._note(self._kind, key)
 
     def pop(self, key, *default):
         had = key in self
         out = super().pop(key, *default)
         if had:
-            self._owner._bump()
+            self._owner._note(self._kind, key)
         return out
 
     def clear(self) -> None:
         if self:
+            keys = list(self)
             super().clear()
-            self._owner._bump()
+            for key in keys:
+                self._owner._note(self._kind, key)
 
     def update(self, *args, **kw) -> None:
+        keys = list(dict(*args, **kw))
         super().update(*args, **kw)
-        self._owner._bump()
+        for key in keys:
+            self._owner._note(self._kind, key)
 
     def setdefault(self, key, default=None):
         if key in self:
             return dict.__getitem__(self, key)
         super().__setitem__(key, default)
-        self._owner._bump()
+        self._owner._note(self._kind, key)
         return default
 
     def __ior__(self, other):
@@ -190,7 +231,7 @@ class _VersionedDict(dict):
 
     def popitem(self):
         out = super().popitem()
-        self._owner._bump()
+        self._owner._note(self._kind, out[0])
         return out
 
 
@@ -199,9 +240,13 @@ class ClusterState:
     """Mutable health state of every device and link.
 
     Speeds are stored as dense arrays for the simulator's vectorized fast
-    path; a monotonically increasing ``version`` tracks every mutation
-    (through device views, the versioned multiplier dicts, or ``reset``) and
-    is the invalidation key for memoized iteration times.
+    path. Every mutation (through device views, the versioned multiplier
+    dicts, or ``reset``) appends a *typed* entry to a bounded mutation log;
+    readers hold a cursor (:meth:`cursor`) and ask :meth:`dirty_since` for
+    the :class:`DirtySet` of components that moved — the invalidation
+    contract incremental iteration-time recomputation is built on (see
+    docs/simulator.md). ``version`` — the log's write position — is kept as
+    the derived compatibility property coarse-grained memo keys still use.
     """
 
     spec: ClusterSpec
@@ -214,30 +259,116 @@ class ClusterState:
 
     def __post_init__(self) -> None:
         n = self.spec.n_devices
+        self._uid = next(_STATE_UIDS)
         self._version = 0
+        self._log: list[tuple[str, object]] = []
+        self._log_base = 0  # version index of _log[0]
         self._compute = np.ones(n)
         self._host = np.ones(n)
+        #: devices whose compute or host speed is currently != 1.0 — lets
+        #: ``reset`` touch (and dirty) only what was actually degraded
+        self._degraded: set[int] = set()
+        #: memoized sorted-key lookup tables for ``link_bw_many`` (rebuilt
+        #: lazily after any link/NIC mutation, so steady-state vectorized
+        #: sweeps stop re-sorting the multiplier dicts every call)
+        self._link_lookup: tuple[np.ndarray, np.ndarray] | None = None
+        self._nic_lookup: np.ndarray | None = None
         self.devices = [DeviceState(self, i) for i in range(n)]
-        self.link_mult = _VersionedDict(self, self.link_mult)
-        self.nic_mult = _VersionedDict(self, self.nic_mult)
+        self.link_mult = _VersionedDict(self, "link", self.link_mult)
+        self.nic_mult = _VersionedDict(self, "nic", self.nic_mult)
         self._clean = not self.link_mult and not self.nic_mult
+
+    @property
+    def uid(self) -> int:
+        """Process-unique identity token (never reused, unlike ``id()``)."""
+        return self._uid
 
     @property
     def version(self) -> int:
         return self._version
 
-    def _bump(self) -> None:
+    # ----------------------------------------------------- mutation log
+    def _note(self, kind: str, ident) -> None:
+        """Append one typed mutation entry and advance the version."""
+        self._log.append((kind, ident))
+        if len(self._log) > _LOG_CAP:
+            drop = len(self._log) - _LOG_CAP // 2
+            del self._log[:drop]
+            self._log_base += drop
         self._version += 1
         self._clean = False
+        if kind == "link":
+            self._link_lookup = None
+        elif kind == "nic" and self._nic_lookup is not None:
+            # The NIC table is dense per node: patch the entry in place
+            # (the dict is already updated when _note fires).
+            self._nic_lookup[ident] = self.nic_mult.get(ident, 1.0)
+
+    def _note_device(self, idx: int) -> None:
+        if self._compute[idx] == 1.0 and self._host[idx] == 1.0:
+            self._degraded.discard(idx)
+        else:
+            self._degraded.add(idx)
+        self._note("dev", idx)
+
+    def _bump(self) -> None:
+        """Legacy whole-state invalidation (kept for external callers):
+        advances the version with an untyped entry, which readers must
+        treat as everything-dirty."""
+        self._note("all", None)
+
+    def cursor(self) -> int:
+        """Current mutation-log position; pass to :meth:`dirty_since`."""
+        return self._version
+
+    def dirty_since(self, cursor: int) -> DirtySet:
+        """Aggregate the typed mutations since ``cursor`` (see
+        :class:`DirtySet`). A cursor older than the retained log window —
+        or from before this state existed — yields ``full=True``."""
+        if cursor >= self._version:
+            return _EMPTY_DIRTY
+        start = cursor - self._log_base
+        if start < 0:
+            return _FULL_DIRTY
+        devices: set[int] = set()
+        links: set[tuple[int, int]] = set()
+        nics: set[int] = set()
+        for kind, ident in self._log[start:]:
+            if kind == "dev":
+                devices.add(ident)
+            elif kind == "link":
+                links.add(ident)
+            elif kind == "nic":
+                nics.add(ident)
+            else:  # legacy _bump
+                return _FULL_DIRTY
+        return DirtySet(
+            devices=frozenset(devices),
+            links=frozenset(links),
+            nics=frozenset(nics),
+        )
 
     def reset(self) -> None:
+        """Restore full health, dirtying only what was actually degraded
+        (per-component entries, not a whole-state invalidation — the
+        injector's reset/reapply cycle stays event-scoped)."""
         if self._clean:
             return
-        self._compute.fill(1.0)
-        self._host.fill(1.0)
+        for i in sorted(self._degraded):
+            self._compute[i] = 1.0
+            self._host[i] = 1.0
+            self._note("dev", i)
+        self._degraded.clear()
+        for key in list(self.link_mult):
+            self._note("link", key)
+        for node in list(self.nic_mult):
+            self._note("nic", node)
         dict.clear(self.link_mult)
         dict.clear(self.nic_mult)
-        self._bump()
+        # The notes above ran against the still-populated dicts; drop the
+        # memoized lookups outright rather than patching stale entries.
+        self._link_lookup = None
+        self._nic_lookup = None
         self._clean = True
 
     def effective_speed(self, device: int) -> float:
@@ -274,23 +405,31 @@ class ClusterState:
         bw = np.where(a == b, np.inf, bw)
         if self.link_mult:
             # One sorted-key lookup for all degraded links: O(len log m),
-            # not a full-length mask per degraded link.
+            # not a full-length mask per degraded link. The sorted tables
+            # are memoized on the state until the next link mutation.
             n = spec.n_devices
             keys = np.minimum(a, b) * n + np.maximum(a, b)
-            items = sorted(
-                (klo * n + khi, mult)
-                for (klo, khi), mult in self.link_mult.items()
-            )
-            dk = np.array([k for k, _ in items], dtype=np.int64)
-            dm = np.array([m for _, m in items])
+            if self._link_lookup is None:
+                items = sorted(
+                    (klo * n + khi, mult)
+                    for (klo, khi), mult in self.link_mult.items()
+                )
+                self._link_lookup = (
+                    np.array([k for k, _ in items], dtype=np.int64),
+                    np.array([m for _, m in items]),
+                )
+            dk, dm = self._link_lookup
             pos = np.minimum(np.searchsorted(dk, keys), dk.size - 1)
             hit = dk[pos] == keys
             if hit.any():
                 bw = np.where(hit, bw * dm[pos], bw)
         if self.nic_mult:
-            nm = np.ones(spec.n_nodes)
-            for node, mult in self.nic_mult.items():
-                nm[node] = mult
+            if self._nic_lookup is None:
+                nm = np.ones(spec.n_nodes)
+                for node, mult in self.nic_mult.items():
+                    nm[node] = mult
+                self._nic_lookup = nm
+            nm = self._nic_lookup
             factor = np.minimum(nm[na], nm[nb])
             bw = np.where(cross, bw * factor, bw)
         return bw

@@ -8,6 +8,7 @@
 See docs/control_plane.md for the event pipeline, the cluster-adapter
 protocol, and how to register a custom mitigation strategy.
 """
+from repro.cluster.spec import DirtySet  # noqa: F401  (cursor contract)
 from repro.controlplane.adapters import ClusterAdapter, TraceReplayAdapter  # noqa: F401
 from repro.controlplane.events import (  # noqa: F401
     ControlEvent,
@@ -17,6 +18,7 @@ from repro.controlplane.events import (  # noqa: F401
     MitigationAction,
     MitigationResult,
     Observation,
+    ScreenTuning,
 )
 from repro.controlplane.plane import ControlPlane, JobHandle  # noqa: F401
 from repro.controlplane.strategies import (  # noqa: F401

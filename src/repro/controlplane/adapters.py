@@ -27,6 +27,7 @@ from typing import Protocol, runtime_checkable
 
 import numpy as np
 
+from repro.cluster.spec import DirtySet
 from repro.cluster.traces import LabeledTrace
 from repro.core.detector import ClusterInterface
 
@@ -42,6 +43,23 @@ class ClusterAdapter(ClusterInterface, Protocol):
     # -- observation ---------------------------------------------------
     def iteration_time(self) -> float:
         """Current modeled/measured iteration time of the job."""
+        ...
+
+    # -- event-scoped invalidation (per-job dirty cursors) --------------
+    def state_cursor(self) -> object:
+        """Opaque cursor into the adapter's hardware mutation log. Each
+        control-plane reader (job, dashboard, candidate evaluator) holds
+        its own cursor, so consuming one reader's dirt never invalidates
+        another's view — the contract documented in docs/simulator.md.
+        Cursors carry the backing state's identity: one taken before the
+        adapter's state was replaced wholesale reads as everything-dirty."""
+        ...
+
+    def dirty_since(self, cursor: object) -> DirtySet:
+        """Typed set of hardware components mutated since ``cursor``
+        (job-local device ranks, link pairs, NIC nodes). Adapters without
+        a mutation log simply omit the surface and callers fall back to
+        treating every poll as fully dirty."""
         ...
 
     # -- batched validation (vectorized pinpoint fast path) ------------

@@ -50,6 +50,27 @@ class Membership(ControlEvent):
 
 
 @dataclass(frozen=True)
+class ScreenTuning(ControlEvent):
+    """The fleet screen re-derived its adaptive knobs (fleet-scoped:
+    ``job_id`` is empty).
+
+    Emitted by :meth:`ControlPlane.tick` whenever the
+    :class:`~repro.core.detector.FleetDetect` adaptive layer
+    (``adapt_every > 0``) chooses new values: the per-worker hazard and the
+    shared run-length frontier cap derived from the observed confirmed-flag
+    rate (``change_rate`` = flags / worker-ticks at re-tune time). The log
+    therefore records exactly which screening parameters were live for
+    every subsequent Flag.
+    """
+
+    hazard: float = 0.0
+    max_hypotheses: int | None = None
+    change_rate: float = 0.0
+    flags: int = 0
+    worker_ticks: int = 0
+
+
+@dataclass(frozen=True)
 class Flag(ControlEvent):
     """A verified change-point from the fleet screen (pre-pinpoint).
 

@@ -43,6 +43,7 @@ from repro.controlplane.events import (
     MitigationAction,
     MitigationResult,
     Observation,
+    ScreenTuning,
 )
 from repro.controlplane.strategies import (
     MitigationContext,
@@ -114,6 +115,8 @@ class ControlPlane:
         self._jobs: dict[str, JobHandle] = {}
         self._fleet: FleetDetect | None = None
         self._fleet_kwargs = dict(fleet_kwargs or {})
+        #: last ScreenTuning payload mirrored into the event log
+        self._last_tuning: dict | None = None
         #: fleet-shared fault-duration survival curves: every job's
         #: resolved diagnoses sharpen every other job's ski-rental
         #: break-even; None keeps the paper's fixed-horizon rule
@@ -299,6 +302,21 @@ class ControlPlane:
                 job, new_event, had_active, iter_time, now,
                 deduped_from=deduped_from,
             )
+        tuning = getattr(self._fleet, "last_tuning", None)
+        if tuning is not None and tuning is not self._last_tuning:
+            # The adaptive screen chose new knobs at the END of this tick
+            # (FleetDetect retunes after collecting the tick's flags), so
+            # the event is appended after them: every Flag *after* a
+            # ScreenTuning entry was screened under its parameters.
+            self._last_tuning = tuning
+            out.append(ScreenTuning(
+                job_id="", time=now,
+                hazard=tuning["hazard"],
+                max_hypotheses=tuning["max_hypotheses"],
+                change_rate=tuning["change_rate"],
+                flags=tuning["flags"],
+                worker_ticks=tuning["worker_ticks"],
+            ))
         self.events += out
         return out
 

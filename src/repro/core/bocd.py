@@ -205,6 +205,22 @@ class BOCD:
         self._len = m
         self._log_r_buf[:m] -= _logsumexp(self._log_r_buf[:m])
 
+    def retune(
+        self,
+        hazard: float | None = None,
+        max_hypotheses: int | None = None,
+    ) -> None:
+        """Adjust the change-point prior / frontier cap mid-stream.
+
+        Both only affect *future* updates (the hazard enters each step's
+        growth/change mixture; the cap is applied per update), so the
+        adaptive screening layer can re-derive them from observed change
+        rates without rebuilding run-length state."""
+        if hazard is not None:
+            self.hazard = hazard
+        if max_hypotheses is not None:
+            self.max_hypotheses = max_hypotheses
+
     # -- detection statistics ------------------------------------------
     def p_recent_change(self, window: int = 2) -> float:
         """Posterior probability that a change-point occurred within the
@@ -407,6 +423,18 @@ class BatchedBOCD:
             self._alpha_row = self._alpha_row[alive]
             self._rl = self._rl[alive]
         return log_r
+
+    def retune(
+        self,
+        hazard: float | None = None,
+        max_hypotheses: int | None = None,
+    ) -> None:
+        """Adjust the change-point prior / shared frontier cap mid-stream
+        (future updates only — run-length state carries over unchanged)."""
+        if hazard is not None:
+            self.hazard = hazard
+        if max_hypotheses is not None:
+            self.max_hypotheses = max_hypotheses
 
     # -- detection statistics (vectorized analogues of BOCD's) ----------
     def p_recent_change(self, window: int = 2) -> np.ndarray:

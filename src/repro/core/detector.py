@@ -670,6 +670,24 @@ class FleetDetect:
     #: two — the hold gives BOCD first claim so one physical change never
     #: produces both a change-point flag and a sloppier drift flag.
     drift_hold: int = 5
+    #: long-horizon screen: the lagged comparison above still misses creeps
+    #: slower than threshold over ``drift_ref`` ticks (a 10 %/hour ramp at a
+    #: 30 s tick moves ~3 % per 40 ticks). Each stream additionally tracks a
+    #: slow EWMA baseline (span ``ewma_span`` ticks); when the trailing mean
+    #: departs from it by the verification threshold for ``ewma_hold``
+    #: consecutive ticks, the stream is escalated with the baseline as
+    #: ``mean_before``. A linear creep of slope ``r``/tick settles at a
+    #: ``r * span/2`` gap above the baseline, so the screen catches creeps
+    #: down to ``2*threshold/span`` per tick (span 2000, threshold 10 %:
+    #: 0.01 %/tick — a 10 %/hour ramp on a 5 s tick is ~0.014 %/tick). The
+    #: baseline lives outside the history ring (O(1) memory), so long spans
+    #: are free. It re-anchors (and its maturity resets) on *every*
+    #: confirmed flag, so step changes stay BOCD's: after any flag the
+    #: screen needs ``ewma_min_age`` ticks of fresh baseline before it may
+    #: fire again. 0 disables.
+    ewma_span: int = 2000
+    ewma_min_age: int = 64
+    ewma_hold: int = 8
     warmup: int = 8
     min_gap: int = 3
     recent_window: int = 2
@@ -678,6 +696,17 @@ class FleetDetect:
     #: auto-consolidate when more than this many cohorts are warmed
     #: (None = never; joins then cost one extra batch each, forever)
     max_cohorts: int | None = 4
+    #: adaptive screening knobs: every this many ticks, re-derive the
+    #: per-worker hazard (and the shared frontier cap, when one is set)
+    #: from the observed confirmed-flag rate instead of trusting the
+    #: constructor constants forever — see :meth:`_retune`. 0 keeps the
+    #: fixed constants (the default; campaign determinism depends on it).
+    adapt_every: int = 0
+    hazard_bounds: tuple[float, float] = (1.0 / 20000.0, 1.0 / 20.0)
+    cap_bounds: tuple[int, int] = (8, 256)
+    #: last re-tune's chosen values (None until the first retune); the
+    #: control plane mirrors this into its typed event log as ScreenTuning
+    last_tuning: dict | None = field(init=False, default=None)
 
     _history: MatrixRingBuffer = field(init=False)
     _cohorts: list[_Cohort] = field(init=False)
@@ -685,6 +714,10 @@ class FleetDetect:
     _last_flag: np.ndarray = field(init=False)
 
     def __post_init__(self) -> None:
+        self._hazard0 = self.hazard
+        self._flags_total = 0
+        self._worker_ticks = 0
+        self._ticks = 0
         # The ring must retain every window any screen reads: the widest
         # verification scale and the drift screen's reference lookback — a
         # smaller user-set history_cap would silently blind those paths.
@@ -700,6 +733,9 @@ class FleetDetect:
         self._scale = np.full(self.n_workers, np.nan)
         self._last_flag = np.full(self.n_workers, -(10**9), dtype=np.int64)
         self._drift_count = np.zeros(self.n_workers, dtype=np.int64)
+        self._ewma = np.full(self.n_workers, np.nan)
+        self._ewma_age = np.zeros(self.n_workers, dtype=np.int64)
+        self._ewma_count = np.zeros(self.n_workers, dtype=np.int64)
         self._cohorts = (
             [_Cohort(cols=list(range(self.n_workers)), start=0)]
             if self.n_workers
@@ -722,6 +758,9 @@ class FleetDetect:
         self._scale = np.append(self._scale, np.nan)
         self._last_flag = np.append(self._last_flag, -(10**9))
         self._drift_count = np.append(self._drift_count, 0)
+        self._ewma = np.append(self._ewma, np.nan)
+        self._ewma_age = np.append(self._ewma_age, 0)
+        self._ewma_count = np.append(self._ewma_count, 0)
         now = len(self._history)
         if (
             self._cohorts
@@ -746,6 +785,9 @@ class FleetDetect:
         self._scale = np.delete(self._scale, w)
         self._last_flag = np.delete(self._last_flag, w)
         self._drift_count = np.delete(self._drift_count, w)
+        self._ewma = np.delete(self._ewma, w)
+        self._ewma_age = np.delete(self._ewma_age, w)
+        self._ewma_count = np.delete(self._ewma_count, w)
         for cohort in list(self._cohorts):
             if w in cohort.cols:
                 if cohort.batch is not None:
@@ -806,6 +848,15 @@ class FleetDetect:
         self._history.append(times)
         n = len(self._history)
         i = n - 1
+        if self.ewma_span:
+            # Long-horizon baseline: slow EWMA per stream, seeded on the
+            # first sample, re-anchored on every confirmed flag.
+            fresh = np.isnan(self._ewma)
+            if fresh.any():
+                self._ewma[fresh] = times[fresh]
+            alpha = 2.0 / (self.ewma_span + 1.0)
+            self._ewma += alpha * (times - self._ewma)
+            self._ewma_age += 1
         out: list[FleetFlag] = []
         for cohort in self._cohorts:
             cols = np.asarray(cohort.cols, dtype=np.int64)
@@ -846,15 +897,119 @@ class FleetDetect:
                         # verification needs, and the detection burst must
                         # be allowed to retry until one sticks.
                         self._last_flag[w] = idx
+                        self._anchor(w, cp.mean_after)
                         out.append(FleetFlag(worker=w, change_point=cp))
             out += self._drift_screen(cohort, cols, n)
+        out += self._long_drift_screen(n)
         if (
             self.max_cohorts is not None
             and sum(1 for c in self._cohorts if c.batch is not None)
             > self.max_cohorts
         ):
             self.consolidate()
+        self._flags_total += len(out)
+        self._worker_ticks += self.n_workers
+        self._ticks += 1
+        if self.adapt_every and self._ticks % self.adapt_every == 0:
+            self._retune()
         return out
+
+    def _anchor(self, w: int, level: float) -> None:
+        """Re-anchor worker ``w``'s long-horizon baseline at ``level``
+        (the verified post-change mean of a confirmed flag) and restart its
+        maturity clock — the baseline always describes the level since the
+        last confirmed change, so one physical change never fires both a
+        change-point flag and a later long-drift flag."""
+        if not self.ewma_span:
+            return
+        self._ewma[w] = level
+        self._ewma_age[w] = 0
+        self._ewma_count[w] = 0
+
+    def _long_drift_screen(self, n: int) -> list[FleetFlag]:
+        """Creep candidates: trailing mean vs the long-horizon EWMA baseline
+        (see ``ewma_span``). No local-window verification is possible — a
+        slow creep has no step for the ±window rule to see — so the flag's
+        change-point carries (baseline, trailing mean) directly and the real
+        verification is the escalation path's component validation. On
+        firing, the stream's jitter scale is re-estimated from the trailing
+        window (it was frozen at warmup, and under drift the old scale
+        mis-standardizes the new level's noise) and the baseline re-anchors.
+        """
+        if not self.ewma_span:
+            return []
+        i = n - 1
+        w = self.drift_cur_window
+        lo = n - w
+        if lo < self._history.start or lo < 0:
+            return []
+        cur = self._history.rows(lo, n).mean(axis=0)
+        base = self._ewma
+        with np.errstate(invalid="ignore"):
+            ok = (
+                (self._ewma_age >= self.ewma_min_age)
+                & ~np.isnan(cur)
+                & (base > 0)
+            )
+            rel = np.abs(cur - base) / np.maximum(base, 1e-12)
+            over = ok & (rel >= self.verify_threshold)
+        self._ewma_count[over] += 1
+        self._ewma_count[~over] = 0
+        out: list[FleetFlag] = []
+        for col in np.flatnonzero(over):
+            wk = int(col)
+            if (
+                self._ewma_count[wk] < self.ewma_hold
+                or i - self._last_flag[wk] < self.min_gap
+            ):
+                continue
+            idx = i - w + 1
+            cp = ChangePoint(
+                index=idx,
+                probability=1.0,
+                mean_before=float(base[wk]),
+                mean_after=float(cur[wk]),
+            )
+            self._last_flag[wk] = idx
+            m = min(n - self._history.start, 4 * self.warmup)
+            self._scale[wk] = bocd.noise_scale(
+                self._history.column(wk, n - m, n)
+            )
+            self._anchor(wk, float(cur[wk]))
+            out.append(FleetFlag(worker=wk, change_point=cp))
+        return out
+
+    def _retune(self) -> None:
+        """Adaptive screening knobs (see ``adapt_every``): re-derive the
+        hazard from the observed confirmed-flag rate (Laplace-smoothed
+        toward the constructor prior, so zero evidence keeps it) and size
+        the shared run-length frontier to the expected segment length —
+        longer quiet segments need deeper run-length memory to stay exact,
+        shorter ones don't. Applied to every warmed batch in place; new
+        cohorts pick the values up at warmup."""
+        rate = self._flags_total / max(self._worker_ticks, 1)
+        hazard = (self._flags_total + 1.0) / (
+            self._worker_ticks + 1.0 / self._hazard0
+        )
+        hazard = float(min(max(hazard, self.hazard_bounds[0]),
+                           self.hazard_bounds[1]))
+        cap = None
+        if self.max_hypotheses is not None:
+            cap = int(min(max(round(4.0 / hazard ** 0.5), self.cap_bounds[0]),
+                          self.cap_bounds[1]))
+            self.max_hypotheses = cap
+        self.hazard = hazard
+        for cohort in self._cohorts:
+            if cohort.batch is not None:
+                cohort.batch.retune(hazard=hazard, max_hypotheses=cap)
+        self.last_tuning = {
+            "tick": self._ticks,
+            "hazard": hazard,
+            "max_hypotheses": cap,
+            "change_rate": rate,
+            "flags": self._flags_total,
+            "worker_ticks": self._worker_ticks,
+        }
 
     def _drift_screen(
         self, cohort: _Cohort, cols: np.ndarray, n: int
@@ -898,6 +1053,7 @@ class FleetDetect:
             cp = self._verify(w, idx, n, floor=cohort.start)
             if cp is not None:
                 self._last_flag[w] = idx
+                self._anchor(w, cp.mean_after)
                 out.append(FleetFlag(worker=w, change_point=cp))
         return out
 

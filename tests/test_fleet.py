@@ -452,3 +452,107 @@ def test_fleet_drift_screen_catches_ramped_onset():
     t0, rel = hits[0]
     assert 100 < t0 < 140  # confirmed during the ramp
     assert rel > 0.1
+
+
+def test_long_horizon_screen_catches_subthreshold_creep():
+    """A creep below threshold/drift_ref per 40 ticks is invisible to both
+    BOCD and the lagged drift screen; the long-horizon EWMA baseline
+    catches it (ROADMAP: e.g. a 10 %/hour ramp on a fleet-monitor tick)."""
+    rng = np.random.default_rng(0)
+    fd = FleetDetect(n_workers=4, ewma_min_age=32)
+    flags = []
+    for t in range(900):
+        x = rng.normal(1.0, 0.004, 4)
+        if t >= 100:  # worker 2: +0.05 %/tick, ~2 %/40 ticks — sub-threshold
+            x[2] *= 1.0 + 0.0005 * (t - 100)
+        flags += [(t, f.worker, f.change_point) for f in fd.tick(x)]
+    mine = [f for f in flags if f[1] == 2]
+    assert mine, "creep missed"
+    t0, _, cp = mine[0]
+    assert cp.relative_change > 0.09
+    assert not [f for f in flags if f[1] != 2], "healthy workers flagged"
+    # the confirmed drift re-estimates the stream's jitter scale
+    assert np.isfinite(fd._scale[2])
+
+
+def test_long_horizon_screen_stays_quiet_on_step_faults():
+    """Step changes are BOCD's: the baseline re-anchors on the confirmed
+    flag, so the same physical fault never double-fires through the
+    long-horizon screen."""
+    rng = np.random.default_rng(1)
+    fd = FleetDetect(n_workers=2, ewma_min_age=32)
+    flags = []
+    for t in range(400):
+        x = rng.normal(1.0, 0.004, 2)
+        if t >= 120:
+            x[1] *= 1.35
+        flags += [(t, f.worker) for f in fd.tick(x)]
+    hits = [t for t, w in flags if w == 1]
+    assert hits and hits[0] <= 125  # BOCD got it promptly
+    assert len(hits) <= 2  # no EWMA re-fire on the anchored level
+
+
+def test_adaptive_knobs_retune_from_observed_change_rate():
+    """adapt_every derives the hazard (and the shared frontier cap) from
+    the observed confirmed-flag rate; a quiet fleet drifts toward the rare
+    end, a churny one toward the frequent end, both within bounds."""
+    rng = np.random.default_rng(2)
+    quiet = FleetDetect(n_workers=8, adapt_every=50)
+    for _ in range(200):
+        quiet.tick(rng.normal(1.0, 0.004, 8))
+    assert quiet.last_tuning is not None
+    assert quiet.hazard < 1.0 / 100.0  # rarer than the prior
+    assert quiet.hazard >= quiet.hazard_bounds[0]
+    assert quiet.max_hypotheses >= 32
+    for cohort in quiet._cohorts:  # propagated into the live batches
+        assert cohort.batch.hazard == quiet.hazard
+        assert cohort.batch.max_hypotheses == quiet.max_hypotheses
+
+    churny = FleetDetect(n_workers=8, adapt_every=50, ewma_span=0)
+    level = np.ones(8)
+    for t in range(400):
+        if t % 25 == 0:  # a real level shift somewhere, every 25 ticks
+            level[int(rng.integers(8))] *= float(rng.choice([1.3, 1 / 1.3]))
+        churny.tick(level * rng.normal(1.0, 0.004, 8))
+    assert churny.last_tuning is not None
+    assert churny.hazard > quiet.hazard
+    assert churny.hazard <= churny.hazard_bounds[1]
+
+    fixed = FleetDetect(n_workers=8)  # default: constants stay put
+    for _ in range(200):
+        fixed.tick(rng.normal(1.0, 0.004, 8))
+    assert fixed.last_tuning is None and fixed.hazard == 1.0 / 100.0
+
+
+def test_screen_tuning_event_in_typed_log():
+    """The control plane mirrors adaptive re-tunes into the event log."""
+    from repro.cluster.simulator import JobSpec, TrainingSimulator
+    from repro.cluster.spec import ClusterSpec, ModelSpec
+    from repro.controlplane import ControlPlane, ScreenTuning
+
+    sim = TrainingSimulator(
+        cluster=ClusterSpec(n_nodes=1, gpus_per_node=4),
+        job=JobSpec(
+            model=ModelSpec(layers=8, hidden=1024, seq_len=512, vocab=1000),
+            tp=1, dp=4, pp=1, micro_batches=8,
+        ),
+    )
+    plane = ControlPlane(fleet_kwargs={"adapt_every": 40})
+    plane.register_job("j0", sim)
+    rng = np.random.default_rng(3)
+    t = sim.iteration_time()
+    for k in range(100):
+        plane.tick({"j0": t * float(rng.normal(1, 0.004))}, float(k))
+    tunings = [e for e in plane.events if isinstance(e, ScreenTuning)]
+    assert tunings, "no ScreenTuning emitted"
+    assert tunings[0].job_id == "" and tunings[0].hazard > 0
+    assert tunings[0].worker_ticks > 0
+    # one event per distinct retune, not one per tick
+    assert len(tunings) <= 100 // 40
+
+    # default plane: no adaptive events, log shape unchanged
+    plane2 = ControlPlane()
+    plane2.register_job("j0", sim)
+    for k in range(100):
+        plane2.tick({"j0": t * float(rng.normal(1, 0.004))}, float(k))
+    assert not [e for e in plane2.events if isinstance(e, ScreenTuning)]

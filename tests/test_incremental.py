@@ -1,0 +1,338 @@
+"""Event-scoped incremental recomputation — churn equivalence suite.
+
+The invalidation contract (docs/simulator.md): every mutation of a
+:class:`ClusterState` lands in a typed mutation log; the simulator consumes
+it through a cursor and re-reduces only the touched cells, staying
+bit-identical to the kept ``*_reference()`` loop oracles under arbitrary
+interleavings of injections, clears, ramps, group remaps, and job churn.
+Equality assertions here are exact (``==``), not approximate — the
+incremental paths replay the full pass's float operation chains.
+"""
+import numpy as np
+import pytest
+
+from repro.cluster.injector import FailSlowInjector, Injection, InjectionKind
+from repro.cluster.simulator import JobSpec, TrainingSimulator
+from repro.cluster.spec import ClusterSpec, ClusterState, ModelSpec
+
+MODEL = ModelSpec(layers=24, hidden=4096, seq_len=2048, vocab=50257)
+
+
+def make_sim(tp, dp, pp, nodes, gpn=None):
+    n = tp * dp * pp
+    return TrainingSimulator(
+        cluster=ClusterSpec(n_nodes=nodes, gpus_per_node=gpn or max(4, n // nodes)),
+        job=JobSpec(model=MODEL, tp=tp, dp=dp, pp=pp, micro_batches=2 * dp),
+    )
+
+
+def assert_matches_reference(sim, ctx):
+    assert sim.iteration_time() == sim.iteration_time_reference(), ctx
+    assert sim.profile_groups() == sim.profile_groups_reference(), ctx
+    assert (
+        sim.per_microbatch_times() == sim.per_microbatch_times_reference()
+    ), ctx
+
+
+def churn_step(sim, rng, nd, nodes):
+    """One random mutation drawn from every dirt source the log models."""
+    a = int(rng.integers(10))
+    if a == 0:
+        sim.state.devices[int(rng.integers(nd))].compute_speed = float(
+            rng.uniform(0.3, 1.0)
+        )
+    elif a == 1 and nd > 1:
+        x, y = rng.choice(nd, 2, replace=False)
+        sim.state.degrade_link(int(x), int(y), float(rng.uniform(0.05, 1.0)))
+    elif a == 2:
+        sim.state.degrade_nic(int(rng.integers(nodes)), float(rng.uniform(0.2, 1.0)))
+    elif a == 3:
+        perm = list(sim.placement)
+        i, j = rng.choice(nd, 2, replace=False)
+        perm[i], perm[j] = perm[j], perm[i]
+        sim.remap_groups(perm)
+    elif a == 4:
+        node = int(rng.integers(nodes))
+        per = sim.cluster.gpus_per_node
+        for d in range(node * per, min((node + 1) * per, nd)):
+            sim.state.devices[d].host_speed = float(rng.uniform(0.5, 1.0))
+    elif a == 5 and nd > 1:
+        x, y = rng.choice(nd, 2, replace=False)
+        sim.state.restore_link(int(x), int(y))
+    elif a == 6:
+        sim.state.restore_nic(int(rng.integers(nodes)))
+    elif a == 7:
+        sim.state.reset()
+    elif a == 8:
+        counts = [1] * sim.job.dp
+        counts[int(rng.integers(sim.job.dp))] += (
+            sim.job.micro_batches - sim.job.dp
+        )
+        sim.set_allocation(counts)
+    # a == 9: no mutation — the memoized path must also stay correct
+    return a
+
+
+@pytest.mark.parametrize(
+    "tp,dp,pp,nodes",
+    [
+        (2, 2, 4, 2), (1, 4, 2, 2), (4, 2, 1, 1), (1, 8, 1, 2),
+        (2, 4, 2, 4),
+        # pp - 1 >= 9 hops: numpy would sum a 1-D hop column pairwise while
+        # the full pass reduces axis 0 sequentially — the incremental hop
+        # update must accumulate in the full pass's order (ulp regression)
+        (1, 2, 12, 3),
+    ],
+)
+def test_churn_equivalence_randomized(tp, dp, pp, nodes):
+    sim = make_sim(tp, dp, pp, nodes)
+    nd = tp * dp * pp
+    rng = np.random.default_rng(nd * 1000 + nodes)
+    for step in range(250):
+        a = churn_step(sim, rng, nd, nodes)
+        assert_matches_reference(sim, (step, a))
+
+
+def test_incremental_cache_equals_full_rebuild_after_churn():
+    """The cached per-cell reductions equal a from-scratch rebuild bit for
+    bit after arbitrary churn — the invariant every reader relies on."""
+    sim = make_sim(2, 2, 2, 2)
+    rng = np.random.default_rng(7)
+    for step in range(150):
+        churn_step(sim, rng, 8, 2)
+        sim.iteration_time()
+        fresh = sim._cells_rebuild(sim._layout())
+        cached = sim._cells()
+        for name in (
+            "cell_speed", "tp_edge", "tp_bw", "dp_edge", "dp_bw",
+            "hop_bw", "stage", "stage_max", "hop2",
+        ):
+            a, b = getattr(fresh, name), getattr(cached, name)
+            if isinstance(a, np.ndarray):
+                assert np.array_equal(a, b), (step, name)
+            else:
+                assert a == b or (a is None and b is None), (step, name)
+
+
+def test_injector_diff_apply_matches_reset_reapply():
+    """Diff-apply composes overlapping + ramping episodes to exactly the
+    multipliers a from-scratch reset+reapply produces, at every tick."""
+    rng = np.random.default_rng(0)
+    spec = ClusterSpec(n_nodes=4, gpus_per_node=4)
+    kinds = list(InjectionKind)
+    injs = []
+    for _ in range(30):
+        k = kinds[int(rng.integers(4))]
+        if k is InjectionKind.GPU_SLOW:
+            tgt = (int(rng.integers(16)),)
+        elif k in (InjectionKind.CPU_CONTENTION, InjectionKind.NIC_CONGESTION):
+            tgt = (int(rng.integers(4)),)
+        else:
+            a, b = rng.choice(16, 2, replace=False)
+            tgt = (int(a), int(b))
+        injs.append(Injection(
+            start=float(rng.uniform(0, 80)),
+            duration=float(rng.uniform(5, 40)),
+            kind=k, target=tgt,
+            severity=float(rng.uniform(0.1, 0.8)),
+            ramp=float(rng.choice([0.0, 10.0])),
+        ))
+    inc = FailSlowInjector(list(injs))
+    st = ClusterState(spec)
+    for t in np.linspace(0.0, 130.0, 131):
+        inc.apply(st, float(t))
+        ref_state = ClusterState(spec)
+        FailSlowInjector(list(injs)).apply(ref_state, float(t))
+        assert np.array_equal(st._compute, ref_state._compute), t
+        assert np.array_equal(st._host, ref_state._host), t
+        assert dict(st.link_mult) == dict(ref_state.link_mult), t
+        assert dict(st.nic_mult) == dict(ref_state.nic_mult), t
+
+
+def test_injector_diff_apply_falls_back_on_external_mutation():
+    """Any mutation outside the injector voids the diff basis: the next
+    apply resets (wiping the external write), exactly as before."""
+    st = ClusterState(ClusterSpec(n_nodes=1, gpus_per_node=4))
+    inj = FailSlowInjector([Injection(
+        start=0.0, duration=100.0, kind=InjectionKind.GPU_SLOW,
+        target=(0,), severity=0.5,
+    )])
+    inj.apply(st, 1.0)
+    st.devices[2].compute_speed = 0.25  # external
+    inj.apply(st, 2.0)
+    assert st.devices[2].compute_speed == 1.0  # reset path wiped it
+    assert st.devices[0].compute_speed == 0.5
+
+
+def test_injector_epoch_tracks_schedule_changes():
+    inj = FailSlowInjector()
+    e0 = inj.epoch
+    inj.add(Injection(start=0.0, duration=1.0, kind=InjectionKind.GPU_SLOW,
+                      target=(0,), severity=0.5))
+    assert inj.epoch > e0
+    e1 = inj.epoch
+    inj.injections = []  # the S4 clearing path reassigns wholesale
+    assert inj.epoch > e1
+    e2 = inj.epoch
+    inj.extend([])
+    assert inj.epoch > e2
+
+
+def test_dirty_cursor_typed_sets():
+    st = ClusterState(ClusterSpec(n_nodes=2, gpus_per_node=4))
+    c0 = st.cursor()
+    st.devices[3].compute_speed = 0.5
+    st.degrade_link(0, 5, 0.4)
+    st.degrade_nic(1, 0.7)
+    ds = st.dirty_since(c0)
+    assert ds.devices == {3}
+    assert ds.links == {(0, 5)}
+    assert ds.nics == {1}
+    assert ds and not ds.full
+    # a fresh cursor sees nothing; reset dirties only what was degraded
+    c1 = st.cursor()
+    assert not st.dirty_since(c1)
+    st.reset()
+    ds2 = st.dirty_since(c1)
+    assert (ds2.devices, ds2.links, ds2.nics) == ({3}, {(0, 5)}, {1})
+    # a pre-creation / overflowed cursor degrades to full-dirty
+    assert st.dirty_since(-1).full
+    st._bump()  # legacy whole-state invalidation stays conservative
+    assert st.dirty_since(c1).full
+
+
+def test_dirty_cursor_isolation_across_jobs_sharing_hardware():
+    """Two jobs reading one hardware map each hold their own cursor: a
+    fault on job A's devices leaves job B's cached reductions untouched
+    (same object, no re-reduction), while both stay reference-exact."""
+    cluster = ClusterSpec(n_nodes=4, gpus_per_node=4)
+    sim_a = TrainingSimulator(
+        cluster=cluster,
+        job=JobSpec(model=MODEL, tp=2, dp=2, pp=2, micro_batches=4),
+        placement=list(range(8)),
+    )
+    sim_b = TrainingSimulator(
+        cluster=cluster,
+        job=JobSpec(model=MODEL, tp=2, dp=2, pp=2, micro_batches=4),
+        placement=list(range(8, 16)),
+    )
+    shared = ClusterState(cluster)
+    sim_a.state = shared
+    sim_b.state = shared
+    assert sim_a.state_cursor() == sim_b.state_cursor()
+    # a cursor from a *previous* state object must read as fully dirty
+    assert sim_a.dirty_since((shared.uid - 1, 0)).full
+    t_b0 = sim_b.iteration_time()
+    sim_a.iteration_time()
+    cells_b = sim_b._cells()
+    # fault squarely inside job A's slice
+    shared.devices[2].compute_speed = 0.4
+    shared.degrade_link(0, 5, 0.3)
+    assert sim_a.iteration_time() == sim_a.iteration_time_reference()
+    assert sim_a.iteration_time() > sim_a.healthy_iteration_time()
+    # B consumed the dirt but mapped it to zero cells: same cache object,
+    # bit-identical content, unchanged result
+    assert sim_b._cells() is cells_b
+    assert sim_b.iteration_time() == t_b0
+    assert sim_b.iteration_time() == sim_b.iteration_time_reference()
+    # and a fault on B's slice does not disturb A's view
+    t_a = sim_a.iteration_time()
+    shared.devices[9].compute_speed = 0.5
+    assert sim_b.iteration_time() == sim_b.iteration_time_reference()
+    assert sim_b.iteration_time() != t_b0
+    assert sim_a.iteration_time() == t_a
+    assert sim_a.iteration_time() == sim_a.iteration_time_reference()
+
+
+def test_shared_hardware_job_churn():
+    """Jobs join and leave a shared hardware map mid-churn; every live
+    job's incremental result stays bit-identical to its loop oracle."""
+    cluster = ClusterSpec(n_nodes=4, gpus_per_node=4)
+    shared = ClusterState(cluster)
+    rng = np.random.default_rng(21)
+    slices = [list(range(0, 8)), list(range(8, 16)), list(range(4, 12))]
+    live: dict[int, TrainingSimulator] = {}
+    for step in range(120):
+        a = int(rng.integers(8))
+        if a == 0 and len(live) < 2:
+            free = [i for i in range(3) if i not in live
+                    and not any(set(slices[i]) & set(slices[j]) for j in live)]
+            if free:
+                i = free[0]
+                sim = TrainingSimulator(
+                    cluster=cluster,
+                    job=JobSpec(model=MODEL, tp=2, dp=2, pp=2, micro_batches=4),
+                    placement=list(slices[i]),
+                )
+                sim.state = shared
+                live[i] = sim
+        elif a == 1 and live:
+            del live[sorted(live)[0]]
+        elif a == 2:
+            shared.devices[int(rng.integers(16))].compute_speed = float(
+                rng.uniform(0.3, 1.0)
+            )
+        elif a == 3:
+            x, y = rng.choice(16, 2, replace=False)
+            shared.degrade_link(int(x), int(y), float(rng.uniform(0.1, 1.0)))
+        elif a == 4:
+            shared.degrade_nic(int(rng.integers(4)), float(rng.uniform(0.3, 1.0)))
+        elif a == 5:
+            shared.reset()
+        elif a == 6 and live:
+            sim = live[sorted(live)[0]]
+            perm = list(sim.placement)
+            i, j = rng.choice(len(perm), 2, replace=False)
+            perm[i], perm[j] = perm[j], perm[i]
+            sim.remap_groups(perm)
+        for key, sim in live.items():
+            assert sim.iteration_time() == sim.iteration_time_reference(), (
+                step, key,
+            )
+
+
+def test_mutation_log_overflow_degrades_to_full_rebuild():
+    from repro.cluster import spec as spec_mod
+
+    sim = make_sim(2, 2, 2, 2)
+    sim.iteration_time()
+    rng = np.random.default_rng(3)
+    for i in range(spec_mod._LOG_CAP + 50):
+        sim.state.devices[int(rng.integers(8))].compute_speed = float(
+            rng.uniform(0.3, 1.0)
+        )
+    assert sim.state.dirty_since(0).full  # cursor fell off the log tail
+    assert sim.iteration_time() == sim.iteration_time_reference()
+
+
+def test_link_no_ring_traverses_is_free():
+    """A degraded link that no communication ring uses changes nothing —
+    and the incremental path knows it without re-reducing anything."""
+    sim = make_sim(2, 2, 2, 2)
+    t0 = sim.iteration_time()
+    cells = sim._cells()
+    # devices 0 and 7 share no ring adjacency in the canonical layout
+    grid = sim._layout().grid
+    a, b = int(grid[0, 0, 0]), int(grid[1, 1, 1])
+    sim.state.degrade_link(a, b, 0.01)
+    assert sim.iteration_time() == t0
+    assert sim.iteration_time() == sim.iteration_time_reference()
+    assert sim._cells() is cells
+
+
+def test_event_scoped_beats_rebuild_op_count():
+    """A single-device event must not trigger the O(devices) rebuild: the
+    state's vectorized gathers are untouched on the incremental path."""
+    sim = make_sim(2, 4, 2, 4)
+    sim.iteration_time()
+    calls = {"n": 0}
+    orig = sim.state.effective_speeds
+
+    def counting():
+        calls["n"] += 1
+        return orig()
+
+    sim.state.effective_speeds = counting
+    sim.state.devices[0].compute_speed = 0.5
+    assert sim.iteration_time() == sim.iteration_time_reference()
+    assert calls["n"] == 0  # full rebuild would have called it
