@@ -22,6 +22,17 @@ class InjectionKind(enum.Enum):
     CPU_CONTENTION = "cpu_contention"  # whole node slowed
     LINK_CONGESTION = "link_congestion"  # one physical link degraded
     NIC_CONGESTION = "nic_congestion"  # a node's NIC port congested
+    GPU_HANG = "gpu_hang"  # a device stops making progress (hardware)
+    COLLECTIVE_HANG = "collective_hang"  # a collective stuck on a link
+
+
+#: hang kinds keep the math finite: instead of an infinite multiplier, a
+#: hung component runs at this fraction of its healthy speed (~10⁶× slow),
+#: far past any throttle — the simulator's stall test keys off the ratio.
+HANG_EPS = 1e-6
+
+#: the hang fault family (near-infinite slowdown; severity is metadata)
+HANG_KINDS = frozenset({InjectionKind.GPU_HANG, InjectionKind.COLLECTIVE_HANG})
 
 
 @dataclass(frozen=True)
@@ -34,6 +45,12 @@ class Injection:
     builds the severity up linearly over that many seconds from onset —
     network congestion typically has a gradual onset (§3), the failure mode
     fixed-offset window detectors miss.
+
+    Hang kinds (``GPU_HANG`` / ``COLLECTIVE_HANG``) ignore ``severity`` and
+    ``ramp``: the affected component drops to :data:`HANG_EPS` of its speed
+    for the whole episode (a hang has no partial tier and no gradual onset).
+    ``scope`` optionally names the collective a ``COLLECTIVE_HANG`` is stuck
+    in ("dp" / "tp" / "pp"); it is diagnostic metadata only.
     """
 
     start: float  # wall-clock seconds
@@ -42,6 +59,7 @@ class Injection:
     target: tuple[int, ...]  # (device,) / (node,) / (devA, devB)
     severity: float
     ramp: float = 0.0  # seconds from onset to full severity (0 = step)
+    scope: str = ""  # optional collective scope for hangs ("dp"/"tp"/"pp")
 
     @property
     def end(self) -> float:
@@ -116,8 +134,8 @@ class FailSlowInjector:
         vals: dict = {}
         per = state.spec.gpus_per_node
         for inj, severity in zip(act, severities):
-            mult = 1.0 - severity
-            if inj.kind is InjectionKind.GPU_SLOW:
+            mult = HANG_EPS if inj.kind in HANG_KINDS else 1.0 - severity
+            if inj.kind in (InjectionKind.GPU_SLOW, InjectionKind.GPU_HANG):
                 (dev,) = inj.target
                 k = ("c", dev)
                 vals[k] = vals.get(k, 1.0) * mult

@@ -832,6 +832,71 @@ class TrainingSimulator:
         base, extra = divmod(self.job.micro_batches, self.job.dp)
         self.allocation = [base + (1 if i < extra else 0) for i in range(self.job.dp)]
 
+    # -------------------------------------------- hang / stall semantics
+    #: a job is *stalled* (hung, not merely degraded) when its iteration
+    #: runs this many times slower than healthy — far past any composition
+    #: of severity-tier throttles, but far below the ~10⁶× a HANG_EPS
+    #: injection produces, so throttles never trip it and hangs always do
+    stall_factor = 500.0
+
+    def stalled(self) -> bool:
+        """True when the job makes effectively no progress (a hang).
+
+        A stalled job emits no iteration samples: the monitor's current
+        iteration never completes, which is exactly the stream-goes-silent
+        shape the control plane's watchdog exists to catch.
+        """
+        return (
+            self.iteration_time()
+            >= self.stall_factor * self.healthy_iteration_time()
+        )
+
+    # ------------------------------------------------ snapshot / restore
+    def snapshot(self) -> dict:
+        """Capture placement, micro-batch allocation, and hardware state.
+
+        The fault-tolerant executor snapshots before every mitigation
+        attempt and calls :meth:`restore` when the attempt fails mid-flight,
+        guaranteeing the simulator is bit-identical to its pre-action state.
+        """
+        st = self.state
+        return {
+            "placement": list(self.placement),
+            "allocation": list(self.allocation),
+            "compute": st._compute.copy(),
+            "host": st._host.copy(),
+            "link_mult": dict(st.link_mult),
+            "nic_mult": dict(st.nic_mult),
+        }
+
+    def restore(self, snap: dict) -> None:
+        """Roll back to a :meth:`snapshot`, through the logged surfaces.
+
+        Every write goes through the same mutation-logged setters the
+        injector uses (and diffs against the current value first), so the
+        dirty-set/memoization contracts hold and an already-identical
+        component contributes no spurious dirt.
+        """
+        if list(self.placement) != snap["placement"]:
+            self.placement = list(snap["placement"])
+        if list(self.allocation) != snap["allocation"]:
+            self.allocation = list(snap["allocation"])
+        st = self.state
+        comp, host = snap["compute"], snap["host"]
+        for i in np.flatnonzero(st._compute != comp):
+            st.devices[int(i)].compute_speed = float(comp[i])
+        for i in np.flatnonzero(st._host != host):
+            st.devices[int(i)].host_speed = float(host[i])
+        for vdict, saved in (
+            (st.link_mult, snap["link_mult"]),
+            (st.nic_mult, snap["nic_mult"]),
+        ):
+            for k in list(vdict):
+                if k not in saved:
+                    del vdict[k]
+            for k, v in saved.items():
+                vdict[k] = v  # no-ops (and stays clean) when already equal
+
     # ---------------------------------------------- monitor event stream
     ITER_PATTERN = (CommOp.REDUCE_SCATTER, CommOp.ALL_GATHER, CommOp.ALL_REDUCE)
 

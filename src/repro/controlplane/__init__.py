@@ -19,9 +19,15 @@ from repro.controlplane.events import (  # noqa: F401
     MitigationResult,
     Observation,
     ScreenTuning,
+    WatchdogAlarm,
 )
-from repro.controlplane.plane import ControlPlane, JobHandle  # noqa: F401
+from repro.controlplane.plane import (  # noqa: F401
+    ControlPlane,
+    ExecutorPolicy,
+    JobHandle,
+)
 from repro.controlplane.strategies import (  # noqa: F401
+    AbortReformStrategy,
     CkptRestartStrategy,
     IgnoreStrategy,
     MicroBatchStrategy,

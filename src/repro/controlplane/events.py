@@ -107,16 +107,42 @@ class MitigationAction(ControlEvent):
 
 
 @dataclass(frozen=True)
+class WatchdogAlarm(ControlEvent):
+    """A job's sample stream went silent past its calibrated deadline.
+
+    Emitted by :meth:`ControlPlane.tick` when the heartbeat watchdog
+    expires for a registered job that produced no observation — the hang
+    signature BOCD structurally cannot flag. ``last_seen`` is the job clock
+    of the final heartbeat, ``deadline_s`` the jitter-calibrated silence
+    budget that was exceeded, ``silence_s`` the actual silence at alarm
+    time.
+    """
+
+    last_seen: float = 0.0
+    deadline_s: float = 0.0
+    silence_s: float = 0.0
+
+
+@dataclass(frozen=True)
 class MitigationResult(ControlEvent):
-    """Outcome of one strategy dispatch (or a relief rebalance).
+    """Outcome of one strategy dispatch attempt (or a relief rebalance).
 
     ``overhead`` is the one-off action cost the caller must charge to the
     job's wall clock; ``detail`` carries strategy-specific payload (e.g. the
     new micro-batch allocation) for the caller's runtime to mirror.
+
+    Failure semantics (docs/control_plane.md): ``status`` is ``"ok"`` for a
+    successful dispatch, ``"failed"`` / ``"timed_out"`` for one rolled-back
+    attempt (the executor emits one result per attempt, ``attempt`` counting
+    from 1), and ``"rolled_back"`` for the terminal result of a dispatch
+    whose retries were exhausted — the job state is guaranteed back at the
+    pre-action snapshot whenever ``detail["rolled_back"]`` is true.
     """
 
     strategy: StrategyKey | None
     applied: bool
     overhead: float = 0.0
-    kind: str = "mitigate"  # "mitigate" | "relief"
+    kind: str = "mitigate"  # "mitigate" | "relief" | "error"
     detail: dict = field(default_factory=dict)
+    status: str = "ok"  # "ok" | "failed" | "timed_out" | "rolled_back"
+    attempt: int = 1

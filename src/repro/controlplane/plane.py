@@ -31,9 +31,9 @@ from dataclasses import dataclass, field
 
 import numpy as np
 
-from repro.core.detector import FalconDetect, FleetDetect
+from repro.core.detector import FalconDetect, FleetDetect, Watchdog
 from repro.core.duration import DurationModel
-from repro.core.events import FailSlowEvent, Strategy
+from repro.core.events import ChangePoint, FailSlowEvent, Strategy, StrategyKey
 from repro.core.planner import MitigationPlanner
 from repro.controlplane.events import (
     ControlEvent,
@@ -44,12 +44,33 @@ from repro.controlplane.events import (
     MitigationResult,
     Observation,
     ScreenTuning,
+    WatchdogAlarm,
 )
 from repro.controlplane.strategies import (
     MitigationContext,
     StrategyRegistry,
     default_registry,
 )
+
+
+@dataclass(frozen=True)
+class ExecutorPolicy:
+    """Knobs of the fault-tolerant mitigation executor (docs/control_plane.md).
+
+    Every strategy dispatch runs under this policy: up to ``max_attempts``
+    tries, each against a fresh pre-action snapshot; a failed attempt is
+    rolled back and retried after an exponential backoff
+    (``backoff_base_s * 2**(attempt-1)``, charged to the job's clock); a
+    timed-out attempt additionally charges ``timeout_s``. After
+    ``quarantine_after`` consecutive failed attempts with no intervening
+    success, the strategy is quarantined for this (job, root cause) and
+    future ladders escalate past it.
+    """
+
+    max_attempts: int = 3
+    backoff_base_s: float = 2.0
+    timeout_s: float = 30.0
+    quarantine_after: int = 3
 
 
 @dataclass
@@ -92,6 +113,16 @@ class JobHandle:
     #: global hardware id -> local rank (built once; hardware is immutable)
     _hw_inverse: dict[str, int] | None = field(default=None, repr=False)
     _host_inverse: dict[str, int] | None = field(default=None, repr=False)
+    #: last delivered iteration-time sample and its job clock (the
+    #: watchdog's flat-imputation source while the stream is silent)
+    _last_sample: float = field(default=0.0, repr=False)
+    _last_seen: float | None = field(default=None, repr=False)
+    #: a watchdog alarm fired and has not yet been cleared by a heartbeat
+    _alarmed: bool = field(default=False, repr=False)
+    #: (root_cause, strategy) pairs the executor quarantined for this job
+    _quarantined: set = field(default_factory=set, repr=False)
+    #: (root_cause, strategy) -> consecutive failed dispatch attempts
+    _fail_streaks: dict = field(default_factory=dict, repr=False)
 
     def __post_init__(self) -> None:
         if self.hardware is not None:
@@ -111,10 +142,21 @@ class ControlPlane:
         fleet_kwargs: dict | None = None,
         max_events: int = 65536,
         duration_model: DurationModel | None = None,
+        executor_policy: ExecutorPolicy | None = None,
+        executor_faults: Callable | None = None,
+        watchdog: Watchdog | None = None,
     ) -> None:
         self._jobs: dict[str, JobHandle] = {}
         self._fleet: FleetDetect | None = None
         self._fleet_kwargs = dict(fleet_kwargs or {})
+        #: fault-tolerant executor knobs (retry/backoff/quarantine)
+        self.executor_policy = executor_policy or ExecutorPolicy()
+        #: injectable executor fault model: (job_id, strategy, attempt, now)
+        #: -> None | "fail" | "timeout" — lets campaigns make mitigations
+        #: themselves flaky (scenario engine's ExecutorFaultModel)
+        self.executor_faults = executor_faults
+        #: heartbeat watchdog over every registered job's sample stream
+        self.watchdog = watchdog or Watchdog()
         #: last ScreenTuning payload mirrored into the event log
         self._last_tuning: dict | None = None
         #: fleet-shared fault-duration survival curves: every job's
@@ -190,6 +232,7 @@ class ControlPlane:
             raise KeyError(f"job {job_id!r} not registered")
         job = self._jobs.pop(job_id)
         self._active_diag.pop(job_id, None)
+        self.watchdog.forget(job_id)
         col = job._fleet_col
         if self._fleet is not None and col is not None:
             self._fleet.remove_worker(col)
@@ -223,6 +266,10 @@ class ControlPlane:
         ]
         job.steps += 1
         self._watched_s += max(iter_time, 0.0)
+        self.watchdog.beat(job_id, now)
+        job._last_sample = iter_time
+        job._last_seen = now
+        job._alarmed = False
         had_active = job.detector.active_event is not None
         new_event = job.detector.observe(iter_time, now)
         out += self._after_detection(job, new_event, had_active, iter_time, now)
@@ -237,7 +284,15 @@ class ControlPlane:
         """Advance every registered job one tick through the fleet screen.
 
         ``times`` is one iteration time per job — a mapping keyed by job id,
-        or a sequence in registration order.
+        or a sequence in registration order. A mapping may *omit* jobs: a
+        stalled job's current iteration never completes, so its monitor has
+        nothing to report. Silent jobs get no Observation; their fleet-
+        screen column is imputed flat (the last delivered sample — exactly
+        the shape BOCD cannot flag) and the heartbeat watchdog takes over:
+        once the silence exceeds the stream's jitter-calibrated deadline a
+        :class:`WatchdogAlarm` fires and a synthesized change-point runs
+        the normal pinpoint path, yielding a hang-flagged Diagnosis and a
+        hang mitigation ladder.
         """
         jobs = list(self._jobs.values())
         if self._fleet is None:
@@ -246,62 +301,100 @@ class ControlPlane:
                 job._fleet_col = col
         by_col = {j._fleet_col: j for j in jobs}
         if isinstance(times, Mapping):
-            per_job = {j.job_id: float(times[j.job_id]) for j in jobs}
+            per_job = {
+                j.job_id: float(times[j.job_id])
+                for j in jobs if j.job_id in times
+            }
         else:
             seq = np.asarray(times, dtype=np.float64)
             if seq.shape != (len(jobs),):
                 raise ValueError(f"expected {len(jobs)} times, got {seq.shape}")
             per_job = {j.job_id: float(seq[i]) for i, j in enumerate(jobs)}
+        for job in jobs:
+            if job.job_id in per_job:
+                self.watchdog.beat(job.job_id, now)
         vec = np.empty(len(jobs), dtype=np.float64)
         for job in jobs:
-            vec[job._fleet_col] = per_job[job.job_id]
+            if job.job_id in per_job:
+                vec[job._fleet_col] = per_job[job.job_id]
+            else:
+                # Flat continuation of the last delivered sample keeps the
+                # lockstep screen's shape; it carries no change for BOCD to
+                # see, which is the point — silence is the watchdog's job.
+                vec[job._fleet_col] = (
+                    job._last_sample if job._last_sample > 0 else 1.0
+                )
         flags = {f.worker: f for f in self._fleet.tick(vec)}
 
         out: list[ControlEvent] = []
         for w in sorted(by_col):
             job = by_col[w]
-            iter_time = float(vec[w])
-            out.append(
-                Observation(
-                    job_id=job.job_id, time=now, iter_time=iter_time,
-                    step=job.steps,
-                )
-            )
-            job.steps += 1
-            self._watched_s += (
-                job.sample_period
-                if job.sample_period is not None
-                else max(iter_time, 0.0)
-            )
-            had_active = job.detector.active_event is not None
-            new_event: FailSlowEvent | None = None
-            deduped_from: str | None = None
-            flag = flags.get(w)
-            if flag is not None:
-                cp = flag.change_point
-                out.append(Flag(job_id=job.job_id, time=now, change_point=cp))
-                source = None
-                if cp.relative_change > 0 and job.detector.active_event is None:
-                    source = self._dedupe_source(job)
-                if source is not None:
-                    event = self._adopt(job, source, cp, now)
-                    if event is not None:
-                        new_event, deduped_from = event, source.job_id
-                if new_event is None and deduped_from is None:
-                    new_event = job.detector.ingest_changepoint(cp, now)
-            elif job.detector.active_event is not None:
-                # No flag while an event is active: mitigation may have
-                # flattened the signal — periodic O(1) re-validation is the
-                # only way to see the fault's relief (or a compound pile-on).
-                job._ticks_active += 1
-                if job._ticks_active % job.detector.revalidate_every == 0:
-                    new_event = job.detector.revalidate(
-                        now, iter_time=iter_time, index=job.steps - 1
+            try:
+                if job.job_id not in per_job:
+                    out += self._silent_job(job, now)
+                    continue
+                iter_time = float(vec[w])
+                out.append(
+                    Observation(
+                        job_id=job.job_id, time=now, iter_time=iter_time,
+                        step=job.steps,
                     )
-            out += self._after_detection(
-                job, new_event, had_active, iter_time, now,
-                deduped_from=deduped_from,
-            )
+                )
+                job.steps += 1
+                job._last_sample = iter_time
+                job._last_seen = now
+                job._alarmed = False
+                self._watched_s += (
+                    job.sample_period
+                    if job.sample_period is not None
+                    else max(iter_time, 0.0)
+                )
+                had_active = job.detector.active_event is not None
+                new_event: FailSlowEvent | None = None
+                deduped_from: str | None = None
+                flag = flags.get(w)
+                if flag is not None:
+                    cp = flag.change_point
+                    out.append(
+                        Flag(job_id=job.job_id, time=now, change_point=cp)
+                    )
+                    source = None
+                    if (
+                        cp.relative_change > 0
+                        and job.detector.active_event is None
+                    ):
+                        source = self._dedupe_source(job)
+                    if source is not None:
+                        event = self._adopt(job, source, cp, now)
+                        if event is not None:
+                            new_event, deduped_from = event, source.job_id
+                    if new_event is None and deduped_from is None:
+                        new_event = job.detector.ingest_changepoint(cp, now)
+                elif job.detector.active_event is not None:
+                    # No flag while an event is active: mitigation may have
+                    # flattened the signal — periodic O(1) re-validation is
+                    # the only way to see the fault's relief (or a compound
+                    # pile-on).
+                    job._ticks_active += 1
+                    if job._ticks_active % job.detector.revalidate_every == 0:
+                        new_event = job.detector.revalidate(
+                            now, iter_time=iter_time, index=job.steps - 1
+                        )
+                out += self._after_detection(
+                    job, new_event, had_active, iter_time, now,
+                    deduped_from=deduped_from,
+                )
+            except Exception as exc:  # noqa: BLE001 — graceful degradation
+                # One bad job (adapter raising mid-pinpoint, a broken
+                # detector) must not stall the fleet: surface the failure
+                # as a typed event and keep ticking the other jobs.
+                out.append(
+                    MitigationResult(
+                        job_id=job.job_id, time=now, strategy=None,
+                        applied=False, kind="error", status="failed",
+                        detail={"error": f"{type(exc).__name__}: {exc}"},
+                    )
+                )
         tuning = getattr(self._fleet, "last_tuning", None)
         if tuning is not None and tuning is not self._last_tuning:
             # The adaptive screen chose new knobs at the END of this tick
@@ -318,6 +411,58 @@ class ControlPlane:
                 worker_ticks=tuning["worker_ticks"],
             ))
         self.events += out
+        return out
+
+    # -- hang watchdog path --------------------------------------------
+    def _silent_job(self, job: JobHandle, now: float) -> list[ControlEvent]:
+        """One tick of a registered job whose stream produced no sample.
+
+        While the watchdog deadline has not yet expired, only the planner
+        is advanced (an already-diagnosed event keeps accumulating impact
+        at the stalled rate). On expiry, a :class:`WatchdogAlarm` fires
+        once and a synthesized change-point — last delivered sample as the
+        before-mean, the adapter's current (stalled) iteration time as the
+        after-mean — is routed through the job's own detector, so the hang
+        gets the same profiling + validation pinpoint a slowdown would,
+        and the resulting event is flagged ``hang`` for the abort ladder.
+        """
+        out: list[ControlEvent] = []
+        if job.sample_period is not None:
+            self._watched_s += job.sample_period
+        # The stalled iteration time: what the job's clock is stuck paying.
+        stalled_t = job._last_sample if job._last_sample > 0 else 1.0
+        it = getattr(job.adapter, "iteration_time", None)
+        if callable(it):
+            try:
+                stalled_t = max(float(it()), stalled_t)
+            except Exception:  # noqa: BLE001 — adapter may itself be wedged
+                pass
+        had_active = job.detector.active_event is not None
+        new_event: FailSlowEvent | None = None
+        active = job.detector.active_event
+        already_hang = active is not None and getattr(active, "hang", False)
+        if (
+            not already_hang
+            and not job._alarmed
+            and self.watchdog.expired(job.job_id, now)
+        ):
+            job._alarmed = True
+            deadline = self.watchdog.deadline(job.job_id) or 0.0
+            out.append(WatchdogAlarm(
+                job_id=job.job_id, time=now,
+                last_seen=job._last_seen if job._last_seen is not None else 0.0,
+                deadline_s=deadline,
+                silence_s=self.watchdog.silence(job.job_id, now),
+            ))
+            base = job._last_sample if job._last_sample > 0 else 1.0
+            cp = ChangePoint(
+                index=max(job.steps - 1, 0), probability=1.0,
+                mean_before=base, mean_after=max(stalled_t, 2.0 * base),
+            )
+            new_event = job.detector.ingest_changepoint(cp, now)
+            if new_event is not None:
+                new_event.hang = True
+        out += self._after_detection(job, new_event, had_active, stalled_t, now)
         return out
 
     # -- shared post-detection pipeline --------------------------------
@@ -357,15 +502,23 @@ class ControlPlane:
             )
             out.append(diag)
             self._active_diag[job.job_id] = diag
+            exclude: set[StrategyKey] = set()
+            if job._s4_burned:
+                exclude.add(Strategy.CKPT_AND_RESTART)
+            # Quarantined rungs (executor failures) are withheld for events
+            # of the cause they kept failing on, so the ladder escalates
+            # past them instead of retrying into the same wall.
+            exclude |= {
+                s for (c, s) in job._quarantined
+                if c is new_event.root_cause
+            }
             job.planner = job.registry.make_planner(
                 new_event,
                 job.overheads,
                 estimator=self.duration_model,
                 work_remaining=job.work_remaining,
                 incident_gap=self.incident_gap,
-                exclude=(
-                    (Strategy.CKPT_AND_RESTART,) if job._s4_burned else None
-                ),
+                exclude=exclude or None,
             )
         active = job.detector.active_event
         if active is None:
@@ -390,25 +543,126 @@ class ControlPlane:
                         event=active,
                     )
                 )
-                outcome = job.registry.dispatch(
-                    strategy,
-                    MitigationContext(
-                        adapter=job.adapter, event=active, now=now,
-                        job_id=job.job_id, injector=job.injector,
-                    ),
+                out += self._execute(job, strategy, active, now)
+        return out
+
+    # -- fault-tolerant executor ---------------------------------------
+    def _snapshot(self, job: JobHandle) -> dict:
+        """Pre-action state: adapter snapshot (when it offers one) plus the
+        injector's schedule (strategies mutate it — S4/abort clear
+        episodes, and a failed attempt must put them back)."""
+        snap: dict = {}
+        if hasattr(job.adapter, "snapshot"):
+            snap["adapter"] = job.adapter.snapshot()
+        if job.injector is not None and hasattr(job.injector, "injections"):
+            snap["injections"] = list(job.injector.injections)
+        return snap
+
+    def _rollback(self, job: JobHandle, snap: dict) -> bool:
+        """Restore a :meth:`_snapshot`. True when state was restorable."""
+        rolled = False
+        if "adapter" in snap and hasattr(job.adapter, "restore"):
+            job.adapter.restore(snap["adapter"])
+            rolled = True
+        if "injections" in snap:
+            if list(job.injector.injections) != snap["injections"]:
+                # Wholesale reassignment bumps the injector epoch, so
+                # schedule cursors re-apply against the restored state.
+                job.injector.injections = snap["injections"]
+            rolled = True
+        return rolled
+
+    def _execute(
+        self, job: JobHandle, strategy: StrategyKey, event, now: float
+    ) -> list[ControlEvent]:
+        """Fault-tolerant strategy dispatch: snapshot → apply → on failure
+        roll back, back off, retry; emit one typed :class:`MitigationResult`
+        per attempt (status ``ok`` / ``failed`` / ``timed_out``) plus a
+        terminal ``rolled_back`` result when retries are exhausted. See
+        :class:`ExecutorPolicy` and docs/control_plane.md.
+        """
+        pol = self.executor_policy
+        max_attempts = max(pol.max_attempts, 1)
+        overhead = (
+            job.planner.overheads.get(strategy, 0.0)
+            if job.planner is not None
+            else job.effective_overheads().get(strategy, 0.0)
+        )
+        ctx = MitigationContext(
+            adapter=job.adapter, event=event, now=now,
+            job_id=job.job_id, injector=job.injector,
+        )
+        cause = getattr(event, "root_cause", None)
+        streak_key = (cause, strategy)
+        out: list[ControlEvent] = []
+        rolled = False
+        quarantined = False
+        for attempt in range(1, max_attempts + 1):
+            snap = self._snapshot(job)
+            failure: tuple[str, dict] | None = None
+            outcome = None
+            try:
+                outcome = job.registry.dispatch(strategy, ctx)
+            except Exception as exc:  # noqa: BLE001 — typed failure capture
+                failure = ("failed", {"error": f"{type(exc).__name__}: {exc}"})
+            if failure is None and self.executor_faults is not None:
+                verdict = self.executor_faults(
+                    job.job_id, strategy, attempt, now
                 )
+                if verdict in ("fail", "timeout"):
+                    failure = (
+                        "failed" if verdict == "fail" else "timed_out",
+                        {"injected": verdict},
+                    )
+            if failure is None:
+                job._fail_streaks.pop(streak_key, None)
                 if strategy is Strategy.CKPT_AND_RESTART and outcome.applied:
                     job._last_restart = now
                 out.append(
                     MitigationResult(
-                        job_id=job.job_id,
-                        time=now,
-                        strategy=strategy,
-                        applied=outcome.applied,
-                        overhead=job.planner.overheads.get(strategy, 0.0),
-                        detail=outcome.detail,
+                        job_id=job.job_id, time=now, strategy=strategy,
+                        applied=outcome.applied, overhead=overhead,
+                        detail=outcome.detail, attempt=attempt,
                     )
                 )
+                return out
+            status, detail = failure
+            rolled = self._rollback(job, snap)
+            streak = job._fail_streaks.get(streak_key, 0) + 1
+            job._fail_streaks[streak_key] = streak
+            if streak >= pol.quarantine_after and not quarantined:
+                quarantined = True
+                job._quarantined.add(streak_key)
+            will_retry = attempt < max_attempts and not quarantined
+            charge = pol.timeout_s if status == "timed_out" else 0.0
+            if will_retry:
+                charge += pol.backoff_base_s * (2.0 ** (attempt - 1))
+            detail = dict(detail)
+            detail["rolled_back"] = rolled
+            if quarantined:
+                detail["quarantined"] = True
+            out.append(
+                MitigationResult(
+                    job_id=job.job_id, time=now, strategy=strategy,
+                    applied=False, overhead=charge, detail=detail,
+                    status=status, attempt=attempt,
+                )
+            )
+            if not will_retry:
+                break
+        # Retries exhausted (or quarantine cut them short): the terminal
+        # record — job state is back at the pre-action snapshot.
+        out.append(
+            MitigationResult(
+                job_id=job.job_id, time=now, strategy=strategy,
+                applied=False, overhead=0.0, status="rolled_back",
+                attempt=attempt,
+                detail={
+                    "exhausted": True, "rolled_back": rolled,
+                    **({"quarantined": True} if quarantined else {}),
+                },
+            )
+        )
         return out
 
     def _relief(self, job: JobHandle, now: float) -> list[ControlEvent]:
@@ -418,11 +672,18 @@ class ControlPlane:
         out: list[ControlEvent] = []
         closed = job.detector.history[-1] if job.detector.history else None
         if closed is not None and self.duration_model is not None:
-            # Feed the survival curves. A fault our own restart cleared
-            # would have lasted longer — record it right-censored so
-            # mitigation does not bias the curve short.
-            censored = job.planner is not None and any(
-                k is Strategy.CKPT_AND_RESTART for k in job.planner.applied
+            # Feed the survival curves. A fault our own restart (or
+            # collective abort) cleared would have lasted longer — record
+            # it right-censored so mitigation does not bias the curve
+            # short. A hang is always censored: its natural duration is
+            # unbounded, and whatever ended it, the observed span is a
+            # lower bound, not a draw from the duration distribution.
+            censored = bool(getattr(closed, "hang", False)) or (
+                job.planner is not None
+                and any(
+                    k is Strategy.CKPT_AND_RESTART or k == "ABORT_REFORM"
+                    for k in job.planner.applied
+                )
             )
             self.duration_model.observe(
                 closed.root_cause,
@@ -449,6 +710,7 @@ class ControlPlane:
                     job_id=job.job_id, time=now, strategy=key,
                     applied=outcome.applied, kind="relief",
                     detail=outcome.detail,
+                    status="failed" if "error" in outcome.detail else "ok",
                 )
             )
         return out

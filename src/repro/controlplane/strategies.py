@@ -42,6 +42,7 @@ from typing import Protocol, runtime_checkable
 
 import numpy as np
 
+from repro.cluster.injector import HANG_KINDS, InjectionKind
 from repro.core import microbatch as mb_lib
 from repro.core import topology as topo_lib
 from repro.core.duration import DurationModel
@@ -51,8 +52,13 @@ from repro.core.planner import DEFAULT_OVERHEADS, MitigationPlanner
 
 #: default wall-clock overheads of the placement rungs: a group re-shape
 #: exchanges optimizer/parameter shards between the swapped ranks —
-#: heavier than an S2 re-split, comparable to an S3 placement swap
-PLACEMENT_OVERHEADS: dict[StrategyKey, float] = {"S2P": 8.0, "S3P": 12.0}
+#: heavier than an S2 re-split, comparable to an S3 placement swap.
+#: ABORT_REFORM (collective abort + group re-form) sits above them: it
+#: tears down and rebuilds the communicator state, but stays far below a
+#: full checkpoint-restart.
+PLACEMENT_OVERHEADS: dict[StrategyKey, float] = {
+    "S2P": 8.0, "S3P": 12.0, "ABORT_REFORM": 20.0,
+}
 
 
 @dataclass
@@ -124,6 +130,8 @@ class MicroBatchStrategy:
     key: StrategyKey = Strategy.ADJUST_MICROBATCH
 
     def handles(self, event: FailSlowEvent) -> bool:
+        if getattr(event, "hang", False):
+            return False  # re-splitting batches cannot unstick a hang
         # Table 3: "No Effect" on slow communication.
         return event.root_cause is not RootCause.NETWORK_CONGESTION
 
@@ -168,7 +176,9 @@ class TopologyStrategy:
     max_rounds: int | None = None
 
     def handles(self, event: FailSlowEvent) -> bool:
-        return True
+        # A placement swap routes traffic around a *slow* component; a hung
+        # collective blocks every member regardless of where it sits.
+        return not getattr(event, "hang", False)
 
     def apply(self, ctx: MitigationContext) -> StrategyOutcome:
         sim = ctx.adapter
@@ -267,6 +277,8 @@ class PlacementMicroBatchStrategy:
         # or device-scoped (gpu:) — S2P, like S2, cannot fix slow comm.
         if event.root_cause is RootCause.NETWORK_CONGESTION:
             return False
+        if getattr(event, "hang", False):
+            return False  # a re-shape cannot unstick a hang either
         return any(
             c.partition(":")[0] in ("node", "gpu") for c in event.components
         )
@@ -362,6 +374,8 @@ class PlacementTopologyStrategy:
     key: StrategyKey = "S3P"
 
     def handles(self, event: FailSlowEvent) -> bool:
+        if getattr(event, "hang", False):
+            return False  # hangs take the abort/re-form path, not a re-shape
         if event.root_cause not in (
             RootCause.NETWORK_CONGESTION, RootCause.UNKNOWN
         ):
@@ -417,6 +431,77 @@ class CkptRestartStrategy:
                 i for i in ctx.injector.injections if not i.active(ctx.now)
             ]
         return StrategyOutcome(applied=True, detail={"restarted": True})
+
+    def relieve(self, ctx: MitigationContext) -> StrategyOutcome | None:
+        return None
+
+
+# --------------------------------------------------------- ABORT_REFORM
+@dataclass
+class AbortReformStrategy:
+    """Abort a stalled collective and re-form the communication group.
+
+    The hang-specific rung (CCL-D's abort-and-reform, arXiv 2605.04478): a
+    ``COLLECTIVE_HANG`` is *software* state — a collective stuck on a link
+    — so aborting the operation and rebuilding the group on the same
+    devices clears it. Modeled as dropping the active collective-hang
+    injections (the stuck operation is gone) and re-forming the groups to
+    the canonical stage-contiguous placement with a fresh micro-batch
+    split. A ``GPU_HANG`` is *hardware* — abort cannot revive the device —
+    and when the adapter exposes no injector/remap surface there is
+    nothing to abort either; both fall back to the S4 restart-onto-healthy
+    semantics (the "re-form is impossible" escape hatch).
+    """
+
+    key: StrategyKey = "ABORT_REFORM"
+
+    def handles(self, event: FailSlowEvent) -> bool:
+        return bool(getattr(event, "hang", False))
+
+    @staticmethod
+    def _active_hangs(ctx: MitigationContext) -> list:
+        inj = ctx.injector
+        if inj is None or not hasattr(inj, "injections"):
+            return []
+        return [
+            i for i in inj.injections
+            if getattr(i, "kind", None) in HANG_KINDS and i.active(ctx.now)
+        ]
+
+    def apply(self, ctx: MitigationContext) -> StrategyOutcome:
+        sim = ctx.adapter
+        hangs = self._active_hangs(ctx)
+        coll = [
+            i for i in hangs if i.kind is InjectionKind.COLLECTIVE_HANG
+        ]
+        hard = [i for i in hangs if i.kind is InjectionKind.GPU_HANG]
+        if not coll or hard or not _remap_surface(sim):
+            return self._fallback_s4(ctx)
+        inj = ctx.injector
+        drop = {id(i) for i in coll}
+        # Wholesale reassignment: bumps the injector epoch so schedule
+        # cursors re-apply (the same contract S4 relies on).
+        inj.injections = [i for i in inj.injections if id(i) not in drop]
+        canonical = sorted(sim.placement)
+        if canonical != list(sim.placement):
+            sim.remap_groups(canonical)
+        sim.set_allocation(_solve_alloc(sim))
+        return StrategyOutcome(
+            applied=True,
+            detail={"aborted": len(coll), "reformed": True,
+                    "scopes": sorted({i.scope for i in coll if i.scope})},
+        )
+
+    def _fallback_s4(self, ctx: MitigationContext) -> StrategyOutcome:
+        sim = ctx.adapter
+        if not hasattr(sim, "restart"):
+            return StrategyOutcome(applied=False, detail={"fallback": "none"})
+        sim.restart()
+        if ctx.injector is not None and hasattr(ctx.injector, "injections"):
+            ctx.injector.injections = [
+                i for i in ctx.injector.injections if not i.active(ctx.now)
+            ]
+        return StrategyOutcome(applied=True, detail={"fallback": "S4"})
 
     def relieve(self, ctx: MitigationContext) -> StrategyOutcome | None:
         return None
@@ -495,7 +580,13 @@ class StrategyRegistry:
     def relieve(self, ctx: MitigationContext) -> list[tuple[StrategyKey, StrategyOutcome]]:
         out = []
         for key, strat in self._table.items():
-            res = strat.relieve(ctx)
+            try:
+                res = strat.relieve(ctx)
+            except Exception as exc:  # one bad relieve must not stop the rest
+                res = StrategyOutcome(
+                    applied=False,
+                    detail={"error": f"{type(exc).__name__}: {exc}"},
+                )
             if res is not None:
                 out.append((key, res))
         return out
@@ -512,11 +603,15 @@ def default_registry(max_rounds: int | None = None) -> StrategyRegistry:
 
 
 def placement_registry(max_rounds: int | None = None) -> StrategyRegistry:
-    """The S1-S4 ladder extended with the placement rungs (S2P/S3P).
+    """The S1-S4 ladder extended with the placement rungs (S2P/S3P) and
+    the hang rung (ABORT_REFORM).
 
-    Escalation order follows the overheads: S1, S2, S2P, S3, S3P, S4 —
-    the cheap paper rungs get first claim, the re-shapes fire when the
-    skewless/congested cases leave them ineffective.
+    Escalation order follows the overheads: S1, S2, S2P, S3, S3P,
+    ABORT_REFORM, S4 — the cheap paper rungs get first claim, the
+    re-shapes fire when the skewless/congested cases leave them
+    ineffective, and the abort rung (which only handles hang events, for
+    which the slowdown rungs all decline) fires before the checkpoint
+    sledgehammer.
     """
     reg = StrategyRegistry()
     reg.register(IgnoreStrategy())
@@ -524,5 +619,6 @@ def placement_registry(max_rounds: int | None = None) -> StrategyRegistry:
     reg.register(PlacementMicroBatchStrategy())
     reg.register(TopologyStrategy(max_rounds=max_rounds))
     reg.register(PlacementTopologyStrategy())
+    reg.register(AbortReformStrategy())
     reg.register(CkptRestartStrategy())
     return reg

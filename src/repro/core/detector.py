@@ -1084,3 +1084,91 @@ def suspicious_groups(
     if med <= 0:
         return []
     return [g for g, t in group_times.items() if t > factor * med]
+
+
+@dataclass
+class Watchdog:
+    """Missing-observation heartbeat monitor (hang detection).
+
+    BOCD — batched or not — structurally cannot flag a stream that *stops
+    emitting samples*: with no new observation the run-length recursion
+    simply does not advance. A hang looks exactly like that (the current
+    iteration never completes), so hang detection keys off silence, not
+    values: every delivered sample is a :meth:`beat`, and :meth:`expired`
+    fires once the silence exceeds a deadline calibrated to that stream's
+    own inter-arrival jitter,
+
+        deadline = max(floor_gaps * mean_gap, mean_gap + k_sigma * std_gap)
+
+    with mean/std tracked as EWMAs of the observed gaps. A stream that
+    always reports on a metronomic cadence gets a tight ``floor_gaps``
+    deadline; a stream whose delivery jitters gets proportionally more
+    slack, keeping the false-positive rate at zero on healthy-but-noisy
+    streams. Nothing fires before ``min_beats`` heartbeats — there is no
+    calibrated cadence to miss yet.
+    """
+
+    #: minimum deadline, in multiples of the mean inter-arrival gap
+    floor_gaps: float = 3.0
+    #: jitter slack: deadline stretches this many gap std-devs past the mean
+    k_sigma: float = 8.0
+    #: heartbeats required before a stream's deadline is armed
+    min_beats: int = 2
+    #: EWMA smoothing factor for the gap mean/variance
+    alpha: float = 0.2
+
+    _last: dict = field(init=False, default_factory=dict)
+    _mean: dict = field(init=False, default_factory=dict)
+    _var: dict = field(init=False, default_factory=dict)
+    _beats: dict = field(init=False, default_factory=dict)
+
+    def beat(self, key, now: float) -> None:
+        """Record a delivered observation for stream ``key`` at ``now``."""
+        prev = self._last.get(key)
+        self._last[key] = now
+        self._beats[key] = self._beats.get(key, 0) + 1
+        if prev is None:
+            return
+        gap = now - prev
+        dl = self._deadline_gap(key)
+        if dl is not None and gap > dl:
+            # Resume after a stall (or a delivery outage): folding the
+            # silent stretch into the cadence statistics would poison every
+            # future deadline, so re-anchor without updating them.
+            return
+        mean = self._mean.get(key)
+        if mean is None:
+            self._mean[key] = gap
+            self._var[key] = 0.0
+            return
+        a = self.alpha
+        delta = gap - mean
+        self._mean[key] = mean + a * delta
+        self._var[key] = (1.0 - a) * (self._var[key] + a * delta * delta)
+
+    def _deadline_gap(self, key) -> float | None:
+        """Allowed silence in seconds, or None while uncalibrated."""
+        mean = self._mean.get(key)
+        if mean is None or self._beats.get(key, 0) < self.min_beats:
+            return None
+        std = float(np.sqrt(max(self._var.get(key, 0.0), 0.0)))
+        return max(self.floor_gaps * mean, mean + self.k_sigma * std)
+
+    def deadline(self, key) -> float | None:
+        """Public view of the stream's current silence budget (seconds)."""
+        return self._deadline_gap(key)
+
+    def silence(self, key, now: float) -> float:
+        """Seconds since the stream's last heartbeat (0 if never seen)."""
+        last = self._last.get(key)
+        return 0.0 if last is None else max(now - last, 0.0)
+
+    def expired(self, key, now: float) -> bool:
+        """True when ``key`` has been silent past its calibrated deadline."""
+        dl = self._deadline_gap(key)
+        return dl is not None and self.silence(key, now) > dl
+
+    def forget(self, key) -> None:
+        """Drop all state for a departed stream (job leave)."""
+        for d in (self._last, self._mean, self._var, self._beats):
+            d.pop(key, None)

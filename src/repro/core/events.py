@@ -76,6 +76,11 @@ class FailSlowEvent:
     t_slow: float = 0.0
     #: severity in [0, 1): relative throughput loss
     severity: float = 0.0
+    #: True when the incident is a hang (unbounded slowdown): the stream
+    #: stopped emitting samples and the watchdog, not BOCD, flagged it.
+    #: Hangs take the abort/re-form mitigation path — micro-batch re-splits
+    #: and placement swaps cannot unstick a stuck collective.
+    hang: bool = False
     end_time: float | None = None  # None while ongoing
 
     @property

@@ -186,6 +186,8 @@ class MitigationPlanner:
     def _threshold(self, nxt: StrategyKey, delta: float, t_now: float) -> float:
         """Escalation threshold for the next rung (see module docstring)."""
         overhead = self.overheads[nxt]
+        if getattr(self.event, "hang", False) and overhead > 0.0:
+            return self._hang_threshold(nxt, overhead, delta, t_now)
         if self.estimator is None or overhead <= 0.0:
             return overhead
         # Residual excess per wall-clock second if we stop here — the live
@@ -206,6 +208,30 @@ class MitigationPlanner:
         lam = min(max(self.prediction_lambda, 1e-3), 1.0)
         margin = max(self.prediction_margin, 1.0)
         return overhead * lam if benefit > overhead * margin else overhead / lam
+
+    def _hang_threshold(
+        self, nxt: StrategyKey, overhead: float, delta: float, t_now: float
+    ) -> float:
+        """Break-even for an *unbounded* slowdown (multiplier → ∞).
+
+        A hang never relieves itself, so the survival-curve query is
+        meaningless (and its huge ``_age`` would predict ~zero remaining
+        duration, parking the planner in the B/λ hold-out forever while the
+        job makes no progress). The benefit of acting caps at the job's
+        remaining work (everything still to run is lost if we wait), the
+        hold-out zone is bypassed — waiting out a break-even that cannot
+        come wastes ``work_remaining`` outright — and a non-finite benefit
+        is treated as clearly profitable rather than overflowing.
+        """
+        rate = min(delta / max(t_now, 1e-12), 1.0)
+        window = float("inf")
+        if self.work_remaining is not None:
+            window = min(window, max(self.work_remaining(), 0.0))
+        if self.incident_gap is not None:
+            window = min(window, max(self.incident_gap(), 0.0))
+        benefit = window if window == float("inf") else window * rate
+        lam = min(max(self.prediction_lambda, 1e-3), 1.0)
+        return overhead * lam if benefit > overhead else overhead
 
     def exhausted(self) -> bool:
         return self._id >= len(self._candidates)

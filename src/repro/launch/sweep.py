@@ -37,6 +37,12 @@ METRICS = (
     ("slowdown_mitigated_ckpt_pct",
      ("mitigation", "slowdown_mitigated_ckpt_pct")),
     ("avg_jct_delay_pct", ("mitigation", "avg_jct_delay_pct")),
+    # Robustness (hang/executor) metrics: None for presets without hangs,
+    # so they aggregate only where they apply.
+    ("hang_detection_rate",
+     ("robustness", "watchdog", "hang_detection_rate")),
+    ("median_time_to_abort_s",
+     ("robustness", "watchdog", "median_time_to_abort_s")),
 )
 
 #: the gate schema the committed baseline must carry (pinned by
@@ -167,14 +173,19 @@ def write_sweep(sweep: dict, out_dir: str = RESULTS_DIR) -> str:
     return path
 
 
-def write_baseline(sweep: dict, path: str, max_drop: float = 2.0) -> None:
+def write_baseline(
+    sweep: dict,
+    path: str,
+    max_drop: float = 2.0,
+    metric: str = "slowdown_mitigated_pct",
+) -> None:
     baseline = {
         "preset": sweep["preset"],
         "jobs": sweep["jobs"],
         "seeds": sweep["seeds"],
         "metrics": sweep["metrics"],
         "gate": {
-            "metric": "slowdown_mitigated_pct",
+            "metric": metric,
             "max_drop_pct_points": max_drop,
         },
     }
@@ -198,6 +209,8 @@ def main(argv: list[str] | None = None) -> int:
                     help="record this sweep as the gate baseline at PATH")
     ap.add_argument("--max-drop", type=float, default=2.0,
                     help="allowed %%-mitigated drop when writing a baseline")
+    ap.add_argument("--gate-metric", default="slowdown_mitigated_pct",
+                    help="metric a written baseline gates on")
     ap.add_argument("--quiet", action="store_true")
     args = ap.parse_args(argv)
 
@@ -210,7 +223,10 @@ def main(argv: list[str] | None = None) -> int:
     print(f"\nsweep: {path}")
 
     if args.write_baseline:
-        write_baseline(sweep, args.write_baseline, args.max_drop)
+        write_baseline(
+            sweep, args.write_baseline, args.max_drop,
+            metric=args.gate_metric,
+        )
         print(f"baseline: {args.write_baseline}")
     if args.gate:
         with open(args.gate) as f:

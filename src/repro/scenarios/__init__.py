@@ -34,6 +34,7 @@ from repro.scenarios.faults import (  # noqa: F401
     CAUSE_KINDS,
     KIND_CAUSE,
     SEVERITY_TIERS,
+    ExecutorFaultModel,
     FaultModel,
 )
 from repro.scenarios.presets import (  # noqa: F401

@@ -38,6 +38,7 @@ from repro.controlplane import (
     placement_registry,
 )
 from repro.core.duration import DurationModel
+from repro.scenarios.faults import ExecutorFaultModel
 from repro.scenarios.presets import JobTemplate, ScenarioPreset, get_preset
 
 MODES = ("healthy", "faults", "ckpt", "falcon")
@@ -117,6 +118,8 @@ class JobOutcome:
     iters_done: float = 0.0
     steps: int = 0
     overhead_paid: float = 0.0
+    #: ticks spent fully stalled (hang active, no samples emitted)
+    stalled_ticks: int = 0
     mitigations: dict = field(default_factory=dict)  # strategy label -> count
 
     @property
@@ -198,7 +201,7 @@ def _translate(
 ) -> Injection | None:
     """A fleet-coordinate episode in one job's local coordinates (None =
     the job's slice is untouched by it)."""
-    if inj.kind is InjectionKind.GPU_SLOW:
+    if inj.kind in (InjectionKind.GPU_SLOW, InjectionKind.GPU_HANG):
         (d,) = inj.target
         if d in dev_inverse:
             return replace(inj, target=(dev_inverse[d],))
@@ -388,9 +391,15 @@ def run_campaign(spec: CampaignSpec, mode: str) -> RunResult:
     if with_plane:
         # Only the full FALCON mode gets the predictive ski-rental horizon;
         # the ckpt baseline keeps the classic fixed-horizon break-even.
+        fail_p, timeout_p = preset.executor_faults
         plane = ControlPlane(
             max_events=1 << 20,
             duration_model=DurationModel() if mode == "falcon" else None,
+            # Fresh per run so ckpt and falcon modes draw identical streams.
+            executor_faults=(
+                ExecutorFaultModel(fail_p, timeout_p, seed=spec.seed)
+                if fail_p > 0.0 or timeout_p > 0.0 else None
+            ),
         )
 
     pending = sorted(
@@ -464,17 +473,32 @@ def run_campaign(spec: CampaignSpec, mode: str) -> RunResult:
             ):
                 injector.apply(st["sim"].state, now)
                 st["epoch"] = injector.epoch
+            if with_faults and st["sim"].stalled():
+                # A hung job emits nothing: the collective never returns, so
+                # there is no iteration-time sample this tick (and no jitter
+                # draw — the rng stream restarts when the job resumes).
+                outcomes[job_id].stalled_ticks += 1
+                continue
             samples[job_id] = st["sim"].iteration_time() * float(
                 st["rng"].normal(1.0, preset.jitter)
             )
 
-        if plane is not None and samples:
+        # Tick whenever jobs are live, even if every one of them is stalled
+        # this tick — the silent path IS the watchdog's input.
+        if plane is not None and live:
             new_events = plane.tick(samples, now_end)
             for ev in new_events:
                 if isinstance(ev, MitigationResult) and ev.kind == "mitigate":
                     st = live.get(ev.job_id)
-                    if st is not None and ev.applied:
+                    if st is None:
+                        continue
+                    # Applied dispatches pay the strategy overhead; failed
+                    # attempts pay their timeout/backoff charge. A declined
+                    # dispatch (ok but not applied — e.g. no better
+                    # placement) did nothing and costs nothing.
+                    if ev.applied or ev.status != "ok":
                         st["debt"] += ev.overhead
+                    if ev.applied:
                         out = outcomes[ev.job_id]
                         label = (
                             ev.strategy.name
@@ -493,7 +517,8 @@ def run_campaign(spec: CampaignSpec, mode: str) -> RunResult:
             budget -= pay
             out = outcomes[job_id]
             out.overhead_paid += pay
-            out.iters_done += budget / max(samples[job_id], 1e-12)
+            if job_id in samples:
+                out.iters_done += budget / max(samples[job_id], 1e-12)
             if out.iters_done >= out.steps:
                 out.end_time = now_end
                 finished.append(job_id)

@@ -36,6 +36,8 @@ CAUSE_KINDS: dict[str, InjectionKind] = {
     "cpu": InjectionKind.CPU_CONTENTION,
     "link": InjectionKind.LINK_CONGESTION,
     "nic": InjectionKind.NIC_CONGESTION,
+    "gpu_hang": InjectionKind.GPU_HANG,
+    "collective_hang": InjectionKind.COLLECTIVE_HANG,
 }
 
 #: injection kind -> the root cause a correct diagnosis reports (scoring)
@@ -44,6 +46,8 @@ KIND_CAUSE: dict[InjectionKind, RootCause] = {
     InjectionKind.CPU_CONTENTION: RootCause.CPU_CONTENTION,
     InjectionKind.LINK_CONGESTION: RootCause.NETWORK_CONGESTION,
     InjectionKind.NIC_CONGESTION: RootCause.NETWORK_CONGESTION,
+    InjectionKind.GPU_HANG: RootCause.GPU_DEGRADATION,
+    InjectionKind.COLLECTIVE_HANG: RootCause.NETWORK_CONGESTION,
 }
 
 #: the paper's injection tiers: fraction of performance lost
@@ -72,6 +76,12 @@ class FaultModel:
     ramp_prob: float = 0.5
     #: ramp length as a fraction of the episode duration
     ramp_frac: tuple[float, float] = (0.1, 0.4)
+    #: probability a sampled episode is a *hang* instead of a slowdown
+    #: (near-infinite multiplier; compute episodes become GPU_HANG,
+    #: communication episodes COLLECTIVE_HANG). Every rng draw the hang
+    #: path makes is guarded behind this knob, so schedules of presets
+    #: with ``hang_prob == 0`` are bit-identical to before it existed.
+    hang_prob: float = 0.0
     #: probability an episode is a flapper (recurs on the same component)
     flap_prob: float = 0.15
     #: how many relapses a flapper produces (inclusive integer range)
@@ -124,6 +134,28 @@ class FaultModel:
                 start=start, duration=duration, kind=kind, target=target,
                 severity=severity, ramp=ramp,
             )
+            if self.hang_prob > 0.0 and rng.random() < self.hang_prob:
+                comm = kind in (InjectionKind.LINK_CONGESTION,
+                                InjectionKind.NIC_CONGESTION)
+                hang_kind = (
+                    InjectionKind.COLLECTIVE_HANG
+                    if comm and n_devices >= 2
+                    else InjectionKind.GPU_HANG
+                )
+                hang_target = (
+                    target
+                    if kind is InjectionKind.LINK_CONGESTION
+                    and hang_kind is InjectionKind.COLLECTIVE_HANG
+                    else self._sample_target(
+                        rng, hang_kind, n_nodes, gpus_per_node
+                    )
+                )
+                episode = Injection(
+                    start=start, duration=duration, kind=hang_kind,
+                    target=hang_target, severity=1.0,
+                    scope="dp" if hang_kind is InjectionKind.COLLECTIVE_HANG
+                    else "",
+                )
             out.append(episode)
             if rng.random() < self.flap_prob:
                 out += self._flap(rng, episode)
@@ -140,7 +172,7 @@ class FaultModel:
         gpus_per_node: int,
     ) -> tuple[int, ...]:
         n_devices = n_nodes * gpus_per_node
-        if kind is InjectionKind.GPU_SLOW:
+        if kind in (InjectionKind.GPU_SLOW, InjectionKind.GPU_HANG):
             return (int(rng.integers(n_devices)),)
         if kind in (InjectionKind.CPU_CONTENTION, InjectionKind.NIC_CONGESTION):
             return (int(rng.integers(n_nodes)),)
@@ -178,3 +210,45 @@ class FaultModel:
             ))
             cursor = out[-1].end
         return out
+
+
+class ExecutorFaultModel:
+    """Seeded flaky-executor fault injection: mitigations themselves fail.
+
+    A callable matching the control plane's ``executor_faults`` protocol —
+    ``(job_id, strategy, attempt, now) -> None | "fail" | "timeout"`` —
+    that makes strategy dispatches flakily fail or time out with the given
+    per-attempt probabilities, so campaigns can score the executor's
+    retry/backoff/rollback/quarantine machinery. Draws come from a private
+    seeded generator consumed in dispatch order, which is deterministic
+    per (preset, seed) run; build a fresh instance per campaign mode so
+    modes do not share a draw stream. S1 (IGNORE) never faults: it is pure
+    bookkeeping with no mechanism to fail (and no rng draw is consumed, so
+    its exemption cannot shift later verdicts).
+    """
+
+    def __init__(
+        self, fail_prob: float = 0.0, timeout_prob: float = 0.0, seed: int = 0
+    ) -> None:
+        self.fail_prob = float(fail_prob)
+        self.timeout_prob = float(timeout_prob)
+        self.seed = int(seed)
+        self._rng = np.random.default_rng([self.seed, 0xEC5])
+        self.calls = 0
+
+    def __call__(
+        self, job_id: str, strategy, attempt: int, now: float
+    ) -> str | None:
+        from repro.core.events import Strategy
+
+        if strategy is Strategy.IGNORE:
+            return None
+        if self.fail_prob <= 0.0 and self.timeout_prob <= 0.0:
+            return None
+        self.calls += 1
+        u = float(self._rng.random())
+        if u < self.fail_prob:
+            return "fail"
+        if u < self.fail_prob + self.timeout_prob:
+            return "timeout"
+        return None

@@ -85,6 +85,14 @@ class ScenarioPreset:
     ckpt_overhead_ticks: float = 60.0
     #: jitter std-dev of sampled iteration times (healthy noise floor)
     jitter: float = 0.003
+    #: (fail_prob, timeout_prob) per mitigation dispatch attempt — wired
+    #: into an :class:`~repro.scenarios.faults.ExecutorFaultModel` by the
+    #: campaign runner; (0, 0) disables executor faults (and consumes no
+    #: rng, keeping existing presets byte-identical)
+    executor_faults: tuple[float, float] = (0.0, 0.0)
+    #: scoring budget: a hang should be aborted within this many ticks of
+    #: its injection (robustness report's deadline_budget_s)
+    abort_budget_ticks: float = 12.0
 
     def overheads(self) -> dict[StrategyKey, float]:
         """Ski-rental one-off action costs on this preset's clock.
@@ -101,6 +109,7 @@ class ScenarioPreset:
             "S2P": 1.5 * dt,
             Strategy.ADJUST_TOPOLOGY: 3.0 * dt,
             "S3P": 4.0 * dt,
+            "ABORT_REFORM": 6.0 * dt,
             Strategy.CKPT_AND_RESTART: self.ckpt_overhead_ticks * dt,
         }
 
@@ -138,6 +147,31 @@ def _long_tail(n_nodes: int, gpn: int, dt: float) -> list[Injection]:
     return [Injection(start=200 * dt, duration=36_000.0,
                       kind=InjectionKind.GPU_SLOW, target=(1,),
                       severity=0.25)]
+
+
+def _collective_hang(n_nodes: int, gpn: int, dt: float) -> list[Injection]:
+    """Two hangs (tentpole scenario): a DP all-reduce collective freezes on
+    a cross-node link, then a single GPU hard-hangs on another job. Both
+    last far past the horizon budget — only an abort ends them."""
+    return [
+        Injection(start=150 * dt, duration=400 * dt,
+                  kind=InjectionKind.COLLECTIVE_HANG, target=(0, gpn),
+                  severity=1.0, scope="dp"),
+        Injection(start=220 * dt, duration=400 * dt,
+                  kind=InjectionKind.GPU_HANG, target=(4,), severity=1.0),
+    ]
+
+
+def _flaky_faults(n_nodes: int, gpn: int, dt: float) -> list[Injection]:
+    """Moderate slowdowns for the flaky-executor preset: ordinary ladder
+    work whose dispatches the ExecutorFaultModel then makes fail."""
+    return [
+        Injection(start=120 * dt, duration=250 * dt,
+                  kind=InjectionKind.GPU_SLOW, target=(2,), severity=0.5),
+        Injection(start=180 * dt, duration=220 * dt,
+                  kind=InjectionKind.NIC_CONGESTION, target=(1,),
+                  severity=0.6, ramp=20 * dt),
+    ]
 
 
 _T = JobTemplate  # brevity below
@@ -188,6 +222,31 @@ PRESETS: dict[str, ScenarioPreset] = {
                 _T("yi-9b", tp=1, dp=4, pp=2, micro_batches=32),
             ),
             fixed_schedule=_long_tail,
+        ),
+        ScenarioPreset(
+            name="collective_hang",
+            description="Hang anomalies: a frozen DP collective on one job "
+                        "and a hard GPU hang on another — the watchdog, not "
+                        "BOCD, must flag them and ABORT_REFORM must end them",
+            n_nodes=4, default_jobs=2, max_ticks=500,
+            job_templates=(
+                _T("granite-3-8b", tp=4, dp=2, pp=1, micro_batches=16,
+                   span_nodes=2),
+            ),
+            fixed_schedule=_collective_hang,
+        ),
+        ScenarioPreset(
+            name="flaky_executor",
+            description="Ordinary slowdowns but a flaky mitigation executor: "
+                        "35% of dispatches fail, 15% time out — exercises "
+                        "retry/backoff/rollback/quarantine",
+            n_nodes=2, default_jobs=2, max_ticks=500,
+            job_templates=(
+                _T("yi-9b", tp=1, dp=4, pp=1, micro_batches=32,
+                   span_nodes=2),
+            ),
+            fixed_schedule=_flaky_faults,
+            executor_faults=(0.35, 0.15),
         ),
         ScenarioPreset(
             name="failslow_storm",

@@ -29,8 +29,14 @@ import json
 import os
 from dataclasses import dataclass
 
+from repro.cluster.injector import HANG_KINDS
 from repro.cluster.traces import episodes_from_injections
-from repro.controlplane import Diagnosis, Membership
+from repro.controlplane import (
+    Diagnosis,
+    Membership,
+    MitigationResult,
+    WatchdogAlarm,
+)
 from repro.core.detector import FalconDetect, FleetDetect
 from repro.core.events import RootCause
 from repro.scenarios.campaign import (
@@ -353,6 +359,130 @@ def score_campaign(
         "paper_avg_jct_delay_pct": 1.34,
     }
 
+    # ---------------------------------------------------- robustness
+    # Hang anomalies (watchdog path) + the fault-tolerant executor. Scored
+    # from the falcon run's typed event log: WatchdogAlarm marks detection,
+    # an applied ABORT_REFORM / CKPT_AND_RESTART inside the hang's window
+    # ends it, and per-attempt MitigationResult statuses expose every
+    # executor failure, retry, rollback and quarantine.
+    alarms = [ev for ev in falcon.events if isinstance(ev, WatchdogAlarm)]
+    aborts: dict[str, list[float]] = {}
+    exec_counts = {"ok": 0, "failed": 0, "timed_out": 0, "rolled_back": 0}
+    retries = 0
+    quarantines = 0
+    errors = 0
+    for ev in falcon.events:
+        if not isinstance(ev, MitigationResult):
+            continue
+        if ev.kind == "error":
+            errors += 1
+            continue
+        if ev.kind != "mitigate":
+            continue
+        exec_counts[ev.status] = exec_counts.get(ev.status, 0) + 1
+        if ev.attempt > 1:
+            retries += 1
+        if ev.detail.get("quarantined"):
+            quarantines += 1
+        label = (
+            ev.strategy.name
+            if hasattr(ev.strategy, "name") else str(ev.strategy)
+        )
+        if ev.applied and label in ("ABORT_REFORM", "CKPT_AND_RESTART"):
+            aborts.setdefault(ev.job_id, []).append(ev.time)
+
+    hang_rows: list[dict] = []
+    tta: list[float] = []
+    alarm_windows: dict[str, list[tuple[float, float]]] = {}
+    def _live_during(job_id: str, inj) -> bool:
+        # Observability: a hang only counts against the watchdog if the
+        # job's falcon-run lifetime overlaps it — a job that finished
+        # before the hang started never went silent.
+        out = falcon.outcomes[job_id]
+        end = out.end_time if out.end_time is not None else float("inf")
+        return out.join_time < inj.end and inj.start < end
+
+    for gi, inj in enumerate(spec.schedule):
+        if inj.kind not in HANG_KINDS:
+            continue
+        affected = sorted(
+            p.job_id for p in spec.jobs
+            if gi in p.global_ids and _live_during(p.job_id, inj)
+        )
+        if not affected:
+            continue
+        lo, hi = inj.start, inj.end + grace
+        for j in affected:
+            alarm_windows.setdefault(j, []).append((lo, hi))
+        hit = [
+            a.time for a in alarms
+            if a.job_id in affected and lo <= a.time <= hi
+        ]
+        abort_times = [
+            t for j in affected for t in aborts.get(j, []) if lo <= t <= hi
+        ]
+        if abort_times:
+            tta.append(min(abort_times) - inj.start)
+        hang_rows.append({
+            "injection_id": gi,
+            "kind": inj.kind.value,
+            "scope": inj.scope,
+            "jobs": affected,
+            "start_s": round(inj.start, 2),
+            "alarmed": bool(hit),
+            "alarm_latency_s": (
+                round(min(hit) - inj.start, 3) if hit else None
+            ),
+            "time_to_abort_s": (
+                round(min(abort_times) - inj.start, 3)
+                if abort_times else None
+            ),
+        })
+    false_alarms = sum(
+        1 for a in alarms
+        if not any(
+            lo <= a.time <= hi
+            for lo, hi in alarm_windows.get(a.job_id, [])
+        )
+    )
+    tta.sort()
+    n_hangs = len(hang_rows)
+    n_alarmed = sum(1 for r in hang_rows if r["alarmed"])
+    robustness = {
+        "watchdog": {
+            "alarms": len(alarms),
+            "hangs_injected": n_hangs,
+            "hangs_detected": n_alarmed,
+            "hang_detection_rate": (
+                round(n_alarmed / n_hangs, 4) if n_hangs else None
+            ),
+            "false_alarms": false_alarms,
+            "median_time_to_abort_s": (
+                round(tta[len(tta) // 2], 3) if tta else None
+            ),
+            "deadline_budget_s": round(preset.abort_budget_ticks * dt, 2),
+            "hangs": hang_rows,
+        },
+        "executor": {
+            "dispatch_results": dict(sorted(exec_counts.items())),
+            "retries": retries,
+            "quarantines": quarantines,
+            "uncaught_errors": errors,
+        },
+        # GPU-seconds burned while a job sat fully stalled — the paper's
+        # wasted-accelerator-time cost of hangs; mitigation shrinks it.
+        "wasted_gpu_time_s": {
+            mode: round(
+                sum(
+                    runs[mode].outcomes[p.job_id].stalled_ticks
+                    * dt * len(p.devices)
+                    for p in spec.jobs
+                ), 2,
+            )
+            for mode in sorted(runs)
+        },
+    }
+
     # ---------------------------------------------------- assembled report
     inj_rows = [
         {
@@ -397,6 +527,7 @@ def score_campaign(
         "diagnoses": diag_rows,
         "episodes": episode_rows,
         "mitigation": mitigation,
+        "robustness": robustness,
         "jobs": job_rows,
         "injections": inj_rows,
         "membership": membership,

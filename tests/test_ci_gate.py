@@ -19,6 +19,9 @@ REPO = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
 BASELINE = os.path.join(
     REPO, "results", "sweeps", "single_gpu_throttle-j1.baseline.json"
 )
+HANG_BASELINE = os.path.join(
+    REPO, "results", "sweeps", "collective_hang-j2.baseline.json"
+)
 WORKFLOW = os.path.join(REPO, ".github", "workflows", "ci.yml")
 
 
@@ -71,6 +74,41 @@ def test_workflow_invokes_the_gate_against_the_committed_baseline():
     assert "results/campaigns/single_gpu_throttle-j1-s0.json" in text
     assert "benchmarks.run --smoke" in text
     assert "pytest -x -q" in text
+    # Robustness gates: hang determinism + sweep gate, flaky-exec smoke.
+    assert "results/campaigns/collective_hang-j2-s0.json" in text
+    assert "results/campaigns/flaky_executor-j2-s0.json" in text
+    assert "results/sweeps/collective_hang-j2.baseline.json" in text
+    assert 'run_and_score("flaky_executor", seed=0)' in text
+
+
+def test_committed_hang_baseline_parses_and_matches_gate_schema():
+    with open(HANG_BASELINE) as f:
+        baseline = json.load(f)
+    for key in sweep_mod.GATE_SCHEMA_KEYS:
+        assert key in baseline, f"hang baseline missing {key!r}"
+    gate = baseline["gate"]
+    assert gate["metric"] in dict(sweep_mod.METRICS)
+    assert float(gate["max_drop_pct_points"]) > 0
+    m = baseline["metrics"][gate["metric"]]
+    assert m["mean"] is not None
+    assert m["n"] == baseline["seeds"] > 1
+    assert baseline["preset"] == "collective_hang"
+    assert baseline["jobs"] == 2
+    # Every seed must have watchdog-detected every injected hang.
+    wd = baseline["metrics"]["hang_detection_rate"]
+    assert wd["mean"] == 1.0 and wd["n"] == baseline["seeds"]
+
+
+def test_committed_hang_and_flaky_reports_exist_for_the_ci_diff():
+    for preset in ("collective_hang", "flaky_executor"):
+        path = os.path.join(
+            REPO, "results", "campaigns", f"{preset}-j2-s0.json"
+        )
+        with open(path) as f:
+            report = json.load(f)
+        assert report["campaign"]["preset"] == preset
+        assert report["campaign"]["n_jobs"] == 2
+        assert "robustness" in report
 
 
 def test_committed_determinism_report_exists_for_the_ci_diff():
@@ -92,6 +130,22 @@ def test_sweep_cli_gate_mode_end_to_end(tmp_path):
             sys.executable, "-m", "repro.launch.sweep",
             "--preset", "single_gpu_throttle", "--jobs", "1", "--seeds", "3",
             "--out", str(tmp_path), "--gate", BASELINE, "--quiet",
+        ],
+        env={**os.environ, "PYTHONPATH": os.path.join(REPO, "src")},
+        capture_output=True, text=True, timeout=1200,
+    )
+    assert out.returncode == 0, out.stdout + out.stderr
+    assert "GATE PASS" in out.stdout
+
+
+@pytest.mark.slow
+def test_hang_sweep_cli_gate_mode_end_to_end(tmp_path):
+    """The collective_hang gate command CI runs, end to end."""
+    out = subprocess.run(
+        [
+            sys.executable, "-m", "repro.launch.sweep",
+            "--preset", "collective_hang", "--jobs", "2", "--seeds", "3",
+            "--out", str(tmp_path), "--gate", HANG_BASELINE, "--quiet",
         ],
         env={**os.environ, "PYTHONPATH": os.path.join(REPO, "src")},
         capture_output=True, text=True, timeout=1200,

@@ -1,0 +1,438 @@
+"""Robustness tests: hang anomalies + the fault-tolerant executor.
+
+* Injector: hang multipliers compose with ordinary throttles on the same
+  component and un-compose cleanly when either episode ends.
+* Watchdog: zero false positives on healthy high-jitter streams across
+  seeds; fires on real silence; a resume-after-stall beat re-anchors
+  without poisoning the calibrated deadline.
+* End to end: a collective hang produces WatchdogAlarm -> hang-flagged
+  Diagnosis -> applied ABORT_REFORM, and the job's stream recovers.
+* Planner: the hang break-even caps benefit at work_remaining and never
+  enters the B/lambda hold-out zone.
+* Executor: injected dispatch failures surface as typed per-attempt
+  MitigationResults, roll the simulator back bit-identically, and
+  quarantine the strategy after K consecutive failures; a strategy that
+  raises (or a wedged adapter) degrades to a typed event, not a crash.
+* Campaign acceptance: collective_hang detects >= 95 % of hangs with no
+  false alarms and aborts within the preset budget; flaky_executor
+  surfaces every injected failure with zero uncaught errors.
+"""
+import numpy as np
+import pytest
+
+from repro.cluster.injector import (
+    HANG_EPS,
+    FailSlowInjector,
+    Injection,
+    InjectionKind,
+)
+from repro.cluster.simulator import JobSpec, TrainingSimulator
+from repro.cluster.spec import ClusterSpec, ModelSpec
+from repro.controlplane import (
+    ControlPlane,
+    Diagnosis,
+    ExecutorPolicy,
+    MitigationResult,
+    WatchdogAlarm,
+    placement_registry,
+)
+from repro.core.detector import Watchdog
+from repro.core.events import FailSlowEvent, RootCause, Strategy
+from repro.core.planner import MitigationPlanner
+from repro.scenarios import run_and_score
+
+MODEL = ModelSpec(layers=32, hidden=8192, seq_len=2048, vocab=32000,
+                  micro_batch=2)
+
+OVERHEADS = {
+    Strategy.IGNORE: 0.0,
+    Strategy.ADJUST_MICROBATCH: 2.0,
+    "S2P": 5.0,
+    Strategy.ADJUST_TOPOLOGY: 10.0,
+    "S3P": 15.0,
+    "ABORT_REFORM": 25.0,
+    Strategy.CKPT_AND_RESTART: 1800.0,
+}
+
+
+def make_sim():
+    return TrainingSimulator(
+        cluster=ClusterSpec(n_nodes=2, gpus_per_node=4),
+        job=JobSpec(model=MODEL, tp=2, dp=4, pp=1, micro_batches=16),
+    )
+
+
+# ---------------------------------------------------- injector hang kinds
+def test_hang_composes_with_throttle_and_uncomposes_cleanly():
+    """A hang stacked on a throttle multiplies (not clobbers), and each
+    episode's relief restores exactly the other's multiplier."""
+    inj = FailSlowInjector([
+        Injection(10.0, 100.0, InjectionKind.GPU_SLOW, (2,), 0.5),
+        Injection(50.0, 20.0, InjectionKind.GPU_HANG, (2,), 1.0),
+    ])
+    sim = make_sim()
+    inj.apply(sim.state, 20.0)
+    assert sim.state.devices[2].compute_speed == pytest.approx(0.5)
+    assert not sim.stalled()
+    inj.apply(sim.state, 60.0)  # overlap: throttle x hang
+    assert sim.state.devices[2].compute_speed == pytest.approx(0.5 * HANG_EPS)
+    assert sim.stalled()
+    inj.apply(sim.state, 80.0)  # hang aborted/over: throttle remains
+    assert sim.state.devices[2].compute_speed == pytest.approx(0.5)
+    assert not sim.stalled()
+    inj.apply(sim.state, 200.0)  # both over: baseline restored
+    assert sim.state.devices[2].compute_speed == pytest.approx(1.0)
+
+
+def test_collective_hang_stalls_the_job():
+    sim = make_sim()
+    inj = FailSlowInjector([
+        Injection(0.0, 100.0, InjectionKind.COLLECTIVE_HANG, (2, 4), 1.0,
+                  scope="dp"),
+    ])
+    inj.apply(sim.state, 10.0)
+    assert sim.stalled()
+    assert sim.iteration_time() > 1e4 * sim.healthy_iteration_time()
+
+
+# ----------------------------------------------------------- watchdog
+@pytest.mark.parametrize("seed", [0, 1, 2])
+def test_watchdog_zero_false_positives_on_healthy_jitter(seed):
+    """A healthy but jittery cadence (gaps 0.5x-2x nominal) never trips the
+    calibrated deadline — the false-positive budget is exactly zero."""
+    rng = np.random.default_rng(seed)
+    wd = Watchdog()
+    now = 0.0
+    fired = 0
+    for _ in range(500):
+        gap = 5.0 * float(rng.uniform(0.5, 2.0))
+        if wd.expired("j", now + gap):  # checked right before the late beat
+            fired += 1
+        now += gap
+        wd.beat("j", now)
+    assert fired == 0
+
+
+def test_watchdog_fires_on_silence_and_reanchors_on_resume():
+    wd = Watchdog()
+    now = 0.0
+    for _ in range(10):
+        now += 5.0
+        wd.beat("j", now)
+    deadline = wd.deadline("j")
+    assert deadline == pytest.approx(15.0)  # floor_gaps x mean on a 5s beat
+    assert not wd.expired("j", now + 6.0)
+    assert wd.expired("j", now + 21.0)
+    # A resume beat after a long stall re-anchors the heartbeat but must
+    # not fold the stall gap into the jitter stats (deadline unchanged).
+    wd.beat("j", now + 500.0)
+    assert wd.deadline("j") == pytest.approx(deadline)
+    assert not wd.expired("j", now + 506.0)
+
+
+# ------------------------------------------- hang end-to-end (tentpole)
+def test_hang_alarm_diagnosis_abort_reform_end_to_end():
+    """Silence -> WatchdogAlarm -> hang-flagged Diagnosis -> ABORT_REFORM
+    applied -> the stream recovers (the hang injection is aborted)."""
+    sim = make_sim()
+    injector = FailSlowInjector([
+        Injection(300.0, 1e9, InjectionKind.COLLECTIVE_HANG, (2, 4), 1.0,
+                  scope="dp"),
+    ])
+    plane = ControlPlane()
+    plane.register_job(
+        "A", sim, registry=placement_registry(), overheads=dict(OVERHEADS),
+        injector=injector, sample_period=5.0,
+    )
+    rng = np.random.default_rng(0)
+    events = []
+    for tick in range(120):
+        injector.apply(sim.state, tick * 5.0)
+        now = (tick + 1) * 5.0
+        if sim.stalled():
+            events += plane.tick({}, now)  # hung job emits no sample
+        else:
+            it = sim.iteration_time() * float(rng.normal(1, 0.003))
+            events += plane.tick({"A": it}, now)
+
+    alarms = [e for e in events if isinstance(e, WatchdogAlarm)]
+    assert len(alarms) == 1
+    assert alarms[0].silence_s > alarms[0].deadline_s > 0.0
+    hang_diags = [
+        e for e in events
+        if isinstance(e, Diagnosis) and not e.resolved and e.event.hang
+    ]
+    assert hang_diags
+    aborts = [
+        e for e in events
+        if isinstance(e, MitigationResult) and e.kind == "mitigate"
+        and e.applied and e.strategy == "ABORT_REFORM"
+    ]
+    assert len(aborts) == 1
+    assert aborts[0].status == "ok"
+    assert aborts[0].detail.get("reformed")
+    # The abort removed the hung collective: the job streams again.
+    assert not sim.stalled()
+    assert not any(
+        i.kind is InjectionKind.COLLECTIVE_HANG for i in injector.injections
+    )
+
+
+# -------------------------------------------------- hang ski-rental
+def _hang_event():
+    ev = FailSlowEvent(
+        start_time=0.0, root_cause=RootCause.NETWORK_CONGESTION,
+        t_healthy=1.0, t_slow=500.0,
+    )
+    ev.hang = True
+    return ev
+
+
+def test_hang_threshold_caps_benefit_at_work_remaining():
+    lam = MitigationPlanner(_hang_event(), dict(OVERHEADS)).prediction_lambda
+    # Plenty of work left: acting is clearly profitable -> fire early.
+    p = MitigationPlanner(
+        _hang_event(), dict(OVERHEADS), work_remaining=lambda: 1e6,
+    )
+    th = p._threshold(Strategy.ADJUST_TOPOLOGY, delta=499.0, t_now=500.0)
+    assert th == pytest.approx(10.0 * lam)
+    # Almost no work left: nothing to save -> classic break-even.
+    p = MitigationPlanner(
+        _hang_event(), dict(OVERHEADS), work_remaining=lambda: 1.0,
+    )
+    th = p._threshold(Strategy.ADJUST_TOPOLOGY, delta=499.0, t_now=500.0)
+    assert th == pytest.approx(10.0)
+    # No window callbacks at all: an unbounded hang is always worth ending.
+    p = MitigationPlanner(_hang_event(), dict(OVERHEADS))
+    th = p._threshold(Strategy.ADJUST_TOPOLOGY, delta=499.0, t_now=500.0)
+    assert th == pytest.approx(10.0 * lam)
+
+
+def test_hang_threshold_never_enters_holdout():
+    """The survival-curve hold-out (B/lambda) is bypassed for hangs: the
+    threshold is never above the classic overhead, for any window."""
+    for work in (0.0, 0.5, 5.0, 50.0, 5e3, float("inf")):
+        p = MitigationPlanner(
+            _hang_event(), dict(OVERHEADS), work_remaining=lambda w=work: w,
+        )
+        th = p._threshold(Strategy.ADJUST_TOPOLOGY, delta=499.0, t_now=500.0)
+        assert th <= 10.0 + 1e-12
+
+
+# ----------------------------------------------- snapshot / rollback
+def _snap_equal(a, b):
+    assert list(a["placement"]) == list(b["placement"])
+    assert list(a["allocation"]) == list(b["allocation"])
+    assert np.array_equal(a["compute"], b["compute"])
+    assert np.array_equal(a["host"], b["host"])
+    assert a["link_mult"] == b["link_mult"]
+    assert a["nic_mult"] == b["nic_mult"]
+
+
+def test_snapshot_restore_bit_identical():
+    sim = make_sim()
+    snap = sim.snapshot()
+    t0 = sim.iteration_time()
+    # Mutate every surface the snapshot covers.
+    sim.state.devices[1].compute_speed = 0.4
+    sim.state.degrade_link(0, 4, 0.2)
+    sim.set_allocation([5, 5, 3, 3])
+    sim.placement = list(reversed(sim.placement))
+    assert sim.iteration_time() != t0
+    sim.restore(snap)
+    _snap_equal(sim.snapshot(), snap)
+    assert sim.iteration_time() == t0  # exact, not approx: bit-identical
+
+
+def test_executor_rollback_bit_identical_and_quarantine():
+    """Every dispatch fails: each attempt surfaces as a typed non-ok result,
+    the simulator is rolled back to the pre-action snapshot exactly, and
+    the strategy is quarantined after K consecutive failures."""
+    sim = make_sim()
+    plane = ControlPlane(
+        executor_policy=ExecutorPolicy(
+            max_attempts=2, backoff_base_s=1.0, quarantine_after=2,
+        ),
+        executor_faults=lambda job_id, strategy, attempt, now: "fail",
+    )
+    plane.register_job("A", sim, overheads=dict(OVERHEADS), sample_period=5.0)
+    rng = np.random.default_rng(2)
+    frozen = None
+    events = []
+    for tick in range(140):
+        if tick == 40:
+            sim.state.devices[1].compute_speed = 0.4
+            frozen = sim.snapshot()  # post-fault, pre-mitigation reference
+        it = sim.iteration_time() * float(rng.normal(1, 0.003))
+        events += plane.tick({"A": it}, (tick + 1) * 5.0)
+
+    results = [
+        e for e in events
+        if isinstance(e, MitigationResult) and e.kind == "mitigate"
+    ]
+    dispatched = [r for r in results if r.strategy is not Strategy.IGNORE]
+    assert dispatched
+    for r in dispatched:
+        assert not r.applied
+        assert r.status in ("failed", "timed_out", "rolled_back")
+        assert r.detail.get("rolled_back") or r.detail.get("injected")
+    # Retries happened (attempt counts past 1) and backoff was charged.
+    assert any(r.attempt > 1 for r in dispatched)
+    assert any(r.overhead > 0.0 for r in dispatched)
+    # Consecutive failures quarantined the rung for this (cause, strategy).
+    assert any(r.detail.get("quarantined") for r in dispatched)
+    assert plane.job("A")._quarantined
+    # Bit-identical rollback: nothing the failed dispatches touched stuck.
+    _snap_equal(sim.snapshot(), frozen)
+
+
+def test_quarantined_strategy_excluded_from_new_planner():
+    """A quarantined (cause, strategy) pair is dropped from the candidate
+    ladder of the *next* event with that cause."""
+    sim = make_sim()
+    plane = ControlPlane()
+    plane.register_job("A", sim, overheads=dict(OVERHEADS), sample_period=5.0)
+    plane.job("A")._quarantined.add(
+        (RootCause.GPU_DEGRADATION, Strategy.ADJUST_MICROBATCH)
+    )
+    rng = np.random.default_rng(4)
+    events = []
+    for tick in range(140):
+        if tick == 40:
+            sim.state.devices[1].compute_speed = 0.4
+        it = sim.iteration_time() * float(rng.normal(1, 0.003))
+        events += plane.tick({"A": it}, (tick + 1) * 5.0)
+    dispatched = [
+        e.strategy for e in events
+        if isinstance(e, MitigationResult) and e.kind == "mitigate"
+        and e.applied
+    ]
+    assert Strategy.ADJUST_MICROBATCH not in dispatched
+    assert Strategy.ADJUST_TOPOLOGY in dispatched  # ladder skipped past it
+
+
+# ------------------------------------------------ graceful degradation
+class WedgedPinpointSim(TrainingSimulator):
+    """An adapter that raises mid-pinpoint (profiling RPC wedged)."""
+
+    def profile_groups(self):
+        raise RuntimeError("profiling channel wedged")
+
+
+def test_tick_survives_wedged_adapter_and_keeps_other_jobs():
+    """One job's adapter raising mid-tick yields a typed kind='error'
+    result for that job; the other job's pipeline keeps running."""
+    sim_a = WedgedPinpointSim(
+        cluster=ClusterSpec(n_nodes=2, gpus_per_node=4),
+        job=JobSpec(model=MODEL, tp=2, dp=4, pp=1, micro_batches=16),
+    )
+    sim_b = make_sim()
+    plane = ControlPlane()
+    plane.register_job("A", sim_a, overheads=dict(OVERHEADS), sample_period=5.0)
+    plane.register_job("B", sim_b, overheads=dict(OVERHEADS), sample_period=5.0)
+    rng = np.random.default_rng(6)
+    events = []
+    for tick in range(100):
+        if tick == 40:
+            sim_a.state.devices[1].compute_speed = 0.4
+            sim_b.state.devices[1].compute_speed = 0.4
+        ta = sim_a.iteration_time() * float(rng.normal(1, 0.003))
+        tb = sim_b.iteration_time() * float(rng.normal(1, 0.003))
+        events += plane.tick({"A": ta, "B": tb}, (tick + 1) * 5.0)
+    errors = [
+        e for e in events
+        if isinstance(e, MitigationResult) and e.kind == "error"
+    ]
+    assert errors and all(e.job_id == "A" for e in errors)
+    assert "RuntimeError" in errors[0].detail["error"]
+    # B's pipeline was untouched by A's failures: it diagnosed its fault.
+    assert any(
+        isinstance(e, Diagnosis) and e.job_id == "B" and not e.resolved
+        for e in events
+    )
+
+
+def test_raising_strategy_becomes_failed_result():
+    """A strategy whose apply() raises is a failed attempt (rolled back),
+    not an uncaught exception."""
+
+    class ExplodingStrategy:
+        key = "EXPLODE"
+
+        def handles(self, event):
+            return True
+
+        def apply(self, ctx):
+            raise ValueError("boom")
+
+        def relieve(self, ctx):
+            return None
+
+    from repro.controlplane import StrategyRegistry
+    from repro.controlplane.strategies import IgnoreStrategy
+
+    sim = make_sim()
+    registry = (
+        StrategyRegistry()
+        .register(IgnoreStrategy())
+        .register(ExplodingStrategy(), overhead=1.0)
+    )
+    plane = ControlPlane(
+        executor_policy=ExecutorPolicy(max_attempts=1, quarantine_after=99),
+    )
+    plane.register_job(
+        "A", sim, registry=registry,
+        overheads={Strategy.IGNORE: 0.0, "EXPLODE": 1.0},
+        sample_period=5.0,
+    )
+    rng = np.random.default_rng(8)
+    events = []
+    for tick in range(80):
+        if tick == 30:
+            sim.state.devices[1].compute_speed = 0.4
+        it = sim.iteration_time() * float(rng.normal(1, 0.003))
+        events += plane.tick({"A": it}, (tick + 1) * 5.0)
+    failed = [
+        e for e in events
+        if isinstance(e, MitigationResult) and e.strategy == "EXPLODE"
+    ]
+    assert failed
+    assert all(not e.applied for e in failed)
+    assert any("ValueError" in e.detail.get("error", "") for e in failed)
+
+
+# ------------------------------------------------- campaign acceptance
+def test_collective_hang_campaign_acceptance():
+    """ISSUE acceptance: >= 95 % of injected hangs watchdog-detected, zero
+    false alarms on healthy jobs, median time-to-abort under the preset's
+    deadline budget, and both jobs still finish under falcon."""
+    _, runs, report = run_and_score("collective_hang", seed=0)
+    wd = report["robustness"]["watchdog"]
+    assert wd["hangs_injected"] >= 2
+    assert wd["hang_detection_rate"] >= 0.95
+    assert wd["false_alarms"] == 0
+    assert wd["median_time_to_abort_s"] <= wd["deadline_budget_s"]
+    assert report["robustness"]["executor"]["uncaught_errors"] == 0
+    assert all(o.finished for o in runs["falcon"].outcomes.values())
+    waste = report["robustness"]["wasted_gpu_time_s"]
+    assert waste["falcon"] < 0.1 * waste["faults"]
+
+
+def test_flaky_executor_campaign_typed_failures():
+    """ISSUE acceptance: every injected apply-failure surfaces as a typed
+    non-ok MitigationResult (rolled back), with zero uncaught errors."""
+    _, runs, report = run_and_score("flaky_executor", seed=0)
+    ex = report["robustness"]["executor"]
+    counts = ex["dispatch_results"]
+    assert counts["failed"] + counts["timed_out"] > 0
+    assert counts["ok"] > 0  # retries eventually land some dispatches
+    assert ex["retries"] > 0
+    assert ex["uncaught_errors"] == 0
+    for ev in runs["falcon"].events:
+        if (
+            isinstance(ev, MitigationResult) and ev.kind == "mitigate"
+            and ev.status in ("failed", "timed_out")
+        ):
+            assert not ev.applied
+            assert ev.detail.get("rolled_back")
+            assert "injected" in ev.detail or "error" in ev.detail

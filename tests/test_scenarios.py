@@ -256,7 +256,10 @@ def test_fault_model_statistics():
                               horizon_s=3600.0)
     assert 300 < len(injs) < 500  # Poisson around 400
     kinds = {k: sum(1 for i in injs if i.kind is k) for k in InjectionKind}
-    assert all(v > 0 for v in kinds.values())
+    hang_kinds = (InjectionKind.GPU_HANG, InjectionKind.COLLECTIVE_HANG)
+    assert all(v > 0 for k, v in kinds.items() if k not in hang_kinds)
+    # hang_prob defaults to 0: no hang episodes unless explicitly enabled
+    assert all(kinds[k] == 0 for k in hang_kinds)
     durs = np.array([i.duration for i in injs])
     assert durs.min() >= 10.0 and durs.max() <= 40_000.0
     assert np.median(durs) < 3600.0  # log-spacing: most are short
