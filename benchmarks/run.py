@@ -36,6 +36,7 @@ SUITE = [
     ("event_rate", "Event rate — event-scoped incremental recompute cost"),
     ("controlplane_overhead", "Control plane — per-tick overhead at 1-64 jobs"),
     ("campaign_throughput", "Scenario campaigns — engine ticks/s vs fleet size"),
+    ("whatif_replay", "What-if engine — replay cost vs fresh re-runs"),
 ]
 
 

@@ -1,0 +1,77 @@
+"""What-if replay cost — counterfactual attribution vs fresh re-runs.
+
+The what-if engine's economic claim (deliverable: ISSUE 7 satellite f):
+a leave-one-out attribution pass over a recorded campaign must cost far
+less than re-running the campaign fresh once per counterfactual, because
+faults-mode variants re-simulate only the jobs an episode touches
+(merging the rest from the baseline) and every variant is cached by its
+edit. This benchmark runs the full LOO workload (per-cause drops +
+per-decision suppressions) on the ``mixed_fleet`` storm at growing fleet
+sizes and reports both ledgers: job-mode runs actually executed vs the
+fresh-equivalent count, and wall time vs the measured fresh-campaign
+cost x edit count. The reuse ratio must clear 1.5x — if it ever
+doesn't, replay is pointless and the benchmark fails loudly.
+"""
+from __future__ import annotations
+
+import time
+
+from benchmarks.common import print_table, save_rows
+from repro.scenarios.campaign import MODES
+from repro.whatif import WhatIfEngine, leave_one_out
+
+FLEET_SIZES = (2, 4, 8)
+
+
+def _measure(n_jobs: int, max_ticks: int | None) -> dict:
+    t0 = time.monotonic()
+    engine = WhatIfEngine.from_preset(
+        "mixed_fleet", n_jobs=n_jobs, seed=0, max_ticks=max_ticks
+    )
+    # The 4-mode baseline IS the cost of one fresh scoring pipeline run:
+    # without the engine, every counterfactual edit would be evaluated by
+    # re-running run_and_score on the edited campaign.
+    fresh_campaign_wall = time.monotonic() - t0
+
+    t0 = time.monotonic()
+    att = leave_one_out(engine)
+    loo_wall = time.monotonic() - t0
+
+    stats = engine.stats
+    # One counterfactual edit per cause (drop its episodes) plus one per
+    # decision (suppress it) — each would be a fresh 4-mode campaign.
+    edits = len(att["per_cause"]) + len(att["per_decision"])
+    fresh_job_runs = edits * len(MODES) * n_jobs
+    fresh_est = edits * fresh_campaign_wall
+    reuse_ratio = fresh_job_runs / max(stats["variant_job_runs"], 1)
+    return {
+        "jobs": n_jobs,
+        "episodes": len(engine.spec.schedule),
+        "edits": edits,
+        "variants": stats["variants"],
+        "job_runs": stats["variant_job_runs"],
+        "job_runs_fresh": fresh_job_runs,
+        "reuse_ratio": round(reuse_ratio, 2),
+        "fresh_campaign_s": round(fresh_campaign_wall, 3),
+        "loo_wall_s": round(loo_wall, 3),
+        "fresh_est_s": round(fresh_est, 3),
+        "wall_speedup": round(fresh_est / max(loo_wall, 1e-9), 2),
+    }
+
+
+def run(smoke: bool = False) -> list[dict]:
+    max_ticks = 160 if smoke else None
+    sizes = (2,) if smoke else FLEET_SIZES
+    rows = [_measure(n, max_ticks) for n in sizes]
+    for row in rows:
+        # The whole point of replay: reusing the recorded baseline must
+        # beat fresh re-runs on work actually executed.
+        assert row["reuse_ratio"] > 1.5, (
+            f"replay reuse did not pay at {row['jobs']} jobs: {row}"
+        )
+    save_rows("whatif_replay", rows)
+    return rows
+
+
+if __name__ == "__main__":
+    print_table("What-if replay cost vs fresh re-runs", run())

@@ -16,9 +16,10 @@ sources — see docs/control_plane.md.
 """
 from __future__ import annotations
 
-from dataclasses import dataclass, field
+import enum
+from dataclasses import dataclass, field, fields
 
-from repro.core.events import ChangePoint, FailSlowEvent, StrategyKey
+from repro.core.events import ChangePoint, FailSlowEvent, StrategyKey, strategy_label
 
 
 @dataclass(frozen=True)
@@ -142,7 +143,58 @@ class MitigationResult(ControlEvent):
     strategy: StrategyKey | None
     applied: bool
     overhead: float = 0.0
-    kind: str = "mitigate"  # "mitigate" | "relief" | "error"
+    kind: str = "mitigate"  # "mitigate" | "relief" | "error" | "suppressed"
     detail: dict = field(default_factory=dict)
     status: str = "ok"  # "ok" | "failed" | "timed_out" | "rolled_back"
     attempt: int = 1
+
+
+# --------------------------------------------------------- serialization
+def _jsonify(value):
+    """Deterministic JSON-safe view of an event field value.
+
+    Floats are rounded (fixed precision keeps committed logs byte-stable
+    across platforms), numpy scalars are unwrapped, enums become their
+    labels, and nested dataclasses recurse through :func:`event_record`'s
+    field walk.
+    """
+    if isinstance(value, enum.Enum):
+        return strategy_label(value) if value.__class__.__name__ == "Strategy" \
+            else value.value
+    if isinstance(value, bool) or value is None or isinstance(value, (int, str)):
+        return value
+    if isinstance(value, float):
+        return round(float(value), 6)
+    if hasattr(value, "item") and not isinstance(value, (list, tuple, dict)):
+        return _jsonify(value.item())  # numpy scalar
+    if isinstance(value, dict):
+        return {str(k): _jsonify(v) for k, v in sorted(value.items(), key=lambda kv: str(kv[0]))}
+    if isinstance(value, (list, tuple, set, frozenset)):
+        seq = sorted(value, key=str) if isinstance(value, (set, frozenset)) else value
+        return [_jsonify(v) for v in seq]
+    if hasattr(value, "__dataclass_fields__"):
+        return {
+            f.name: _jsonify(getattr(value, f.name))
+            for f in fields(value)
+        }
+    return str(value)
+
+
+def event_record(ev: ControlEvent) -> dict:
+    """One control-plane event as a deterministic, JSON-safe dict.
+
+    The replayable fleet event log: a campaign report that stores
+    ``[event_record(e) for e in plane.events]`` carries every flag,
+    diagnosis, action, and result with timestamps, which is sufficient
+    input for the what-if engine (:mod:`repro.whatif`) to rebuild the
+    decision schedule without re-running the campaign. ``type`` is the
+    event class name; strategy keys serialize via
+    :func:`~repro.core.events.strategy_label` so enum and string-keyed
+    strategies round-trip uniformly. :class:`Observation` events are the
+    caller's to filter — at fleet scale they dominate the log but carry
+    no decision, so the campaign scorer drops them.
+    """
+    rec = {"type": type(ev).__name__}
+    for f in fields(ev):
+        rec[f.name] = _jsonify(getattr(ev, f.name))
+    return rec

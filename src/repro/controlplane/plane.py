@@ -34,7 +34,7 @@ import numpy as np
 from repro.core.detector import FalconDetect, FleetDetect, Watchdog
 from repro.core.duration import DurationModel
 from repro.core.events import ChangePoint, FailSlowEvent, Strategy, StrategyKey
-from repro.core.planner import MitigationPlanner
+from repro.core.planner import MitigationPlanner, PlannerKnobs
 from repro.controlplane.events import (
     ControlEvent,
     Diagnosis,
@@ -145,6 +145,8 @@ class ControlPlane:
         executor_policy: ExecutorPolicy | None = None,
         executor_faults: Callable | None = None,
         watchdog: Watchdog | None = None,
+        decision_hook: object | None = None,
+        planner_knobs: PlannerKnobs | None = None,
     ) -> None:
         self._jobs: dict[str, JobHandle] = {}
         self._fleet: FleetDetect | None = None
@@ -157,6 +159,19 @@ class ControlPlane:
         self.executor_faults = executor_faults
         #: heartbeat watchdog over every registered job's sample stream
         self.watchdog = watchdog or Watchdog()
+        #: counterfactual decision intercept (repro.whatif replay contract):
+        #: any object implementing a subset of
+        #:   allow(job_id, strategy, now) -> bool       (False = suppress)
+        #:   allow_relief(job_id, now) -> bool          (False = no relief)
+        #:   forced(job_id, now) -> list[StrategyKey]   (dispatch these now)
+        #: A suppressed decision emits a kind="suppressed" MitigationResult
+        #: and neither touches the adapter nor consumes executor-fault
+        #: randomness, so suppressing every decision replays the unmitigated
+        #: run bit-exactly. None = every decision passes through.
+        self.decision_hook = decision_hook
+        #: planner knob bundle applied to every planner this plane builds
+        #: (the what-if auto-tuner's injection point); None = defaults
+        self.planner_knobs = planner_knobs
         #: last ScreenTuning payload mirrored into the event log
         self._last_tuning: dict | None = None
         #: fleet-shared fault-duration survival curves: every job's
@@ -519,11 +534,21 @@ class ControlPlane:
                 work_remaining=job.work_remaining,
                 incident_gap=self.incident_gap,
                 exclude=exclude or None,
+                knobs=self.planner_knobs,
             )
         active = job.detector.active_event
         if active is None:
             if had_active:
-                out += self._relief(job, now)
+                if self._hook_allow_relief(job.job_id, now):
+                    out += self._relief(job, now)
+                else:
+                    out.append(
+                        MitigationResult(
+                            job_id=job.job_id, time=now, strategy=None,
+                            applied=False, kind="suppressed", status="ok",
+                            detail={"relief": True},
+                        )
+                    )
             job.planner = None
             self._active_diag.pop(job.job_id, None)
         elif job.planner is not None:
@@ -537,14 +562,49 @@ class ControlPlane:
                 slow_iters=weight, current_time=iter_time
             )
             if strategy is not None:
+                if self._hook_allow(job.job_id, strategy, now):
+                    out.append(
+                        MitigationAction(
+                            job_id=job.job_id, time=now, strategy=strategy,
+                            event=active,
+                        )
+                    )
+                    out += self._execute(job, strategy, active, now)
+                else:
+                    # Counterfactually suppressed: the decision is recorded
+                    # (the ladder still advances past this rung) but nothing
+                    # is dispatched — no adapter mutation, no overhead, no
+                    # executor-fault draw.
+                    out.append(
+                        MitigationResult(
+                            job_id=job.job_id, time=now, strategy=strategy,
+                            applied=False, kind="suppressed", status="ok",
+                            detail={"event_start": active.start_time},
+                        )
+                    )
+        if active is not None:
+            for forced in self._hook_forced(job.job_id, now):
                 out.append(
                     MitigationAction(
-                        job_id=job.job_id, time=now, strategy=strategy,
+                        job_id=job.job_id, time=now, strategy=forced,
                         event=active,
                     )
                 )
-                out += self._execute(job, strategy, active, now)
+                out += self._execute(job, forced, active, now)
         return out
+
+    # -- counterfactual decision intercept -------------------------------
+    def _hook_allow(self, job_id: str, strategy: StrategyKey, now: float) -> bool:
+        fn = getattr(self.decision_hook, "allow", None)
+        return True if fn is None else bool(fn(job_id, strategy, now))
+
+    def _hook_allow_relief(self, job_id: str, now: float) -> bool:
+        fn = getattr(self.decision_hook, "allow_relief", None)
+        return True if fn is None else bool(fn(job_id, now))
+
+    def _hook_forced(self, job_id: str, now: float) -> list[StrategyKey]:
+        fn = getattr(self.decision_hook, "forced", None)
+        return [] if fn is None else list(fn(job_id, now))
 
     # -- fault-tolerant executor ---------------------------------------
     def _snapshot(self, job: JobHandle) -> dict:

@@ -48,7 +48,7 @@ from repro.core import topology as topo_lib
 from repro.core.duration import DurationModel
 from repro.core.events import FailSlowEvent, RootCause, Strategy, StrategyKey
 from repro.core.placement import PlacementPlanner, slow_devices_for
-from repro.core.planner import DEFAULT_OVERHEADS, MitigationPlanner
+from repro.core.planner import DEFAULT_OVERHEADS, MitigationPlanner, PlannerKnobs
 
 #: default wall-clock overheads of the placement rungs: a group re-shape
 #: exchanges optimizer/parameter shards between the swapped ranks —
@@ -561,6 +561,7 @@ class StrategyRegistry:
         work_remaining: Callable[[], float] | None = None,
         incident_gap: Callable[[], float] | None = None,
         exclude: Collection[StrategyKey] | None = None,
+        knobs: PlannerKnobs | None = None,
     ) -> MitigationPlanner:
         cands = self.candidates(event)
         if exclude:
@@ -572,6 +573,7 @@ class StrategyRegistry:
             estimator=estimator,
             work_remaining=work_remaining,
             incident_gap=incident_gap,
+            knobs=knobs,
         )
 
     def dispatch(self, key: StrategyKey, ctx: MitigationContext) -> StrategyOutcome:

@@ -84,6 +84,44 @@ DEFAULT_OVERHEADS: dict[Strategy, float] = {
 }
 
 
+@dataclass(frozen=True)
+class PlannerKnobs:
+    """The planner's externally settable break-even surface.
+
+    One frozen bundle of every tunable the ski-rental rule exposes, so a
+    control plane (or the what-if knob auto-tuner,
+    :mod:`repro.whatif.tuning`) can sweep them without touching planner
+    internals. Defaults reproduce the shipped behavior exactly.
+
+    * ``prediction_lambda`` / ``prediction_margin`` — the predictive
+      two-zone break-even's trust factor and required benefit/overhead
+      ratio (see the module docstring).
+    * ``breakeven_scale`` — a global multiplier on every rung's escalation
+      threshold: < 1 escalates earlier than the classic rule (aggressive),
+      > 1 holds out longer (conservative). It scales the *threshold* the
+      accumulated impact is compared against, so it composes with both the
+      classic and the predictive rules.
+    """
+
+    prediction_lambda: float = 0.25
+    prediction_margin: float = 1.5
+    breakeven_scale: float = 1.0
+
+    def replaced(self, **overrides) -> "PlannerKnobs":
+        from dataclasses import replace
+
+        return replace(self, **overrides)
+
+
+#: knob name -> (lower bound, upper bound, search on log scale) — the
+#: domain the auto-tuner may explore (values outside are planner abuse)
+KNOB_BOUNDS: dict[str, tuple[float, float, bool]] = {
+    "prediction_lambda": (0.05, 1.0, False),
+    "prediction_margin": (1.0, 3.0, False),
+    "breakeven_scale": (0.25, 4.0, True),
+}
+
+
 @dataclass
 class MitigationPlanner:
     """Stateful Algorithm 1 for one fail-slow event.
@@ -119,6 +157,12 @@ class MitigationPlanner:
     #: required benefit/overhead ratio (>= 1) before the prediction is
     #: trusted enough to escalate early
     prediction_margin: float = 1.5
+    #: global multiplier on every rung's escalation threshold (see
+    #: :class:`PlannerKnobs.breakeven_scale`); 1.0 = shipped behavior
+    breakeven_scale: float = 1.0
+    #: optional knob bundle; when given its values override the three
+    #: scalar fields above (one injection point for the auto-tuner)
+    knobs: PlannerKnobs | None = None
 
     _candidates: list[StrategyKey] = field(init=False)
     _id: int = field(init=False, default=0)
@@ -129,6 +173,10 @@ class MitigationPlanner:
     applied: list[StrategyKey] = field(init=False, default_factory=list)
 
     def __post_init__(self) -> None:
+        if self.knobs is not None:
+            self.prediction_lambda = self.knobs.prediction_lambda
+            self.prediction_margin = self.knobs.prediction_margin
+            self.breakeven_scale = self.knobs.breakeven_scale
         cands = (
             list(self.candidates)
             if self.candidates is not None
@@ -184,12 +232,17 @@ class MitigationPlanner:
         return None
 
     def _threshold(self, nxt: StrategyKey, delta: float, t_now: float) -> float:
-        """Escalation threshold for the next rung (see module docstring)."""
+        """Escalation threshold for the next rung (see module docstring).
+
+        Every branch's result is scaled by ``breakeven_scale``: the knob
+        moves the whole break-even surface, not one rule's corner case.
+        """
+        scale = max(self.breakeven_scale, 1e-3)
         overhead = self.overheads[nxt]
         if getattr(self.event, "hang", False) and overhead > 0.0:
-            return self._hang_threshold(nxt, overhead, delta, t_now)
+            return scale * self._hang_threshold(nxt, overhead, delta, t_now)
         if self.estimator is None or overhead <= 0.0:
-            return overhead
+            return scale * overhead
         # Residual excess per wall-clock second if we stop here — the live
         # measurement, consistent with the paper's "current strategy
         # proves ineffective" escalation condition.
@@ -207,7 +260,9 @@ class MitigationPlanner:
         benefit = window * rate
         lam = min(max(self.prediction_lambda, 1e-3), 1.0)
         margin = max(self.prediction_margin, 1.0)
-        return overhead * lam if benefit > overhead * margin else overhead / lam
+        return scale * (
+            overhead * lam if benefit > overhead * margin else overhead / lam
+        )
 
     def _hang_threshold(
         self, nxt: StrategyKey, overhead: float, delta: float, t_now: float

@@ -57,29 +57,58 @@ def _dig(report: dict, path: tuple[str, ...]):
     return node
 
 
+def _stats(vals: list[float]) -> dict:
+    """Mean and 95 % CI (normal approximation) of one metric's samples."""
+    if not vals:
+        return {"mean": None, "ci95": None, "n": 0}
+    mean = sum(vals) / len(vals)
+    if len(vals) > 1:
+        var = sum((v - mean) ** 2 for v in vals) / (len(vals) - 1)
+        ci = 1.96 * math.sqrt(var / len(vals))
+    else:
+        ci = 0.0
+    return {
+        "mean": round(mean, 4),
+        "ci95": round(ci, 4),
+        "n": len(vals),
+        "values": [round(v, 4) for v in vals],
+    }
+
+
 def aggregate(per_seed: list[dict]) -> dict:
-    """Mean and 95 % CI (normal approximation) per metric across seeds."""
-    out: dict[str, dict] = {}
-    for name, path in METRICS:
-        vals = [
+    """Mean and 95 % CI per metric across seeds."""
+    return {
+        name: _stats([
             v for v in (_dig(r, path) for r in per_seed) if v is not None
-        ]
-        if not vals:
-            out[name] = {"mean": None, "ci95": None, "n": 0}
-            continue
-        mean = sum(vals) / len(vals)
-        if len(vals) > 1:
-            var = sum((v - mean) ** 2 for v in vals) / (len(vals) - 1)
-            ci = 1.96 * math.sqrt(var / len(vals))
-        else:
-            ci = 0.0
-        out[name] = {
-            "mean": round(mean, 4),
-            "ci95": round(ci, 4),
-            "n": len(vals),
-            "values": [round(v, 4) for v in vals],
-        }
-    return out
+        ])
+        for name, path in METRICS
+    }
+
+
+def _per_cause_of(report: dict) -> dict[str, float | None]:
+    """cause -> %-mitigated estimate from one report (may be empty for
+    old-format reports that predate the per_cause section)."""
+    table = report.get("mitigation", {}).get("per_cause", {})
+    return {c: row.get("mitigated_pct") for c, row in table.items()}
+
+
+def aggregate_per_cause(per_seed: list[dict]) -> dict[str, dict]:
+    """Across-seed stats of the per-cause %-mitigated columns.
+
+    Causes vary by seed (a seed may draw no NIC episode), so each cause
+    aggregates over the seeds where it occurred — ``n`` says how many.
+    Attribution deltas across seeds are only meaningful with this split:
+    the scalar mean hides a regression that costs 10 points on
+    ``network_congestion`` but is washed out by GPU-heavy seeds.
+    """
+    causes = sorted({c for r in per_seed for c in _per_cause_of(r)})
+    return {
+        c: _stats([
+            v for v in (_per_cause_of(r).get(c) for r in per_seed)
+            if v is not None
+        ])
+        for c in causes
+    }
 
 
 def run_sweep(
@@ -102,6 +131,7 @@ def run_sweep(
         "seeds": seeds,
         "max_ticks": max_ticks,
         "metrics": aggregate(per_seed),
+        "per_cause_mitigated_pct": aggregate_per_cause(per_seed),
         "per_seed": [
             {
                 "seed": r["campaign"]["seed"],
@@ -109,6 +139,7 @@ def run_sweep(
                     name: _dig(r, path)
                     for name, path in METRICS
                 },
+                "per_cause_mitigated_pct": _per_cause_of(r),
             }
             for r in per_seed
         ],
@@ -148,6 +179,13 @@ def sweep_table(sweep: dict) -> str:
         mean = "-" if m["mean"] is None else f"{m['mean']:.3f}"
         ci = "-" if m["ci95"] is None else f"{m['ci95']:.3f}"
         lines.append(f"{name:<28}{mean:>10}{ci:>9}{m['n']:>4}")
+    per_cause = sweep.get("per_cause_mitigated_pct", {})
+    for cause, m in sorted(per_cause.items()):
+        mean = "-" if m["mean"] is None else f"{m['mean']:.3f}"
+        ci = "-" if m["ci95"] is None else f"{m['ci95']:.3f}"
+        lines.append(
+            f"{'mitigated% ' + cause:<28}{mean:>10}{ci:>9}{m['n']:>4}"
+        )
     lines += ["", f"{'seed':<6}" + "".join(
         f"{name[:14]:>16}" for name, _ in METRICS
     )]

@@ -379,14 +379,71 @@ def _registry_for(mode: str):
     )
 
 
-def run_campaign(spec: CampaignSpec, mode: str) -> RunResult:
-    """Execute one campaign under the given mitigation mode."""
+def run_campaign(
+    spec: CampaignSpec,
+    mode: str,
+    *,
+    drop_episodes=None,
+    decision_hook=None,
+    planner_knobs=None,
+    only_jobs=None,
+) -> RunResult:
+    """Execute one campaign under the given mitigation mode.
+
+    The keyword surface is the what-if engine's replay contract
+    (:mod:`repro.whatif`, docs/whatif.md):
+
+    * ``drop_episodes`` — global schedule indices to remove before the run
+      (counterfactual "what if this fault never happened"). Dropping every
+      episode reproduces the ``healthy`` run bit-exactly: the per-job rng
+      streams depend only on (seed, job) and an empty injector leaves the
+      simulator state untouched.
+    * ``decision_hook`` — forwarded to :class:`ControlPlane`: suppress /
+      force individual mitigation decisions (see the plane's hook
+      contract). Suppressing everything reproduces the ``faults`` run
+      bit-exactly for the same reason.
+    * ``planner_knobs`` — a :class:`~repro.core.planner.PlannerKnobs`
+      bundle applied to every planner the plane builds (the auto-tuner's
+      injection point).
+    * ``only_jobs`` — run just these job ids. Valid only for the
+      plane-less modes (``healthy`` / ``faults``), where jobs never
+      interact: each job's trajectory there is bit-identical whether or
+      not its neighbours run, which is what makes affected-jobs-only
+      replay exact and cheap.
+    """
     if mode not in MODES:
         raise ValueError(f"mode must be one of {MODES}, got {mode!r}")
     preset = spec.preset
     dt = preset.tick_seconds
     with_faults = mode != "healthy"
     with_plane = mode in ("ckpt", "falcon")
+    campaign_jobs = spec.jobs
+    if only_jobs is not None:
+        if with_plane:
+            raise ValueError(
+                "only_jobs is exact only for plane-less modes: under a "
+                "control plane jobs couple through dedupe, the shared "
+                "duration model, and the incident gap"
+            )
+        keep = set(only_jobs)
+        campaign_jobs = tuple(j for j in campaign_jobs if j.job_id in keep)
+    drop = frozenset(drop_episodes or ())
+    if drop:
+        campaign_jobs = tuple(
+            replace(
+                p,
+                local_schedule=tuple(
+                    l for l, g in zip(p.local_schedule, p.global_ids)
+                    if g not in drop
+                ),
+                impacts=tuple(
+                    i for i, g in zip(p.impacts, p.global_ids)
+                    if g not in drop
+                ),
+                global_ids=tuple(g for g in p.global_ids if g not in drop),
+            )
+            for p in campaign_jobs
+        )
     plane = None
     if with_plane:
         # Only the full FALCON mode gets the predictive ski-rental horizon;
@@ -400,10 +457,12 @@ def run_campaign(spec: CampaignSpec, mode: str) -> RunResult:
                 ExecutorFaultModel(fail_p, timeout_p, seed=spec.seed)
                 if fail_p > 0.0 or timeout_p > 0.0 else None
             ),
+            decision_hook=decision_hook,
+            planner_knobs=planner_knobs,
         )
 
     pending = sorted(
-        spec.jobs, key=lambda j: (j.join_tick, int(j.job_id[1:]))
+        campaign_jobs, key=lambda j: (j.join_tick, int(j.job_id[1:]))
     )
     live: dict[str, dict] = {}
     outcomes: dict[str, JobOutcome] = {}

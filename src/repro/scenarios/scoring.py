@@ -35,7 +35,9 @@ from repro.controlplane import (
     Diagnosis,
     Membership,
     MitigationResult,
+    Observation,
     WatchdogAlarm,
+    event_record,
 )
 from repro.core.detector import FalconDetect, FleetDetect
 from repro.core.events import RootCause
@@ -296,6 +298,11 @@ def score_campaign(
     falcon_recovered = 0.0
     ckpt_recovered = 0.0
     delay_pcts: list[float] = []
+    #: cause -> apportioned [slowdown_s, mitigated_s] (estimates: each
+    #: job's JCT gap is split over its episodes by impact x lifetime
+    #: overlap; the what-if engine's leave-one-out attribution is the
+    #: counterfactual ground truth these estimates approximate)
+    cause_split: dict[str, list[float]] = {}
     for placed in spec.jobs:
         jcts = {
             mode: runs[mode].outcomes[placed.job_id].jct(horizon)
@@ -311,6 +318,24 @@ def score_campaign(
             gap_total += gap
             falcon_recovered += mitigated
             ckpt_recovered += mitigated_ckpt
+            out_f = runs["faults"].outcomes[placed.job_id]
+            end_f = (
+                out_f.end_time if out_f.end_time is not None else horizon
+            )
+            weights: list[tuple[str, float]] = []
+            for local, impact in zip(placed.local_schedule, placed.impacts):
+                overlap = max(
+                    0.0, min(local.end, end_f) - max(local.start, out_f.join_time)
+                )
+                w = impact * overlap
+                if w > 0.0:
+                    weights.append((KIND_CAUSE[local.kind].value, w))
+            total_w = sum(w for _, w in weights)
+            for cause, w in weights:
+                share = w / total_w if total_w > 0 else 0.0
+                acc = cause_split.setdefault(cause, [0.0, 0.0])
+                acc[0] += gap * share
+                acc[1] += mitigated * share
         delay_pct = 100.0 * (jcts["falcon"] - jcts["healthy"]) / jcts["healthy"]
         delay_pcts.append(delay_pct)
         t = placed.template
@@ -357,6 +382,14 @@ def score_campaign(
         ) if delay_pcts else None,
         "paper_slowdown_mitigated_pct": 60.1,
         "paper_avg_jct_delay_pct": 1.34,
+        "per_cause": {
+            cause: {
+                "slowdown_s": round(g, 2),
+                "mitigated_s": round(m, 2),
+                "mitigated_pct": round(100.0 * m / g, 2) if g > 1e-9 else None,
+            }
+            for cause, (g, m) in sorted(cause_split.items())
+        },
     }
 
     # ---------------------------------------------------- robustness
@@ -505,6 +538,15 @@ def score_campaign(
         for ev in falcon.events
         if isinstance(ev, Membership)
     ]
+    # The replayable fleet event log (what-if input): every falcon-run
+    # flag, diagnosis, action and result, with timestamps. Observations
+    # are dropped — they dominate the log (one per job per tick) and the
+    # replay re-derives them from (preset, seed) anyway.
+    event_log = [
+        event_record(ev)
+        for ev in falcon.events
+        if not isinstance(ev, Observation)
+    ]
     event_counts: dict[str, int] = {}
     for ev in falcon.events:
         name = type(ev).__name__
@@ -531,6 +573,7 @@ def score_campaign(
         "jobs": job_rows,
         "injections": inj_rows,
         "membership": membership,
+        "event_log": event_log,
         "falcon_event_counts": dict(sorted(event_counts.items())),
     }
 

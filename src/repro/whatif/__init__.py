@@ -1,0 +1,26 @@
+"""What-if engine: counterfactual replay, attribution, knob auto-tuning.
+
+    engine = WhatIfEngine.from_preset("mixed_fleet", n_jobs=8, seed=0)
+    attribution = leave_one_out(engine)      # per-cause / per-decision
+    tuned = tune([engine])                   # planner knob auto-tuning
+
+Built on the deterministic campaign runner's replay contract (see
+docs/whatif.md): a recorded campaign can be re-run with a fault episode
+removed, a decision suppressed or forced, or different planner knobs,
+and every outcome difference is attributable to that edit alone.
+CLI: ``python -m repro.launch.whatif``.
+"""
+from repro.whatif.attribution import leave_one_out, shapley  # noqa: F401
+from repro.whatif.replay import (  # noqa: F401
+    DecisionRef,
+    DecisionScript,
+    Variant,
+    WhatIfEngine,
+    decisions_of,
+)
+from repro.whatif.tuning import (  # noqa: F401
+    objective,
+    tune,
+    tune_knob,
+    write_tuning,
+)

@@ -1,0 +1,260 @@
+"""What-if engine: counterfactual invariants, attribution, knob tuning.
+
+The replay contract is exactness, so the tests pin bit-equality, not
+tolerances, wherever the design promises it: removing every fault
+reproduces the healthy run, suppressing every decision reproduces the
+faults run, and a default knob bundle reproduces the shipped falcon run.
+Attribution reconciliation is pinned on a two-episode toy preset whose
+episodes hit disjoint jobs — there the leave-one-out deltas must sum to
+the totals (no interaction to leave in the residual).
+"""
+import json
+
+import pytest
+
+from repro.cluster.injector import Injection, InjectionKind
+from repro.core.events import FailSlowEvent, RootCause, Strategy
+from repro.core.planner import KNOB_BOUNDS, MitigationPlanner, PlannerKnobs
+from repro.scenarios.campaign import build_campaign, run_campaign
+from repro.scenarios.presets import JobTemplate, ScenarioPreset
+from repro.scenarios.scoring import run_and_score
+from repro.whatif import (
+    DecisionRef,
+    DecisionScript,
+    Variant,
+    WhatIfEngine,
+    decisions_of,
+    leave_one_out,
+    shapley,
+    tune,
+)
+
+
+def _toy_preset(max_ticks=260):
+    """Two jobs, one clean GPU_SLOW episode each (disjoint slices)."""
+    return ScenarioPreset(
+        name="toy_whatif",
+        description="what-if tier-1: two jobs, one disjoint fault each",
+        n_nodes=2, gpus_per_node=4, tick_seconds=5.0, max_ticks=max_ticks,
+        default_jobs=2, join_spread_ticks=30,
+        job_templates=(
+            JobTemplate("yi-9b", tp=1, dp=2, pp=2, micro_batches=8),
+        ),
+        fixed_schedule=lambda n_nodes, gpn, dt: [
+            Injection(100 * dt, 100 * dt, InjectionKind.GPU_SLOW, (1,), 0.5),
+            Injection(120 * dt, 90 * dt, InjectionKind.GPU_SLOW, (5,), 0.6),
+        ],
+    )
+
+
+def _outcome_tuple(out):
+    return (
+        out.join_time, out.end_time, out.iters_done, out.steps,
+        out.overhead_paid, out.stalled_ticks,
+    )
+
+
+@pytest.fixture(scope="module")
+def toy_engine():
+    return WhatIfEngine(build_campaign(_toy_preset(), n_jobs=2, seed=0))
+
+
+# ------------------------------------------------------ replay invariants
+def test_drop_all_faults_reproduces_healthy_bitexact(toy_engine):
+    spec = toy_engine.spec
+    drop = frozenset(range(len(spec.schedule)))
+    dropped = run_campaign(spec, "faults", drop_episodes=drop)
+    healthy = toy_engine.baseline["healthy"]
+    assert set(dropped.outcomes) == set(healthy.outcomes)
+    for job_id, out in healthy.outcomes.items():
+        assert _outcome_tuple(dropped.outcomes[job_id]) == _outcome_tuple(out)
+
+
+def test_suppress_all_decisions_reproduces_faults_bitexact(toy_engine):
+    spec = toy_engine.spec
+    script = DecisionScript(suppress_all=True)
+    suppressed = run_campaign(spec, "falcon", decision_hook=script)
+    faults = toy_engine.baseline["faults"]
+    for job_id, out in faults.outcomes.items():
+        assert _outcome_tuple(suppressed.outcomes[job_id]) == _outcome_tuple(out)
+    # The decisions were made and recorded as suppressed, not never-planned.
+    assert script.hits
+    from repro.controlplane import MitigationResult
+    kinds = {
+        ev.kind for ev in suppressed.events
+        if isinstance(ev, MitigationResult)
+    }
+    assert "suppressed" in kinds and "mitigate" not in kinds
+
+
+def test_default_knobs_reproduce_falcon_bitexact(toy_engine):
+    spec = toy_engine.spec
+    run = run_campaign(spec, "falcon", planner_knobs=PlannerKnobs())
+    falcon = toy_engine.baseline["falcon"]
+    for job_id, out in falcon.outcomes.items():
+        assert _outcome_tuple(run.outcomes[job_id]) == _outcome_tuple(out)
+
+
+def test_faults_replay_only_affected_jobs_is_exact(toy_engine):
+    spec = toy_engine.spec
+    # Episode 1 touches only j1: dropping it must leave j0's faults
+    # outcome byte-identical, via the affected-jobs-only merge.
+    variant = Variant(drop_episodes=frozenset({1}))
+    assert toy_engine.affected_jobs(frozenset({1})) == ["j1"]
+    merged = toy_engine.run_variant("faults", variant)
+    full = run_campaign(spec, "faults", drop_episodes={1})
+    for job_id in full.outcomes:
+        assert _outcome_tuple(merged.outcomes[job_id]) == _outcome_tuple(
+            full.outcomes[job_id]
+        )
+    # Only one job was re-run for the variant.
+    assert toy_engine.stats["variant_job_runs"] <= 1 + 0 * len(spec.jobs)
+
+
+def test_suppressing_one_decision_is_targeted(toy_engine):
+    falcon = toy_engine.baseline["falcon"]
+    refs = [d for d in decisions_of(falcon) if d.strategy != "IGNORE"]
+    assert refs
+    ref = refs[0]
+    sup = toy_engine.run_variant("falcon", Variant(suppress=(ref,)))
+    horizon = falcon.horizon_s
+    # The suppressed job's JCT worsens (or stays); the other job, whose
+    # fault is disjoint, keeps its falcon outcome bit-exactly.
+    other = [j for j in sup.outcomes if j != ref.job_id]
+    for job_id in other:
+        assert _outcome_tuple(sup.outcomes[job_id]) == _outcome_tuple(
+            falcon.outcomes[job_id]
+        )
+    assert (
+        sup.outcomes[ref.job_id].jct(horizon)
+        >= falcon.outcomes[ref.job_id].jct(horizon)
+    )
+
+
+def test_forced_decision_dispatches(toy_engine):
+    from repro.controlplane import MitigationAction
+    falcon = toy_engine.baseline["falcon"]
+    refs = [d for d in decisions_of(falcon) if d.strategy != "IGNORE"]
+    ref = refs[0]
+    # Move the decision 10 ticks later: suppress the original, force a
+    # copy. The forced dispatch must appear in the event log at >= t.
+    moved = DecisionRef(
+        job_id=ref.job_id, strategy=ref.strategy, time=ref.time + 50.0
+    )
+    run = toy_engine.run_variant(
+        "falcon", Variant(suppress=(ref,), force=(moved,))
+    )
+    forced_times = [
+        ev.time for ev in run.events
+        if isinstance(ev, MitigationAction)
+        and ev.job_id == ref.job_id
+        and ev.strategy in (Strategy.__members__.get(ref.strategy), ref.strategy)
+        and ev.time >= moved.time
+    ]
+    assert forced_times, "forced decision never dispatched"
+
+
+# ------------------------------------------------------------ attribution
+def test_loo_deltas_reconcile_on_disjoint_episodes(toy_engine):
+    att = leave_one_out(toy_engine)
+    totals = att["totals"]
+    assert totals["gap_s"] > 0
+    # Disjoint episodes on disjoint jobs: LOO is exactly additive, the
+    # interaction residual must vanish (tolerance = rounding only).
+    assert abs(att["per_cause_residual_s"]) < 1e-6 * max(totals["gap_s"], 1.0) + 1e-3
+    assert (
+        abs(att["per_cause_mitigated_residual_s"])
+        < 1e-6 * max(abs(totals["mitigated_s"]), 1.0) + 1e-3
+    )
+    # Per-decision values reconcile with the total mitigated seconds.
+    tol = 0.05 * max(abs(totals["mitigated_s"]), 1.0) + 1e-3
+    assert abs(att["per_decision_residual_s"]) <= tol
+    assert json.dumps(att, sort_keys=True)  # deterministic artifact shape
+
+
+def test_loo_is_deterministic(toy_engine):
+    a = leave_one_out(toy_engine)
+    b = leave_one_out(toy_engine)
+    assert json.dumps(a, sort_keys=True) == json.dumps(b, sort_keys=True)
+    # Second pass is served from the variant cache: no extra replays.
+    assert toy_engine.stats["cache_hits"] > 0
+
+
+def test_shapley_distributes_total_gap(toy_engine):
+    sh = shapley(toy_engine, permutations=4)
+    assert abs(sh["residual_s"]) < 1e-3
+    assert set(sh["per_episode"]) == {"0", "1"}
+    total = sum(r["slowdown_s"] for r in sh["per_episode"].values())
+    assert total == pytest.approx(sh["total_gap_s"], abs=1e-3)
+    for row in sh["per_episode"].values():
+        assert row["slowdown_s"] >= 0
+
+
+# ----------------------------------------------------------- knob surface
+def test_breakeven_scale_scales_thresholds():
+    event = FailSlowEvent(
+        start_time=0.0, root_cause=RootCause.GPU_DEGRADATION,
+        t_healthy=1.0, t_slow=2.0,
+    )
+    base = MitigationPlanner(event)
+    scaled = MitigationPlanner(event, knobs=PlannerKnobs(breakeven_scale=2.0))
+    nxt = Strategy.ADJUST_MICROBATCH
+    assert scaled._threshold(nxt, 1.0, 10.0) == pytest.approx(
+        2.0 * base._threshold(nxt, 1.0, 10.0)
+    )
+    # The knob bundle overrides the scalar fields.
+    assert scaled.breakeven_scale == 2.0
+    assert base._threshold(nxt, 1.0, 10.0) == pytest.approx(
+        base.overheads[nxt]
+    )
+
+
+def test_knob_bounds_cover_all_knobs():
+    assert set(KNOB_BOUNDS) == set(PlannerKnobs().__dataclass_fields__)
+
+
+def test_tuner_gain_is_non_negative(toy_engine):
+    result = tune([toy_engine], knob_names=("breakeven_scale",), iters=4)
+    assert result["gain_pct_points"] >= 0.0
+    assert result["objective_tuned_pct"] >= result["objective_default_pct"]
+    assert result["evaluations"]
+    assert json.dumps(result, sort_keys=True)
+
+
+# ----------------------------------------------------- report round-trip
+def test_from_report_roundtrip_and_verification():
+    _, _, report = run_and_score("single_gpu_throttle", n_jobs=1, seed=0)
+    engine = WhatIfEngine.from_report(report)
+    att = leave_one_out(engine)
+    # The LOO totals ARE the report's headline number.
+    assert att["totals"]["mitigated_pct"] == pytest.approx(
+        report["mitigation"]["slowdown_mitigated_pct"], abs=0.01
+    )
+    # A stale report (different JCTs) must be rejected, not replayed.
+    bad = json.loads(json.dumps(report))
+    bad["jobs"][0]["jct_s"]["falcon"] += 7.0
+    with pytest.raises(ValueError, match="divergence"):
+        WhatIfEngine.from_report(bad)
+
+
+def test_report_event_log_matches_replayed_decisions():
+    _, runs, report = run_and_score("single_gpu_throttle", n_jobs=1, seed=0)
+    logged = [
+        (e["job_id"], e["strategy"], e["time"])
+        for e in report["event_log"]
+        if e["type"] == "MitigationAction"
+    ]
+    replayed = [d.key() for d in decisions_of(runs["falcon"])]
+    assert sorted(logged) == sorted(replayed)
+    assert json.dumps(report["event_log"], sort_keys=True)
+
+
+def test_sweep_carries_per_cause_columns():
+    from repro.launch.sweep import run_sweep
+    sweep = run_sweep("single_gpu_throttle", n_jobs=1, seeds=2)
+    table = sweep["per_cause_mitigated_pct"]
+    assert "gpu_degradation" in table
+    assert table["gpu_degradation"]["n"] == 2
+    for row in sweep["per_seed"]:
+        assert "per_cause_mitigated_pct" in row
+    assert json.dumps(sweep, sort_keys=True)
