@@ -55,6 +55,7 @@ import numpy as np
 from repro.core.events import CommEvent, CommOp
 from repro.core.topology import HybridTopology
 from repro.cluster.spec import ClusterSpec, ClusterState, DirtySet, ModelSpec
+from repro.obs.collectives import CollectiveBreakdown, decompose, timing_decomposition
 
 
 @dataclass
@@ -660,6 +661,24 @@ class TrainingSimulator:
     def per_microbatch_times(self) -> list[float]:
         """Per-DP-group per-micro-batch processing time (S2 solver input)."""
         return [float(v) for v in self._cells().stage_max]
+
+    # -------------------------------------- per-collective decomposition
+    def collective_breakdown(self) -> CollectiveBreakdown:
+        """The current iteration's critical-path time split into compute /
+        TP-allreduce / PP-p2p / DP-allreduce, with the bottleneck
+        collective, profiling group and ring edge named (local ranks —
+        the same ids the detector's component validation uses). Reads the
+        cached per-cell reductions, so after an ``iteration_time()`` it
+        costs O(cells); the control plane attaches one to every onset
+        Diagnosis. See docs/observability.md for the contract.
+        """
+        return decompose(self)
+
+    def timing_decomposition(self) -> dict[str, list]:
+        """Every cell's time split as nested lists — the per-cell
+        companion of :meth:`collective_breakdown` (TP/DP entries match
+        :meth:`profile_groups` bit for bit)."""
+        return timing_decomposition(self)
 
     def healthy_iteration_time(self) -> float:
         """Iteration time with all components healthy and even allocation.

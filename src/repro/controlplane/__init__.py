@@ -20,6 +20,7 @@ from repro.controlplane.events import (  # noqa: F401
     Observation,
     ScreenTuning,
     WatchdogAlarm,
+    event_log_records,
     event_record,
 )
 from repro.controlplane.plane import (  # noqa: F401

@@ -91,12 +91,24 @@ class Diagnosis(ControlEvent):
     its hardware map (shared-hardware identity across jobs);
     ``deduped_from`` names the job whose pinpoint this diagnosis reuses —
     ``None`` when this job ran profiling + validation itself.
+
+    ``breakdown`` is the per-collective timing decomposition
+    (:class:`repro.obs.collectives.CollectiveBreakdown`) of the job's
+    iteration at diagnosis time, when the adapter can produce one — it
+    names the bottleneck collective and ring edge a hang or link fault
+    stalled. The field is *transient* (``metadata={"transient": True}``):
+    :func:`event_record` skips it, so committed campaign reports are
+    byte-stable; the observability sidecars (trace spans, metrics) carry
+    the decomposition instead. See docs/observability.md.
     """
 
     event: FailSlowEvent
     components_global: tuple[str, ...] = ()
     deduped_from: str | None = None
     resolved: bool = False
+    breakdown: object | None = field(
+        default=None, compare=False, metadata={"transient": True}
+    )
 
 
 @dataclass(frozen=True)
@@ -196,5 +208,37 @@ def event_record(ev: ControlEvent) -> dict:
     """
     rec = {"type": type(ev).__name__}
     for f in fields(ev):
+        if f.metadata.get("transient"):
+            # Observability-only payload (e.g. Diagnosis.breakdown):
+            # excluded so committed event logs stay byte-stable across
+            # the observability layer's evolution; sidecars carry it.
+            continue
         rec[f.name] = _jsonify(getattr(ev, f.name))
     return rec
+
+
+def event_log_records(
+    events, observation_stride: int = 0
+) -> list[dict]:
+    """Serialize an event stream into report-ready records.
+
+    :class:`Observation` events are elided by default — at fleet scale
+    they dominate the log (one per job per tick) and carry no decision —
+    which also blanks a dashboard's timeline lanes between flags.
+    ``observation_stride=N`` opts in to keeping every Nth Observation per
+    job: a sampled iteration-time lane dense enough to plot, cheap enough
+    to commit. ``0`` (the default) reproduces the historical
+    Observation-free log byte for byte.
+    """
+    out: list[dict] = []
+    seen: dict[str, int] = {}
+    for ev in events:
+        if isinstance(ev, Observation):
+            if observation_stride <= 0:
+                continue
+            k = seen.get(ev.job_id, 0)
+            seen[ev.job_id] = k + 1
+            if k % observation_stride:
+                continue
+        out.append(event_record(ev))
+    return out

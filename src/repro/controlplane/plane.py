@@ -33,7 +33,13 @@ import numpy as np
 
 from repro.core.detector import FalconDetect, FleetDetect, Watchdog
 from repro.core.duration import DurationModel
-from repro.core.events import ChangePoint, FailSlowEvent, Strategy, StrategyKey
+from repro.core.events import (
+    ChangePoint,
+    FailSlowEvent,
+    Strategy,
+    StrategyKey,
+    strategy_label,
+)
 from repro.core.planner import MitigationPlanner, PlannerKnobs
 from repro.controlplane.events import (
     ControlEvent,
@@ -147,6 +153,7 @@ class ControlPlane:
         watchdog: Watchdog | None = None,
         decision_hook: object | None = None,
         planner_knobs: PlannerKnobs | None = None,
+        tracer: object | None = None,
     ) -> None:
         self._jobs: dict[str, JobHandle] = {}
         self._fleet: FleetDetect | None = None
@@ -172,6 +179,13 @@ class ControlPlane:
         #: planner knob bundle applied to every planner this plane builds
         #: (the what-if auto-tuner's injection point); None = defaults
         self.planner_knobs = planner_knobs
+        #: observability span tracer (:class:`repro.obs.SpanTracer`) on the
+        #: caller's simulated clock: tick spans, watchdog silence/deadline
+        #: spans, executor attempt/retry/rollback cycles, per-job fault
+        #: episodes. None (the default) keeps the tick hot path allocation-
+        #: free — every trace call site is guarded, never stubbed.
+        self.tracer = tracer
+        self._trace_prev: float | None = None
         #: last ScreenTuning payload mirrored into the event log
         self._last_tuning: dict | None = None
         #: fleet-shared fault-duration survival curves: every job's
@@ -248,6 +262,10 @@ class ControlPlane:
         job = self._jobs.pop(job_id)
         self._active_diag.pop(job_id, None)
         self.watchdog.forget(job_id)
+        if self.tracer is not None:
+            # A job leaving with an open fault episode censors the span at
+            # departure time; its other tracks hold no open spans.
+            self.tracer.close_track((job_id, "faults"), now)
         col = job._fleet_col
         if self._fleet is not None and col is not None:
             self._fleet.remove_worker(col)
@@ -310,6 +328,16 @@ class ControlPlane:
         hang mitigation ladder.
         """
         jobs = list(self._jobs.values())
+        tr = self.tracer
+        if tr is not None:
+            # The tick span covers the sampling interval it processes:
+            # [previous tick, now] on the fleet track.
+            prev = self._trace_prev
+            tr.begin(
+                ("fleet", "controlplane"), "tick",
+                prev if prev is not None and prev < now else now,
+            )
+            self._trace_prev = now
         if self._fleet is None:
             self._fleet = FleetDetect(n_workers=len(jobs), **self._fleet_kwargs)
             for col, job in enumerate(jobs):
@@ -356,6 +384,10 @@ class ControlPlane:
                     )
                 )
                 job.steps += 1
+                if tr is not None and (job.steps - 1) % tr.counter_stride == 0:
+                    tr.counter(
+                        (job.job_id, "iter_time"), "iter_time", now, iter_time
+                    )
                 job._last_sample = iter_time
                 job._last_seen = now
                 job._alarmed = False
@@ -373,6 +405,15 @@ class ControlPlane:
                     out.append(
                         Flag(job_id=job.job_id, time=now, change_point=cp)
                     )
+                    if tr is not None:
+                        tr.instant(
+                            (job.job_id, "detector"), "flag", now,
+                            args={
+                                "probability": cp.probability,
+                                "mean_before": cp.mean_before,
+                                "mean_after": cp.mean_after,
+                            },
+                        )
                     source = None
                     if (
                         cp.relative_change > 0
@@ -425,6 +466,11 @@ class ControlPlane:
                 flags=tuning["flags"],
                 worker_ticks=tuning["worker_ticks"],
             ))
+        if tr is not None:
+            tr.end(
+                ("fleet", "controlplane"), now,
+                args={"jobs": len(jobs), "events": len(out)},
+            )
         self.events += out
         return out
 
@@ -463,12 +509,28 @@ class ControlPlane:
         ):
             job._alarmed = True
             deadline = self.watchdog.deadline(job.job_id) or 0.0
+            silence = self.watchdog.silence(job.job_id, now)
             out.append(WatchdogAlarm(
                 job_id=job.job_id, time=now,
                 last_seen=job._last_seen if job._last_seen is not None else 0.0,
                 deadline_s=deadline,
-                silence_s=self.watchdog.silence(job.job_id, now),
+                silence_s=silence,
             ))
+            tr = self.tracer
+            if tr is not None:
+                # The silence window [last heartbeat, alarm] with the
+                # calibrated deadline budget nested inside it: how far past
+                # the budget the stream ran before the alarm fired.
+                last = job._last_seen if job._last_seen is not None else 0.0
+                track = (job.job_id, "watchdog")
+                tr.span(
+                    track, "silence", last, now, args={"silence_s": silence}
+                )
+                tr.span(
+                    track, "deadline", last, last + deadline,
+                    args={"deadline_s": deadline},
+                )
+                tr.instant(track, "alarm", now)
             base = job._last_sample if job._last_sample > 0 else 1.0
             cp = ChangePoint(
                 index=max(job.steps - 1, 0), probability=1.0,
@@ -514,9 +576,29 @@ class ControlPlane:
                 event=new_event,
                 components_global=self._globalize(job, new_event.components),
                 deduped_from=deduped_from,
+                breakdown=self._breakdown(job),
             )
             out.append(diag)
             self._active_diag[job.job_id] = diag
+            tr = self.tracer
+            if tr is not None:
+                # Fault episode span: opened at diagnosis, closed at
+                # relief (or the horizon). A compound pile-on opens a
+                # nested span inside the still-active episode.
+                args: dict = {
+                    "cause": new_event.root_cause.value,
+                    "components": list(new_event.components),
+                }
+                if getattr(new_event, "hang", False):
+                    args["hang"] = True
+                if deduped_from is not None:
+                    args["deduped_from"] = deduped_from
+                if diag.breakdown is not None:
+                    args.update(diag.breakdown.summary())
+                tr.begin(
+                    (job.job_id, "faults"),
+                    f"fault:{new_event.root_cause.value}", now, args=args,
+                )
             exclude: set[StrategyKey] = set()
             if job._s4_burned:
                 exclude.add(Strategy.CKPT_AND_RESTART)
@@ -539,6 +621,8 @@ class ControlPlane:
         active = job.detector.active_event
         if active is None:
             if had_active:
+                if self.tracer is not None:
+                    self.tracer.close_track((job.job_id, "faults"), now)
                 if self._hook_allow_relief(job.job_id, now):
                     out += self._relief(job, now)
                 else:
@@ -592,6 +676,20 @@ class ControlPlane:
                 )
                 out += self._execute(job, forced, active, now)
         return out
+
+    def _breakdown(self, job: JobHandle):
+        """Per-collective timing decomposition of the job's iteration, when
+        the adapter can produce one (:meth:`TrainingSimulator.collective_breakdown`).
+        Returns None for adapters without the capability (trace replay,
+        hardware) or when the adapter is wedged — diagnosis must never fail
+        because observability did."""
+        fn = getattr(job.adapter, "collective_breakdown", None)
+        if fn is None:
+            return None
+        try:
+            return fn()
+        except Exception:  # noqa: BLE001 — observability is best-effort
+            return None
 
     # -- counterfactual decision intercept -------------------------------
     def _hook_allow(self, job_id: str, strategy: StrategyKey, now: float) -> bool:
@@ -657,6 +755,16 @@ class ControlPlane:
         out: list[ControlEvent] = []
         rolled = False
         quarantined = False
+        tr = self.tracer
+        track = (job.job_id, "executor")
+        label = strategy_label(strategy)
+        # The executor's simulated-time cursor: attempt N's span starts
+        # after the charges (timeouts, backoffs) of attempts 1..N-1, so the
+        # trace shows the retry cycle laid out the way the job's wall clock
+        # actually paid for it.
+        t_cursor = now
+        if tr is not None:
+            tr.begin(track, f"dispatch:{label}", now)
         for attempt in range(1, max_attempts + 1):
             snap = self._snapshot(job)
             failure: tuple[str, dict] | None = None
@@ -685,6 +793,16 @@ class ControlPlane:
                         detail=outcome.detail, attempt=attempt,
                     )
                 )
+                if tr is not None:
+                    tr.span(
+                        track, f"attempt {attempt}", t_cursor,
+                        t_cursor + overhead,
+                        args={"status": "ok", "applied": outcome.applied},
+                    )
+                    tr.end(
+                        track, t_cursor + overhead,
+                        args={"status": "ok", "attempts": attempt},
+                    )
                 return out
             status, detail = failure
             rolled = self._rollback(job, snap)
@@ -708,6 +826,18 @@ class ControlPlane:
                     status=status, attempt=attempt,
                 )
             )
+            if tr is not None:
+                tr.span(
+                    track, f"attempt {attempt}", t_cursor, t_cursor + charge,
+                    args={"status": status},
+                )
+                tr.instant(
+                    track, "rollback", t_cursor + charge,
+                    args={"rolled_back": rolled},
+                )
+                if quarantined:
+                    tr.instant(track, "quarantine", t_cursor + charge)
+            t_cursor += charge
             if not will_retry:
                 break
         # Retries exhausted (or quarantine cut them short): the terminal
@@ -723,6 +853,11 @@ class ControlPlane:
                 },
             )
         )
+        if tr is not None:
+            tr.end(
+                track, t_cursor,
+                args={"status": "rolled_back", "attempts": attempt},
+            )
         return out
 
     def _relief(self, job: JobHandle, now: float) -> list[ControlEvent]:

@@ -2,12 +2,20 @@
 
     PYTHONPATH=src python -m repro.launch.campaign --preset mixed_fleet \
         --jobs 8 --seed 0 [--ticks N] [--out results/campaigns] \
-        [--list-presets] [--quiet]
+        [--obs] [--obs-stride N] [--list-presets] [--quiet]
 
 Builds the campaign (heterogeneous jobs packed on a shared hardware map,
 characterization-driven fault schedule), runs it under all four mitigation
 modes (healthy / faults / ckpt / falcon), scores the paper metrics from the
 typed event log, writes the machine-readable report, and prints a summary.
+
+``--obs`` additionally writes the observability sidecars next to the
+report: ``<base>.trace.json`` (the falcon run's simulated-clock span
+trace, loadable in Perfetto / ``chrome://tracing``) and
+``<base>.metrics.json`` (the metric-catalog snapshot). ``--obs-stride N``
+keeps every Nth per-job Observation in the report's event log (sampled
+iteration-time lanes; default 0 = none, the byte-stable historical form).
+Render dashboards from the report with ``python -m repro.launch.obs``.
 """
 from __future__ import annotations
 
@@ -77,6 +85,11 @@ def main() -> None:
     ap.add_argument("--ticks", type=int, default=None,
                     help="override the preset's horizon")
     ap.add_argument("--out", default=RESULTS_DIR)
+    ap.add_argument("--obs", action="store_true",
+                    help="write trace/metrics sidecars next to the report")
+    ap.add_argument("--obs-stride", type=int, default=0,
+                    help="keep every Nth per-job Observation in the event "
+                         "log (0 = none)")
     ap.add_argument("--list-presets", action="store_true")
     ap.add_argument("--quiet", action="store_true")
     args = ap.parse_args()
@@ -86,13 +99,21 @@ def main() -> None:
             print(f"{name:<28}{get_preset(name).description}")
         return
 
-    _, _, report = run_and_score(
-        args.preset, n_jobs=args.jobs, seed=args.seed, max_ticks=args.ticks
+    spec, runs, report = run_and_score(
+        args.preset, n_jobs=args.jobs, seed=args.seed, max_ticks=args.ticks,
+        obs=args.obs, observation_stride=args.obs_stride,
     )
     path = write_report(report, args.out)
     if not args.quiet:
         print(summarize(report))
     print(f"\nreport: {path}")
+    if args.obs:
+        from repro.obs.recorder import write_sidecars
+
+        for kind, p in sorted(write_sidecars(
+            spec, runs, report, out_dir=args.out
+        ).items()):
+            print(f"{kind}: {p}")
 
 
 if __name__ == "__main__":

@@ -7,16 +7,18 @@
 ``--inject kind:target:severity:start:duration`` adds a fail-slow to the
 attached cluster performance model (kind: gpu|cpu|link|nic). Detection and
 mitigation run through :mod:`repro.controlplane`; ``--events`` dumps the
-control plane's typed event log (diagnoses, strategy dispatches) after the
-run.
+control plane's typed event log after the run as JSON lines through the
+same :func:`~repro.controlplane.event_log_records` serializer the
+campaign reports use (Observations elided; ``--events-stride N`` samples
+every Nth per-job Observation into the dump).
 """
 from __future__ import annotations
 
 import argparse
+import json
 
 from repro.cluster.injector import FailSlowInjector, Injection, InjectionKind
-from repro.controlplane import Diagnosis, MitigationAction, MitigationResult
-from repro.core.events import strategy_label
+from repro.controlplane import event_log_records
 from repro.cluster.simulator import JobSpec, TrainingSimulator
 from repro.cluster.spec import ClusterSpec, ModelSpec
 from repro.configs.base import get_config
@@ -58,7 +60,12 @@ def main() -> None:
     ap.add_argument("--sim-nodes", type=int, default=2)
     ap.add_argument(
         "--events", action="store_true",
-        help="dump the control plane's typed event log after the run",
+        help="dump the control plane's typed event log after the run "
+             "(JSON lines, the campaign-report serialization)",
+    )
+    ap.add_argument(
+        "--events-stride", type=int, default=0,
+        help="with --events, keep every Nth per-job Observation (0 = none)",
     )
     args = ap.parse_args()
 
@@ -107,16 +114,10 @@ def main() -> None:
           f"(slowdown {mean / healthy:.2f}x)")
     if args.events and trainer.control is not None:
         print("# control-plane events:")
-        for ev in trainer.control.events:
-            if isinstance(ev, Diagnosis):
-                state = "resolved" if ev.resolved else "diagnosed"
-                dedup = f" (deduped from {ev.deduped_from})" if ev.deduped_from else ""
-                print(f"#  t={ev.time:8.1f} {state}: "
-                      f"{ev.event.root_cause.value} {ev.event.components}{dedup}")
-            elif isinstance(ev, MitigationAction):
-                print(f"#  t={ev.time:8.1f} dispatch {strategy_label(ev.strategy)}")
-            elif isinstance(ev, MitigationResult) and ev.kind == "relief":
-                print(f"#  t={ev.time:8.1f} relief rebalance {ev.detail}")
+        for rec in event_log_records(
+            trainer.control.events, observation_stride=args.events_stride
+        ):
+            print(json.dumps(rec, sort_keys=True))
 
 
 if __name__ == "__main__":

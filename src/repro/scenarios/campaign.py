@@ -137,6 +137,9 @@ class RunResult:
     events: list  # control-plane event log ([] for plane-less modes)
     ticks_run: int
     horizon_s: float
+    #: the run's :class:`repro.obs.SpanTracer` when observability was on
+    #: (``run_campaign(..., tracer=...)``); None otherwise
+    tracer: object | None = None
 
 
 # ------------------------------------------------------------------ build
@@ -387,6 +390,7 @@ def run_campaign(
     decision_hook=None,
     planner_knobs=None,
     only_jobs=None,
+    tracer=None,
 ) -> RunResult:
     """Execute one campaign under the given mitigation mode.
 
@@ -410,6 +414,14 @@ def run_campaign(
       interact: each job's trajectory there is bit-identical whether or
       not its neighbours run, which is what makes affected-jobs-only
       replay exact and cheap.
+    * ``tracer`` — a :class:`repro.obs.SpanTracer` on the campaign's
+      simulated clock. The runner records each job's lifetime span and its
+      injected fault episodes (ground truth lanes); the control plane adds
+      tick, detector, watchdog, executor, and diagnosed-fault spans. The
+      tracer is returned on :attr:`RunResult.tracer` with every track
+      closed at the horizon. Tracing never alters the run: all call sites
+      are guarded, rng streams and event logs are bit-identical with or
+      without it.
     """
     if mode not in MODES:
         raise ValueError(f"mode must be one of {MODES}, got {mode!r}")
@@ -459,6 +471,7 @@ def run_campaign(
             ),
             decision_hook=decision_hook,
             planner_knobs=planner_knobs,
+            tracer=tracer,
         )
 
     pending = sorted(
@@ -494,6 +507,31 @@ def run_campaign(
                 job_id=placed.job_id, join_time=now, steps=placed.steps
             )
             outcomes[placed.job_id] = out
+            if tracer is not None:
+                horizon_s = spec.max_ticks * dt
+                tracer.begin(
+                    (placed.job_id, "job"), "job", now,
+                    args={
+                        "devices": len(placed.devices),
+                        "steps": placed.steps,
+                        "template": placed.template.arch,
+                    },
+                )
+                if with_faults:
+                    # Ground-truth lane: the injected episodes as scheduled,
+                    # before any detection — lining this track up against
+                    # the plane's "faults" track is the detection-latency /
+                    # miss picture a dashboard wants.
+                    for inj in placed.local_schedule:
+                        tracer.span(
+                            (placed.job_id, "injected"),
+                            f"inject:{inj.kind.value}",
+                            inj.start, min(inj.end, horizon_s),
+                            args={
+                                "target": list(inj.target),
+                                "severity": inj.severity,
+                            },
+                        )
             if plane is not None:
                 plane.register_job(
                     placed.job_id, sim,
@@ -583,11 +621,20 @@ def run_campaign(
                 finished.append(job_id)
         for job_id in finished:
             del live[job_id]
+            if tracer is not None:
+                tracer.end(
+                    (job_id, "job"), now_end,
+                    args={"iters": round(outcomes[job_id].iters_done, 3)},
+                )
             if plane is not None:
                 plane.remove_job(job_id, now_end)
 
     events = list(plane.events) if plane is not None else []
+    if tracer is not None:
+        # Censor everything still open (jobs that ran out the clock, fault
+        # episodes never relieved) at the horizon so the trace exports.
+        tracer.close_all(spec.max_ticks * dt)
     return RunResult(
         mode=mode, outcomes=outcomes, events=events, ticks_run=ticks,
-        horizon_s=spec.max_ticks * dt,
+        horizon_s=spec.max_ticks * dt, tracer=tracer,
     )

@@ -35,9 +35,8 @@ from repro.controlplane import (
     Diagnosis,
     Membership,
     MitigationResult,
-    Observation,
     WatchdogAlarm,
-    event_record,
+    event_log_records,
 )
 from repro.core.detector import FalconDetect, FleetDetect
 from repro.core.events import RootCause
@@ -167,9 +166,18 @@ def _merge_episodes(
 
 
 def score_campaign(
-    spec: CampaignSpec, runs: dict[str, RunResult]
+    spec: CampaignSpec,
+    runs: dict[str, RunResult],
+    observation_stride: int = 0,
 ) -> dict:
-    """Score a campaign's four runs into the paper-metric report dict."""
+    """Score a campaign's four runs into the paper-metric report dict.
+
+    ``observation_stride`` opts the report's event log into sampled
+    :class:`Observation` records (every Nth per job — a plottable
+    iteration-time lane); the default ``0`` keeps the historical
+    Observation-free log byte for byte. See
+    :func:`~repro.controlplane.events.event_log_records`.
+    """
     preset = spec.preset
     dt = preset.tick_seconds
     horizon = preset.max_ticks * dt
@@ -540,13 +548,12 @@ def score_campaign(
     ]
     # The replayable fleet event log (what-if input): every falcon-run
     # flag, diagnosis, action and result, with timestamps. Observations
-    # are dropped — they dominate the log (one per job per tick) and the
-    # replay re-derives them from (preset, seed) anyway.
-    event_log = [
-        event_record(ev)
-        for ev in falcon.events
-        if not isinstance(ev, Observation)
-    ]
+    # are dropped by default — they dominate the log (one per job per
+    # tick) and the replay re-derives them from (preset, seed) anyway —
+    # unless the caller opts into a sampled stride.
+    event_log = event_log_records(
+        falcon.events, observation_stride=observation_stride
+    )
     event_counts: dict[str, int] = {}
     for ev in falcon.events:
         name = type(ev).__name__
@@ -583,11 +590,29 @@ def run_and_score(
     n_jobs: int | None = None,
     seed: int = 0,
     max_ticks: int | None = None,
+    obs: bool = False,
+    observation_stride: int = 0,
 ) -> tuple[CampaignSpec, dict[str, RunResult], dict]:
-    """Build a campaign, execute all four modes, and score it."""
+    """Build a campaign, execute all four modes, and score it.
+
+    ``obs=True`` turns the observability layer on for the falcon run: a
+    :class:`repro.obs.SpanTracer` rides the campaign clock (returned on
+    ``runs["falcon"].tracer``), ready for
+    :func:`repro.obs.recorder.write_sidecars`. The scored report is
+    byte-identical either way — tracing never alters the run.
+    """
     spec = build_campaign(preset, n_jobs=n_jobs, seed=seed, max_ticks=max_ticks)
-    runs = {mode: run_campaign(spec, mode) for mode in MODES}
-    return spec, runs, score_campaign(spec, runs)
+    runs = {}
+    for mode in MODES:
+        tracer = None
+        if obs and mode == "falcon":
+            from repro.obs import SpanTracer
+
+            tracer = SpanTracer()
+        runs[mode] = run_campaign(spec, mode, tracer=tracer)
+    return spec, runs, score_campaign(
+        spec, runs, observation_stride=observation_stride
+    )
 
 
 def write_report(report: dict, out_dir: str = RESULTS_DIR) -> str:

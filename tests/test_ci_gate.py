@@ -79,6 +79,30 @@ def test_workflow_invokes_the_gate_against_the_committed_baseline():
     assert "results/campaigns/flaky_executor-j2-s0.json" in text
     assert "results/sweeps/collective_hang-j2.baseline.json" in text
     assert 'run_and_score("flaky_executor", seed=0)' in text
+    # Observability gates: sidecar byte-determinism + dashboard artifact.
+    assert "results/campaigns/mixed_fleet-j8-s0.$ext" in text
+    assert "collective_hang-j2-s0" in text and "--obs" in text
+    assert "repro.launch.obs" in text
+    assert "mixed_fleet-dashboard.html" in text
+
+
+def test_committed_obs_sidecars_exist_for_the_ci_diff():
+    for base in ("collective_hang-j2-s0", "mixed_fleet-j8-s0"):
+        trace_path = os.path.join(
+            REPO, "results", "campaigns", f"{base}.trace.json"
+        )
+        with open(trace_path) as f:
+            doc = json.load(f)
+        assert doc["displayTimeUnit"] == "ms"
+        assert any(e["ph"] == "X" for e in doc["traceEvents"])
+        metrics_path = os.path.join(
+            REPO, "results", "campaigns", f"{base}.metrics.json"
+        )
+        with open(metrics_path) as f:
+            snap = json.load(f)
+        assert {c["name"] for c in snap["counters"]} >= {
+            "events_total", "diagnoses_total"
+        }
 
 
 def test_committed_hang_baseline_parses_and_matches_gate_schema():

@@ -1,0 +1,306 @@
+"""Observability layer: tracer invariants, decomposition correctness,
+metrics registry semantics, sidecar byte-determinism, and the contract
+that tracing never changes behavior.
+
+The expensive pieces (campaign runs) are shared through module-scoped
+fixtures; everything here is tier-1.
+"""
+import json
+import math
+
+import pytest
+
+from repro.cluster.spec import ClusterSpec, ClusterState
+from repro.cluster.simulator import JobSpec, ModelSpec, TrainingSimulator
+from repro.controlplane.events import (
+    Diagnosis,
+    Observation,
+    event_log_records,
+    event_record,
+)
+from repro.obs import (
+    COMPONENTS,
+    MetricsRegistry,
+    SpanTracer,
+    TraceError,
+    decompose,
+)
+from repro.obs import recorder as obs_recorder
+from repro.obs.dashboard import render_dashboard
+from repro.scenarios.campaign import build_campaign, run_campaign
+from repro.scenarios.scoring import run_and_score
+
+
+# ------------------------------------------------------------- fixtures
+@pytest.fixture(scope="module")
+def hang_campaign():
+    spec = build_campaign("collective_hang", n_jobs=2, seed=0)
+    tracer = SpanTracer()
+    run = run_campaign(spec, "falcon", tracer=tracer)
+    return spec, run
+
+
+@pytest.fixture(scope="module")
+def scored_obs():
+    return run_and_score("single_gpu_throttle", n_jobs=1, seed=0, obs=True)
+
+
+def _sim(tp=2, dp=2, pp=2, nodes=2, gpn=4):
+    return TrainingSimulator(
+        cluster=ClusterSpec(n_nodes=nodes, gpus_per_node=gpn),
+        job=JobSpec(
+            model=ModelSpec(layers=8, hidden=1024, seq_len=512, vocab=32000),
+            tp=tp, dp=dp, pp=pp, micro_batches=8,
+        ),
+    )
+
+
+# ------------------------------------------------------------ SpanTracer
+def test_tracer_nesting_and_chrome_export():
+    tr = SpanTracer()
+    tr.begin(("j0", "t"), "outer", 0.0)
+    tr.begin(("j0", "t"), "inner", 1.0)
+    tr.end(("j0", "t"), 2.0)
+    tr.end(("j0", "t"), 3.0, args={"k": 1})
+    tr.instant(("j0", "t"), "mark", 1.5)
+    doc = tr.to_chrome()
+    spans = [e for e in doc["traceEvents"] if e["ph"] == "X"]
+    # Inner closed first, fully contained in outer.
+    by_name = {e["name"]: e for e in spans}
+    assert by_name["inner"]["ts"] == 1_000_000
+    assert by_name["inner"]["dur"] == 1_000_000
+    assert by_name["outer"]["ts"] == 0
+    assert by_name["outer"]["dur"] == 3_000_000
+    assert by_name["inner"]["ts"] >= by_name["outer"]["ts"]
+    assert (
+        by_name["inner"]["ts"] + by_name["inner"]["dur"]
+        <= by_name["outer"]["ts"] + by_name["outer"]["dur"]
+    )
+
+
+def test_tracer_end_without_begin_raises():
+    tr = SpanTracer()
+    with pytest.raises(TraceError):
+        tr.end(("j0", "t"), 1.0)
+
+
+def test_tracer_name_mismatch_raises():
+    tr = SpanTracer()
+    tr.begin(("j0", "t"), "a", 0.0)
+    with pytest.raises(TraceError):
+        tr.end(("j0", "t"), 1.0, name="b")
+
+
+def test_tracer_export_with_open_span_raises_until_closed():
+    tr = SpanTracer()
+    tr.begin(("j0", "t"), "open", 0.0)
+    with pytest.raises(TraceError):
+        tr.to_chrome()
+    tr.close_all(5.0)
+    spans = [e for e in tr.to_chrome()["traceEvents"] if e["ph"] == "X"]
+    assert spans[0]["dur"] == 5_000_000
+
+
+def test_tracer_json_deterministic_and_metadata_first():
+    def build():
+        tr = SpanTracer()
+        tr.span(("b", "y"), "s2", 1.0, 2.0)
+        tr.span(("a", "x"), "s1", 0.0, 1.0)
+        tr.counter(("a", "c"), "v", 0.5, 3.14159265)
+        return tr
+
+    assert build().to_json() == build().to_json()
+    doc = build().to_chrome()
+    evs = doc["traceEvents"]
+    meta = [e for e in evs if e["ph"] == "M"]
+    assert evs[: len(meta)] == meta  # metadata events lead
+    # Distinct processes get distinct pids, deterministically.
+    pids = {e["args"]["name"]: e["pid"] for e in meta
+            if e["name"] == "process_name"}
+    assert len(set(pids.values())) == len(pids)
+
+
+# ------------------------------------------------- collective breakdown
+def test_decompose_parts_sum_to_iteration_time():
+    sim = _sim()
+    bd = decompose(sim)
+    assert math.isclose(
+        sum(bd.parts().values()), sim.iteration_time(), rel_tol=1e-9
+    )
+    assert math.isclose(bd.total_s, sim.iteration_time(), rel_tol=1e-9)
+    assert bd.bottleneck in COMPONENTS
+    assert 0.0 < bd.share <= 1.0
+
+
+@pytest.mark.parametrize(
+    "edge,collective",
+    [((0, 2), "dp_allreduce"), ((0, 1), "tp_allreduce"), ((0, 4), "pp_p2p")],
+)
+def test_decompose_degraded_link_shifts_bottleneck_and_names_edge(
+    edge, collective
+):
+    # In the tp2/dp2/pp2 layout on 2x4 GPUs, (0,1) is a TP ring edge,
+    # (0,2) a DP ring edge, and (0,4) the stage-0 -> stage-1 PP hop.
+    sim = _sim()
+    healthy = decompose(sim)
+    assert healthy.bottleneck == "compute"
+    state = ClusterState(sim.cluster)
+    state.degrade_link(*edge, 0.01)  # 100x slower link
+    sim.state = state
+    degraded = sim.collective_breakdown()
+    assert degraded.bottleneck == collective
+    assert degraded.edge == f"link:{edge[0]}-{edge[1]}"
+    part = degraded.parts()[collective]
+    assert part > healthy.parts()[collective] * 10
+
+
+def test_timing_decomposition_matches_profile_groups():
+    sim = _sim()
+    td = sim.timing_decomposition()
+    prof = sim.profile_groups()
+    for s in range(2):
+        for d in range(2):
+            assert td["tp_allreduce_s"][s][d] == prof[f"tp:s{s}d{d}"]
+    for s in range(2):
+        for k in range(2):
+            assert td["dp_allreduce_s"][s][k] == prof[f"dp:s{s}t{k}"]
+
+
+# --------------------------------------------------- metrics registry
+def test_metrics_counter_gauge_histogram_snapshot():
+    reg = MetricsRegistry()
+    reg.counter("hits", job="j0").inc()
+    reg.counter("hits", job="j0").inc(2.0)
+    reg.gauge("level").set(0.25)
+    h = reg.histogram("lat_s", buckets=(1.0, 10.0))
+    h.observe(0.5)
+    h.observe(5.0)
+    h.observe(100.0)
+    snap = reg.snapshot()
+    assert snap["counters"] == [
+        {"name": "hits", "labels": {"job": "j0"}, "value": 3.0}
+    ]
+    assert snap["gauges"][0]["value"] == 0.25
+    hist = snap["histograms"][0]
+    assert hist["count"] == 3
+    assert hist["buckets"] == {"1": 1, "10": 2, "+Inf": 3}
+    assert hist["sum"] == 105.5
+
+
+def test_metrics_kind_collision_and_negative_inc_raise():
+    reg = MetricsRegistry()
+    reg.counter("x")
+    with pytest.raises(ValueError):
+        reg.gauge("x")
+    with pytest.raises(ValueError):
+        reg.counter("y").inc(-1.0)
+
+
+# ------------------------------------------- control-plane integration
+def test_hang_diagnosis_breakdown_names_injected_ring_edge(hang_campaign):
+    spec, run = hang_campaign
+    # Ground truth: the preset's collective_hang episode and its edge.
+    hang_inj = next(
+        inj for inj in spec.schedule if inj.kind.value == "collective_hang"
+    )
+    a, b = hang_inj.target
+    placed = next(
+        p for p in spec.jobs
+        if a in p.devices and b in p.devices
+    )
+    la, lb = sorted((p := list(placed.devices)).index(a) for a in (a, b))
+    onsets = [
+        e for e in run.events
+        if isinstance(e, Diagnosis) and not e.resolved
+        and e.job_id == placed.job_id
+    ]
+    assert onsets, "hang never diagnosed"
+    diag = next(e for e in onsets if getattr(e.event, "hang", False))
+    bd = diag.breakdown
+    assert bd is not None
+    assert bd.bottleneck == "dp_allreduce"
+    assert bd.edge == f"link:{la}-{lb}"
+    # The transient field must not leak into the serialized record.
+    assert "breakdown" not in event_record(diag)
+
+
+def test_tracing_does_not_change_behavior(hang_campaign):
+    spec, traced = hang_campaign
+    plain = run_campaign(spec, "falcon")
+    assert event_log_records(traced.events) == event_log_records(plain.events)
+    assert {
+        j: (o.iters_done, o.end_time) for j, o in traced.outcomes.items()
+    } == {
+        j: (o.iters_done, o.end_time) for j, o in plain.outcomes.items()
+    }
+
+
+def test_trace_covers_pipeline_and_is_deterministic(hang_campaign):
+    spec, run = hang_campaign
+    names = {
+        e["name"] for e in run.tracer.to_chrome()["traceEvents"]
+        if e["ph"] == "X"
+    }
+    for expected in ("tick", "job", "silence", "deadline"):
+        assert expected in names, f"missing {expected} spans"
+    assert any(n.startswith("fault:") for n in names)
+    assert any(n.startswith("inject:") for n in names)
+    assert any(n.startswith("dispatch:") for n in names)
+    tr2 = SpanTracer()
+    run_campaign(spec, "falcon", tracer=tr2)
+    assert run.tracer.to_json() == tr2.to_json()
+
+
+def test_event_log_records_observation_stride():
+    events = [
+        Observation(job_id="j0", time=float(i), iter_time=1.0, step=i)
+        for i in range(10)
+    ]
+    assert event_log_records(events) == []
+    kept = event_log_records(events, observation_stride=3)
+    assert [r["step"] for r in kept] == [0, 3, 6, 9]
+
+
+# ------------------------------------------------- recorder + dashboard
+def test_sidecars_byte_deterministic_and_report_unchanged(
+    scored_obs, tmp_path
+):
+    spec, runs, report = scored_obs
+    a = tmp_path / "a"
+    b = tmp_path / "b"
+    paths_a = obs_recorder.write_sidecars(spec, runs, report, out_dir=str(a))
+    spec2, runs2, report2 = run_and_score(
+        "single_gpu_throttle", n_jobs=1, seed=0, obs=True
+    )
+    paths_b = obs_recorder.write_sidecars(
+        spec2, runs2, report2, out_dir=str(b)
+    )
+    assert report == report2
+    for kind in ("trace", "metrics"):
+        assert (
+            open(paths_a[kind]).read() == open(paths_b[kind]).read()
+        ), f"{kind} sidecar not byte-deterministic"
+    # Observability must not perturb the scored report itself.
+    _, _, plain = run_and_score("single_gpu_throttle", n_jobs=1, seed=0)
+    assert report == plain
+
+
+def test_recorder_metric_catalog(scored_obs):
+    spec, runs, report = scored_obs
+    snap = obs_recorder.record_campaign(spec, runs, report).snapshot()
+    counters = {c["name"] for c in snap["counters"]}
+    gauges = {g["name"] for g in snap["gauges"]}
+    hists = {h["name"] for h in snap["histograms"]}
+    assert {"events_total", "diagnoses_total"} <= counters
+    assert {"wasted_gpu_seconds", "slowdown_mitigated_pct"} <= gauges
+    assert "detection_latency_s" in hists
+    assert "fault_duration_s" in hists
+
+
+def test_dashboard_renders_deterministically(scored_obs):
+    _, runs, report = scored_obs
+    html = render_dashboard(report)
+    assert html == render_dashboard(report)
+    assert html.count("<svg") == 3
+    for jid in (r["job_id"] for r in report["jobs"]):
+        assert jid in html
