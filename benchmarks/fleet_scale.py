@@ -45,10 +45,13 @@ def _fleet_traces(n_workers: int, n_ticks: int, seed: int = 0) -> np.ndarray:
     return x
 
 
-def _detection_rows(n_workers: int, n_ticks: int, scalar_workers: int) -> dict:
+def _detection_rows(
+    n_workers: int, n_ticks: int, scalar_workers: int, backend: str = "auto"
+) -> dict:
     x = _fleet_traces(n_workers, n_ticks)
 
-    fleet = FleetDetect(n_workers=n_workers)
+    factory = bocd.select_backend(backend)
+    fleet = FleetDetect(n_workers=n_workers, backend=factory)
     t0 = time.perf_counter()
     flags = [f for t in range(n_ticks) for f in fleet.tick(x[t])]
     batched_s = time.perf_counter() - t0
@@ -73,6 +76,7 @@ def _detection_rows(n_workers: int, n_ticks: int, scalar_workers: int) -> dict:
     return {
         "workers": n_workers,
         "ticks": n_ticks,
+        "backend": factory.name,
         "flags": len(flags),
         "batched_ticks_per_s": round(n_ticks / batched_s, 1),
         "batched_worker_upd_per_s": round(batched_rate),
@@ -129,6 +133,48 @@ def _simulator_rows(n_devices: int, healthy_steps: int, recomputes: int) -> dict
     }
 
 
+def _backend_parity_gate() -> dict:
+    """Smoke-mode gate: the numpy and Pallas screening backends must raise
+    the *same* flags on the same traces (the registry promise the CI
+    ``kernels`` job enforces), and the Pallas reduction backend must agree
+    with the vectorized simulator within its documented tolerance."""
+    n_workers, n_ticks = 96, 60
+    x = _fleet_traces(n_workers, n_ticks, seed=7)
+    flags: dict[str, list] = {}
+    for name in ("batched", "pallas"):
+        fleet = FleetDetect(n_workers=n_workers, backend=name)
+        flags[name] = sorted(
+            (t, f.worker) for t in range(n_ticks) for f in fleet.tick(x[t])
+        )
+    if flags["batched"] != flags["pallas"]:
+        raise SystemExit(
+            f"screening backend parity FAILED: numpy raised "
+            f"{flags['batched']} but pallas raised {flags['pallas']}"
+        )
+
+    from repro.cluster.simulator import REDUCTION_BACKENDS
+
+    sim, inj = _make_sim(512)
+    inj.apply(sim.state, 200.0)  # a faulted, non-trivial topology
+    want = sim.iteration_time()
+    rb = REDUCTION_BACKENDS["pallas"]()
+    got = float(rb.iteration_time(sim))
+    rel = abs(got - want) / want
+    if rel > rb.tolerance:
+        raise SystemExit(
+            f"reduction backend parity FAILED: pallas {got} vs "
+            f"vectorized {want} (rel err {rel:.2e} > {rb.tolerance})"
+        )
+    return {
+        "path": "parity",
+        "workers": n_workers,
+        "ticks": n_ticks,
+        "flags": len(flags["batched"]),
+        "backend": "batched==pallas",
+        "reduction_rel_err": float(f"{rel:.3g}"),
+    }
+
+
 def run(smoke: bool = False) -> list[dict]:
     if smoke:
         det_cfgs = [(512, 60, 16)]
@@ -138,8 +184,12 @@ def run(smoke: bool = False) -> list[dict]:
         sim_cfgs = [(1024, 2000, 50), (4096, 2000, 20), (10240, 1000, 20)]
     rows: list[dict] = []
     for workers, ticks, scalar_workers in det_cfgs:
-        r = _detection_rows(workers, ticks, scalar_workers)
+        # Auto-selection: compiled Pallas on GPU/TPU jax, vectorized numpy
+        # on CPU — the backend column records which one this box measured.
+        r = _detection_rows(workers, ticks, scalar_workers, backend="auto")
         rows.append({"path": "detection", **r})
+    if smoke:
+        rows.append(_backend_parity_gate())
     for devices, steps, recomputes in sim_cfgs:
         r = _simulator_rows(devices, steps, recomputes)
         rows.append({"path": "simulation", **r})
@@ -154,4 +204,10 @@ def run(smoke: bool = False) -> list[dict]:
 
 
 if __name__ == "__main__":
-    print_table("Fleet-scale fast path", run())
+    import argparse
+
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--smoke", action="store_true",
+                    help="toy scale + numpy-vs-pallas backend parity gate")
+    args = ap.parse_args()
+    print_table("Fleet-scale fast path", run(smoke=args.smoke))

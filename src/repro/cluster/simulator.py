@@ -48,7 +48,9 @@ results are unchanged at lower wall-clock.
 """
 from __future__ import annotations
 
+import sys
 from dataclasses import dataclass, field
+from typing import Protocol, runtime_checkable
 
 import numpy as np
 
@@ -128,6 +130,10 @@ class _Layout:
         #: lazy node -> incident cross-node edge index per edge class,
         #: built on the first NIC-scoped dirty update for this placement
         self.nic_index = None
+        #: lazy node -> :class:`_NodeNic` (per-node precomputed incidence:
+        #: fused endpoint gathers, ring groupings, touched cells/columns),
+        #: so a repeat NIC event on a node costs zero index arithmetic
+        self.nic_cache: dict = {}
 
     def build_nic_index(self, per: int) -> dict:
         """node -> flat ids of the cross-node edges touching it, per edge
@@ -152,6 +158,102 @@ class _Layout:
         }
         return self.nic_index
 
+    def node_nic(self, node: int, per: int) -> "_NodeNic | None":
+        """The node's precomputed NIC-dirt incidence (None when no cached
+        edge crosses it), built once per (placement, node) and memoized —
+        the per-event NIC path then does no searchsorted/unique work."""
+        ent = self.nic_cache.get(node, False)
+        if ent is not False:
+            return ent
+        idx = self.nic_index or self.build_nic_index(per)
+        pp, dp, tp = self.grid.shape
+        span = dp * tp
+        seg_a: list[np.ndarray] = []
+        seg_b: list[np.ndarray] = []
+
+        def ids_of(cls, edges):
+            pair = idx[cls]
+            if pair is None:
+                return None
+            nodes_arr, eids = pair
+            lo = np.searchsorted(nodes_arr, node)
+            hi = np.searchsorted(nodes_arr, node + 1)
+            if lo == hi:
+                return None
+            ids = eids[lo:hi].copy()
+            seg_a.append(edges[0][ids])
+            seg_b.append(edges[1][ids])
+            return ids
+
+        tp_ids = ids_of("tp", self.tp_edges)
+        dp_ids = ids_of("dp", self.dp_edges)
+        hop_ids = ids_of("hop", self.hop_edges)
+        if tp_ids is None and dp_ids is None and hop_ids is None:
+            self.nic_cache[node] = None
+            return None
+        ent = _NodeNic()
+        ent.a = np.concatenate(seg_a)
+        ent.b = np.concatenate(seg_b)
+        n_tp = 0 if tp_ids is None else tp_ids.size
+        n_dp = 0 if dp_ids is None else dp_ids.size
+        ent.off_dp = n_tp
+        ent.off_hop = n_tp + n_dp
+        ent.tp_ids = tp_ids
+        ent.dp_ids = dp_ids
+        ent.hop_ids = hop_ids
+        if tp_ids is not None:
+            cf = np.unique(tp_ids // tp)
+            ent.tp_cells = list(zip((cf // dp).tolist(), (cf % dp).tolist()))
+        if hop_ids is not None:
+            ent.hop_cols = np.unique(hop_ids % dp).tolist()
+        if dp_ids is not None:
+            # Group the node's DP edges by ring (stage, tp_rank): the
+            # argmin fast path compares each touched ring's candidate
+            # minimum against the cached bottleneck in O(touched edges).
+            rings = (dp_ids // span) * tp + dp_ids % tp
+            order = np.argsort(rings, kind="stable")
+            rsorted = rings[order]
+            starts = np.flatnonzero(
+                np.r_[True, rsorted[1:] != rsorted[:-1]]
+            )
+            uniq = rsorted[starts]
+            widths = np.diff(np.r_[starts, rings.size])
+            ent.ring_s = uniq // tp
+            ent.ring_k = uniq % tp
+            ent.dp_order = order
+            dpos = (dp_ids // tp) % dp  # edge position within its ring
+            w = int(widths.max())
+            ent.uniform = bool(widths.min() == w)
+            if ent.uniform:
+                ent.dp_width = w
+                ent.dp_dpos2 = dpos[order].reshape(uniq.size, w)
+                ent.dp_rows = np.arange(uniq.size)
+        self.nic_cache[node] = ent
+        return ent
+
+
+class _NodeNic:
+    """Per-(placement, node) NIC-dirt incidence (see ``_Layout.node_nic``).
+
+    ``a``/``b`` are the fused endpoint arrays of every cached cross-node
+    edge touching the node, ordered [tp | dp | hop] with class offsets
+    ``off_dp``/``off_hop``, so one ``link_bw_many`` call re-measures them
+    all. The dp fields group the node's DP-ring edges by ring for the
+    argmin fast path (``uniform`` marks equal edges-per-ring, the common
+    topology, enabling the reshaped vectorized compare)."""
+
+    __slots__ = (
+        "a", "b", "off_dp", "off_hop", "tp_ids", "dp_ids", "hop_ids",
+        "tp_cells", "hop_cols", "ring_s", "ring_k", "dp_order", "uniform",
+        "dp_width", "dp_dpos2", "dp_rows",
+    )
+
+    def __init__(self) -> None:
+        self.tp_ids = self.dp_ids = self.hop_ids = None
+        self.tp_cells: list = []
+        self.hop_cols: list = []
+        self.uniform = False
+
 
 class _Cells:
     """Per-cell partial reductions over the current placement and state.
@@ -174,6 +276,11 @@ class _Cells:
     __slots__ = (
         "cell_speed", "tp_edge", "tp_bw", "dp_edge", "dp_bw", "hop_bw",
         "stage", "stage_max", "hop2",
+        # lazy per-ring argmin over the DP axis, shape (pp, tp): dp_arg[s,k]
+        # is the ring position attaining dp_bw[s,k], -1 = unknown. Built on
+        # demand by the NIC fast path (None until then) and *invalidated*,
+        # not maintained, by the other update paths, so they pay nothing.
+        "dp_arg",
         # job-constant formula terms, factored once per build so the scalar
         # update paths replay the exact arithmetic of the array formulas
         "c_flops", "c_speed", "c_tp", "pp_vol", "c_dp",
@@ -195,6 +302,11 @@ class TrainingSimulator:
     placement: list[int] = field(default_factory=list)
     #: per-DP-group micro-batch counts (S2); default: even split
     allocation: list[int] = field(default_factory=list)
+    #: reduction backend: "auto" (pallas on a compiled jax backend, else
+    #: the inline vectorized numpy path), a registry name ("reference" /
+    #: "vectorized" / "pallas"), or a ReductionBackend instance — see
+    #: REDUCTION_BACKENDS and docs/kernels.md
+    reduction: object = "auto"
     state: ClusterState = field(init=False)
 
     def __post_init__(self) -> None:
@@ -215,8 +327,11 @@ class TrainingSimulator:
         d = self.__dict__
         if name in ("placement", "job", "cluster"):
             d["_place_ver"] = d.get("_place_ver", 0) + 1
-        if name in ("placement", "allocation", "state", "job", "cluster"):
+        if name in ("placement", "allocation", "state", "job", "cluster",
+                    "reduction"):
             d["_cfg_ver"] = d.get("_cfg_ver", 0) + 1
+        if name == "reduction":
+            d["_red_obj"] = False  # unresolved; None = inline vectorized
         if name in ("allocation", "job"):
             d["_alloc_arr"] = None  # caches allocation + pp - 1
         if name in ("job", "cluster"):
@@ -265,6 +380,7 @@ class TrainingSimulator:
         if lay.dp_edges is not None:
             c.dp_edge = state.link_bw_many(*lay.dp_edges).reshape(pp, dp, tp)
             c.dp_bw = c.dp_edge.min(axis=1)
+        c.dp_arg = None
         if lay.hop_edges is not None:
             c.hop_bw = state.link_bw_many(*lay.hop_edges).reshape(pp - 1, dp)
         c.stage = self._stage_from(c.cell_speed, c.tp_bw)
@@ -350,41 +466,27 @@ class TrainingSimulator:
         dp_rings: set[tuple[int, int]] = set()
         hop_cols: set[int] = set()
         if ds.nics:
-            # Node-scoped dirt: look the port's incident cross-node edges
-            # up in the layout's (lazily built) incidence index — only
-            # those carry the NIC factor — and re-measure them in one
-            # batched sweep per edge class.
+            # Node-scoped dirt: every incident cross-node edge (only those
+            # carry the NIC factor) is precomputed per node in the layout's
+            # _NodeNic cache, so a repeat event re-measures them in ONE
+            # fused link_bw_many call and updates the touched DP rings via
+            # the argmin fast path — no per-event index arithmetic.
             per = state.spec.gpus_per_node
-            idx = lay.nic_index or lay.build_nic_index(per)
             for node in ds.nics:
-                for cls, edges, arr in (
-                    ("tp", lay.tp_edges, cache.tp_edge),
-                    ("dp", lay.dp_edges, cache.dp_edge),
-                    ("hop", lay.hop_edges, cache.hop_bw),
-                ):
-                    if idx[cls] is None or arr is None:
-                        continue
-                    nodes_arr, eids = idx[cls]
-                    lo = np.searchsorted(nodes_arr, node)
-                    hi = np.searchsorted(nodes_arr, node + 1)
-                    if lo == hi:
-                        continue
-                    ids = eids[lo:hi]
-                    arr.reshape(-1)[ids] = state.link_bw_many(
-                        edges[0][ids], edges[1][ids]
+                ent = lay.node_nic(node, per)
+                if ent is None:
+                    continue
+                bw = state.link_bw_many(ent.a, ent.b)
+                if ent.tp_ids is not None and cache.tp_edge is not None:
+                    cache.tp_edge.reshape(-1)[ent.tp_ids] = bw[:ent.off_dp]
+                    tp_cells.update(ent.tp_cells)
+                if ent.dp_ids is not None and cache.dp_edge is not None:
+                    self._nic_dp_fast(
+                        cache, ent, bw[ent.off_dp:ent.off_hop]
                     )
-                    if cls == "tp":
-                        cf = np.unique(ids // tp)
-                        tp_cells.update(
-                            zip((cf // dp).tolist(), (cf % dp).tolist())
-                        )
-                    elif cls == "dp":
-                        rf = np.unique((ids // span) * tp + ids % tp)
-                        dp_rings.update(
-                            zip((rf // tp).tolist(), (rf % tp).tolist())
-                        )
-                    else:
-                        hop_cols.update(np.unique(ids % dp).tolist())
+                if ent.hop_ids is not None and cache.hop_bw is not None:
+                    cache.hop_bw.reshape(-1)[ent.hop_ids] = bw[ent.off_hop:]
+                    hop_cols.update(ent.hop_cols)
 
         link_bw = state.link_bw
         for s, d2, e in tp_e:
@@ -424,9 +526,13 @@ class TrainingSimulator:
             rs = np.fromiter((s for s, _ in dp_rings), np.int64, len(dp_rings))
             rk = np.fromiter((k for _, k in dp_rings), np.int64, len(dp_rings))
             cache.dp_bw[rs, rk] = cache.dp_edge[rs, :, rk].min(axis=1)
+            if cache.dp_arg is not None:
+                cache.dp_arg[rs, rk] = -1
         else:
             for s, k2 in dp_rings:
                 cache.dp_bw[s, k2] = cache.dp_edge[s, :, k2].min()
+                if cache.dp_arg is not None:
+                    cache.dp_arg[s, k2] = -1
         for d2 in hop_cols:
             # Sequential accumulation: the full pass's axis-0 sum reduces
             # row by row (never pairwise along the outer axis), and a 1-D
@@ -435,6 +541,74 @@ class TrainingSimulator:
             for bw in cache.hop_bw[:, d2].tolist():
                 acc += cache.pp_vol / bw
             cache.hop2[d2] = 2.0 * acc
+
+    def _nic_dp_fast(self, cache: _Cells, ent, new: np.ndarray) -> None:
+        """Scatter a node's re-measured DP-ring edges and refresh the
+        touched rings' bottlenecks through the per-ring argmin cache.
+
+        Correctness of the O(touched) rules (untouched edges are unchanged,
+        so every untouched edge >= the ring's cached minimum ``cur``):
+
+        * candidate ``cand`` = min over the touched edges' *new* values.
+          If ``cand <= cur`` the ring minimum is exactly ``cand`` (any
+          untouched edge >= cur >= cand) — assign value and argmin in O(1).
+        * Else (every touched edge rose above ``cur``): if the cached
+          bottleneck edge is *untouched*, its value still is ``cur`` and
+          nothing beats it — the ring minimum is unchanged, no work.
+        * Only when the bottleneck itself rose (a restore event) does the
+          ring pay a full re-min + argmin. A stored argmin may be any
+          position attaining the minimum (ties); the rule above stays valid
+          for every such choice.
+
+        The assigned floats are the same doubles a full ``.min(axis=1)``
+        would produce, so bit-exactness against the reference oracles is
+        preserved.
+        """
+        cache.dp_edge.reshape(-1)[ent.dp_ids] = new
+        rs, rk = ent.ring_s, ent.ring_k
+        if cache.dp_arg is None:
+            cache.dp_arg = np.full(cache.dp_bw.shape, -1, dtype=np.int64)
+        if not ent.uniform:
+            # Irregular edges-per-ring grouping (nonstandard topology):
+            # fall back to full re-min over the touched rings.
+            sub = cache.dp_edge[rs, :, rk]
+            cache.dp_bw[rs, rk] = sub.min(axis=1)
+            cache.dp_arg[rs, rk] = sub.argmin(axis=1)
+            return
+        m = new[ent.dp_order].reshape(rs.size, ent.dp_width)
+        j = m.argmin(axis=1)
+        cand = m[ent.dp_rows, j]
+        cur = cache.dp_bw[rs, rk]
+        take = cand <= cur
+        if take.all():
+            # Degrade event: every touched ring's candidate wins — O(1)
+            # per ring, no gathers (the common fast-path in churn).
+            cache.dp_bw[rs, rk] = cand
+            cache.dp_arg[rs, rk] = ent.dp_dpos2[ent.dp_rows, j]
+            return
+        curarg = cache.dp_arg[rs, rk]
+        redo = ~take & (
+            (curarg < 0) | (ent.dp_dpos2 == curarg[:, None]).any(axis=1)
+        )
+        if not take.any():
+            # Restore event: only rings whose cached bottleneck edge rose
+            # (or whose argmin is unknown) pay a full re-min + argmin.
+            if redo.all():
+                sub = cache.dp_edge[rs, :, rk]
+                cache.dp_bw[rs, rk] = sub.min(axis=1)
+                cache.dp_arg[rs, rk] = sub.argmin(axis=1)
+            elif redo.any():
+                sub = cache.dp_edge[rs[redo], :, rk[redo]]
+                cache.dp_bw[rs[redo], rk[redo]] = sub.min(axis=1)
+                cache.dp_arg[rs[redo], rk[redo]] = sub.argmin(axis=1)
+            return
+        cand_d = ent.dp_dpos2[ent.dp_rows, j]
+        cache.dp_bw[rs[take], rk[take]] = cand[take]
+        cache.dp_arg[rs[take], rk[take]] = cand_d[take]
+        if redo.any():
+            sub = cache.dp_edge[rs[redo], :, rk[redo]]
+            cache.dp_bw[rs[redo], rk[redo]] = sub.min(axis=1)
+            cache.dp_arg[rs[redo], rk[redo]] = sub.argmin(axis=1)
 
     def _cells_update_positions(
         self, cache: _Cells, lay: _Layout, pos: np.ndarray
@@ -518,6 +692,8 @@ class TrainingSimulator:
                 rings = np.unique(s * tp + kk)
                 rs, rk = rings // tp, rings % tp
                 cache.dp_bw[rs, rk] = cache.dp_edge[rs, :, rk].min(axis=1)
+                if cache.dp_arg is not None:
+                    cache.dp_arg[rs, rk] = -1
             if hop_idx is not None:
                 cache.hop_bw[hop_idx] = bw[off:]
         cache.stage[cs, cd] = self._stage_from(
@@ -563,6 +739,8 @@ class TrainingSimulator:
                     int(grid[s, f, k2]), int(grid[s, (f + 1) % dp, k2])
                 )
             cache.dp_bw[s, k2] = cache.dp_edge[s, :, k2].min()
+            if cache.dp_arg is not None:
+                cache.dp_arg[s, k2] = -1
         if cache.hop_bw is not None and k2 == 0:
             for hs in (s - 1, s):
                 if 0 <= hs < pp - 1:
@@ -640,11 +818,34 @@ class TrainingSimulator:
             )
         return d["_alloc_arr"]
 
+    def _reduction_backend(self):
+        """The resolved :data:`REDUCTION_BACKENDS` instance, or None for
+        the inline vectorized fast path (the hot-path default — no
+        per-call indirection). Resolved lazily, re-resolved whenever the
+        ``reduction`` field is reassigned."""
+        d = self.__dict__
+        obj = d.get("_red_obj", False)
+        if obj is False:
+            obj = resolve_reduction_backend(self.reduction)
+            d["_red_obj"] = obj
+        return obj
+
     def iteration_time(self) -> float:
         key = (self.__dict__["_cfg_ver"], self.state.version)
         d = self.__dict__
         if d.get("_it_key") == key:
             return d["_it_val"]
+        rb = self._reduction_backend()
+        t = (
+            self._vec_iteration_time() if rb is None
+            else float(rb.iteration_time(self))
+        )
+        d["_it_key"] = key
+        d["_it_val"] = t
+        return t
+
+    def _vec_iteration_time(self) -> float:
+        """The vectorized (numpy) reduction tree over the cell cache."""
         c = self._cells()
         pipe = self._alloc_off() * c.stage_max
         if c.hop_bw is not None:
@@ -654,12 +855,13 @@ class TrainingSimulator:
             # max over C / bw == C / bw.min(): the winning element is the
             # same division of the same two doubles either way.
             t += float(c.c_dp / c.dp_bw.min())
-        d["_it_key"] = key
-        d["_it_val"] = t
         return t
 
     def per_microbatch_times(self) -> list[float]:
         """Per-DP-group per-micro-batch processing time (S2 solver input)."""
+        rb = self._reduction_backend()
+        if rb is not None:
+            return rb.per_microbatch_times(self)
         return [float(v) for v in self._cells().stage_max]
 
     # -------------------------------------- per-collective decomposition
@@ -953,6 +1155,12 @@ class TrainingSimulator:
     # ------------------------------------- ClusterInterface (FALCON R1)
     def profile_groups(self) -> dict[str, float]:
         """Per-communication-group transfer time (profiling phase)."""
+        rb = self._reduction_backend()
+        if rb is not None:
+            return rb.profile_groups(self)
+        return self._vec_profile_groups()
+
+    def _vec_profile_groups(self) -> dict[str, float]:
         lay = self._layout()
         c = self._cells()
         out: dict[str, float] = {}
@@ -1048,3 +1256,198 @@ class TrainingSimulator:
     def healthy_nic_time(self) -> float:
         """Expected healthy inter-node P2P time (NIC at full rate)."""
         return self.cluster.p2p_payload / self.cluster.inter_node_bw
+
+
+# ---------------------------------------------------------------------------
+# Reduction backends
+# ---------------------------------------------------------------------------
+@runtime_checkable
+class ReductionBackend(Protocol):
+    """How a :class:`TrainingSimulator` turns its measured per-cell arrays
+    into iteration-level answers.
+
+    Implementations own everything downstream of measurement — the ring
+    minima, stage maxima, hop sums and critical-path reductions — and are
+    interchangeable behind ``TrainingSimulator.reduction``. ``tolerance``
+    is the documented relative error versus the ``reference`` loop oracle
+    (0.0 = bit-exact); the equivalence suite enumerates
+    :data:`REDUCTION_BACKENDS` and asserts each backend within its own
+    tolerance. See docs/kernels.md for the contract and how to register a
+    new backend.
+    """
+
+    name: str
+    tolerance: float
+
+    def iteration_time(self, sim: TrainingSimulator) -> float: ...
+
+    def per_microbatch_times(self, sim: TrainingSimulator) -> list[float]: ...
+
+    def profile_groups(self, sim: TrainingSimulator) -> dict[str, float]: ...
+
+
+class ReferenceReduction:
+    """The seed's nested-loop oracle as a backend (slow, bit-exact)."""
+
+    name = "reference"
+    tolerance = 0.0
+
+    def iteration_time(self, sim: TrainingSimulator) -> float:
+        return sim.iteration_time_reference()
+
+    def per_microbatch_times(self, sim: TrainingSimulator) -> list[float]:
+        return sim.per_microbatch_times_reference()
+
+    def profile_groups(self, sim: TrainingSimulator) -> dict[str, float]:
+        return sim.profile_groups_reference()
+
+
+class VectorizedReduction:
+    """The numpy fast path as an explicit backend object.
+
+    ``sim.reduction = "vectorized"`` (and "auto" on a CPU-only jax) skips
+    this object entirely and runs the same code inline — this class exists
+    so the equivalence suite can drive every registry entry uniformly.
+    """
+
+    name = "vectorized"
+    tolerance = 0.0
+
+    def iteration_time(self, sim: TrainingSimulator) -> float:
+        return sim._vec_iteration_time()
+
+    def per_microbatch_times(self, sim: TrainingSimulator) -> list[float]:
+        return [float(v) for v in sim._cells().stage_max]
+
+    def profile_groups(self, sim: TrainingSimulator) -> dict[str, float]:
+        return sim._vec_profile_groups()
+
+
+class PallasReduction:
+    """Fused-kernel backend: one :mod:`repro.kernels.cell_reduce` launch
+    per evaluation (memoized on the simulator's config/state versions).
+
+    Measurement (and its event-scoped incremental maintenance) stays on
+    the numpy side; the kernel fuses every reduction after it. Degenerate
+    topologies (any of tp/dp/pp == 1) fall back to the vectorized path.
+    ``tolerance`` reflects float32 kernel arithmetic against the float64
+    oracle (see docs/kernels.md).
+    """
+
+    name = "pallas"
+    tolerance = 1e-4
+
+    def __init__(self, interpret: bool | None = None) -> None:
+        self.interpret = interpret
+
+    def _outs(self, sim: TrainingSimulator):
+        d = sim.__dict__
+        key = (d["_cfg_ver"], sim.state.version)
+        if d.get("_red_key") == key:
+            return d["_red_val"]
+        c = sim._cells()
+        if c.tp_edge is None or c.dp_edge is None or c.hop_bw is None:
+            out = None
+        else:
+            from repro.kernels.cell_reduce import cell_reduce
+
+            t, stage_max, tp_bw, dp_bw = cell_reduce(
+                c.cell_speed, c.tp_edge, c.dp_edge, c.hop_bw,
+                sim._alloc_off(), c.c_flops, c.c_speed, c.c_tp,
+                c.pp_vol, c.c_dp, interpret=self.interpret,
+            )
+            out = (
+                float(t[0, 0]),
+                [float(v) for v in np.asarray(stage_max[0])],
+                np.asarray(tp_bw, dtype=np.float64),
+                np.asarray(dp_bw, dtype=np.float64),
+            )
+        d["_red_key"] = key
+        d["_red_val"] = out
+        return out
+
+    def iteration_time(self, sim: TrainingSimulator) -> float:
+        out = self._outs(sim)
+        return sim._vec_iteration_time() if out is None else out[0]
+
+    def per_microbatch_times(self, sim: TrainingSimulator) -> list[float]:
+        out = self._outs(sim)
+        if out is None:
+            return [float(v) for v in sim._cells().stage_max]
+        return list(out[1])
+
+    def profile_groups(self, sim: TrainingSimulator) -> dict[str, float]:
+        out = self._outs(sim)
+        if out is None:
+            return sim._vec_profile_groups()
+        _, _, tp_bw, dp_bw = out
+        lay = sim._layout()
+        m = sim.job.model
+        job = sim.job
+        res: dict[str, float] = {}
+        tp_vol = m.comm_tp_bytes(job.tp, job.pp, 1)
+        times = 2.0 * (job.tp - 1) / job.tp * tp_vol / tp_bw
+        res.update(zip(lay.tp_keys, times.reshape(-1).tolist(), strict=True))
+        dp_vol = m.comm_dp_bytes(job.tp, job.pp)
+        times = 2.0 * (job.dp - 1) / job.dp * dp_vol / dp_bw
+        res.update(zip(lay.dp_keys, times.reshape(-1).tolist(), strict=True))
+        return res
+
+
+#: registry the equivalence tests enumerate; "numpy" mirrors the screening
+#: registry's alias for the default non-kernel path
+REDUCTION_BACKENDS: dict[str, type] = {
+    "reference": ReferenceReduction,
+    "vectorized": VectorizedReduction,
+    "numpy": VectorizedReduction,
+    "pallas": PallasReduction,
+}
+
+
+def _pallas_compiled() -> bool:
+    """True when jax is loaded *and* targets a compiled (non-CPU) backend.
+
+    Deliberately checks ``sys.modules`` instead of importing jax: resolving
+    the default backend must not drag the jax runtime into every numpy-only
+    simulator process.
+    """
+    jax = sys.modules.get("jax")
+    if jax is None:
+        return False
+    try:
+        return jax.default_backend() != "cpu"
+    except Exception:  # pragma: no cover - uninitialized backends
+        return False
+
+
+def select_reduction_backend(name: str | None = None):
+    """Instantiate a reduction backend by registry name; None/"auto" picks
+    ``pallas`` on a compiled jax backend and ``vectorized`` otherwise."""
+    if name in (None, "auto"):
+        name = "pallas" if _pallas_compiled() else "vectorized"
+    try:
+        cls = REDUCTION_BACKENDS[name]
+    except KeyError:
+        raise ValueError(
+            f"unknown reduction backend {name!r}; "
+            f"registered: {sorted(REDUCTION_BACKENDS)}"
+        ) from None
+    return cls()
+
+
+def resolve_reduction_backend(spec):
+    """``TrainingSimulator.reduction`` -> backend instance, or None for the
+    inline vectorized fast path ("auto" on CPU-only jax, "vectorized",
+    "numpy"). Accepts a registry name or a ready ReductionBackend
+    instance."""
+    if spec in (None, "auto"):
+        return PallasReduction() if _pallas_compiled() else None
+    if isinstance(spec, str):
+        if spec in ("vectorized", "numpy"):
+            return None
+        return select_reduction_backend(spec)
+    if hasattr(spec, "iteration_time"):
+        return spec
+    raise TypeError(
+        f"reduction must be a registry name or ReductionBackend, got {spec!r}"
+    )

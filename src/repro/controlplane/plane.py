@@ -154,10 +154,18 @@ class ControlPlane:
         decision_hook: object | None = None,
         planner_knobs: PlannerKnobs | None = None,
         tracer: object | None = None,
+        screening_backend: object | None = None,
     ) -> None:
         self._jobs: dict[str, JobHandle] = {}
         self._fleet: FleetDetect | None = None
         self._fleet_kwargs = dict(fleet_kwargs or {})
+        #: screening backend for the fleet screen: a registry name
+        #: ("scalar"/"batched"/"pallas"/"auto") or a
+        #: :class:`repro.core.bocd.ScreeningBackendFactory` instance —
+        #: forwarded to :class:`FleetDetect`; None keeps FleetDetect's
+        #: own default ("auto") or whatever ``fleet_kwargs`` says.
+        if screening_backend is not None:
+            self._fleet_kwargs["backend"] = screening_backend
         #: fault-tolerant executor knobs (retry/backoff/quarantine)
         self.executor_policy = executor_policy or ExecutorPolicy()
         #: injectable executor fault model: (job_id, strategy, attempt, now)

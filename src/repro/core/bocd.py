@@ -31,7 +31,9 @@ Two implementations share the recursion:
 from __future__ import annotations
 
 import math
+import warnings
 from dataclasses import dataclass, field
+from typing import Protocol, runtime_checkable
 
 import numpy as np
 
@@ -637,3 +639,243 @@ try:  # scipy is available in this environment; keep a pure fallback anyway.
 except ImportError:  # pragma: no cover
     def _gammaln(x):
         return np.vectorize(math.lgamma)(x)
+
+
+# ----------------------------------------------------------------------
+# Screening backends (docs/kernels.md)
+#
+# The fleet screening loop talks to an *instance* implementing the batched
+# interface below; FleetDetect / ControlPlane select a backend *factory*
+# (scalar / batched-numpy / pallas) instead of hard-wiring BatchedBOCD, so
+# implementations stay interchangeable and equivalence-tested from one
+# registry.
+# ----------------------------------------------------------------------
+
+@runtime_checkable
+class ScreeningBackend(Protocol):
+    """Batched run-length screening state over ``n_series`` streams.
+
+    The contract (shapes per :class:`BatchedBOCD`, the reference semantics):
+    ``update(x)`` consumes one observation per stream and returns
+    ``Pr(r_t = 0)`` per stream; ``p_recent_change``/``map_runlength`` report
+    posterior statistics; ``take_columns`` sub-slices streams on membership
+    churn; ``retune`` adjusts hazard / frontier cap for future updates.
+    """
+
+    n_series: int
+
+    def update(self, x: np.ndarray) -> np.ndarray: ...
+    def p_recent_change(self, window: int = 2) -> np.ndarray: ...
+    def map_runlength(self) -> np.ndarray: ...
+    def take_columns(self, idx: np.ndarray) -> None: ...
+    def retune(self, hazard: float | None = None,
+               max_hypotheses: int | None = None) -> None: ...
+
+
+class ScalarFanout:
+    """B independent scalar :class:`BOCD` detectors behind the batched
+    screening interface — the per-column oracle as "just another backend".
+
+    O(B) Python-loop cost per tick; useful for tiny fleets and as the
+    ground truth the vectorized/Pallas backends are equivalence-tested
+    against (per column it *is* the scalar recursion, bit for bit).
+    """
+
+    def __init__(
+        self,
+        n_series: int,
+        hazard: float = 1.0 / 100.0,
+        mu0: float | np.ndarray = 0.0,
+        kappa0: float = 1.0,
+        alpha0: float = 1.0,
+        beta0: float = 1.0,
+        cp_threshold: float = DEFAULT_CP_THRESHOLD,
+        truncation: float = 1e-6,
+        max_hypotheses: int | None = None,
+    ) -> None:
+        b = int(n_series)
+        mu0 = np.broadcast_to(np.asarray(mu0, dtype=np.float64), (b,))
+        self.n_series = b
+        self.hazard = hazard
+        self.cp_threshold = cp_threshold
+        self.max_hypotheses = max_hypotheses
+        self._dets = [
+            BOCD(
+                hazard=hazard, mu0=float(m), kappa0=kappa0, alpha0=alpha0,
+                beta0=beta0, cp_threshold=cp_threshold, truncation=truncation,
+                max_hypotheses=max_hypotheses,
+            )
+            for m in mu0
+        ]
+
+    def update(self, x: np.ndarray) -> np.ndarray:
+        x = np.asarray(x, dtype=np.float64)
+        if x.shape != (self.n_series,):
+            raise ValueError(f"expected shape ({self.n_series},), got {x.shape}")
+        return np.fromiter(
+            (d.update(float(xi)) for d, xi in zip(self._dets, x)),
+            dtype=np.float64, count=self.n_series,
+        )
+
+    def p_recent_change(self, window: int = 2) -> np.ndarray:
+        return np.fromiter(
+            (d.p_recent_change(window) for d in self._dets),
+            dtype=np.float64, count=self.n_series,
+        )
+
+    def map_runlength(self) -> np.ndarray:
+        return np.fromiter(
+            (d.map_runlength() for d in self._dets),
+            dtype=np.int64, count=self.n_series,
+        )
+
+    def take_columns(self, idx: np.ndarray) -> None:
+        idx = np.asarray(idx, dtype=np.int64)
+        self._dets = [self._dets[int(i)] for i in idx]
+        self.n_series = int(idx.size)
+
+    def retune(
+        self,
+        hazard: float | None = None,
+        max_hypotheses: int | None = None,
+    ) -> None:
+        if hazard is not None:
+            self.hazard = hazard
+        if max_hypotheses is not None:
+            self.max_hypotheses = max_hypotheses
+        for d in self._dets:
+            d.retune(hazard=hazard, max_hypotheses=max_hypotheses)
+
+
+class ScreeningBackendFactory:
+    """Constructs :class:`ScreeningBackend` instances.
+
+    The screening layer creates backend state dynamically (one instance per
+    warmed cohort, sized to the cohort and seeded with its per-stream
+    ``mu0``), so the pluggable unit is a *factory*, not an instance.
+    """
+
+    name = "abstract"
+
+    def make(self, n_series: int, **kwargs) -> ScreeningBackend:
+        raise NotImplementedError
+
+    def __repr__(self) -> str:  # pragma: no cover - cosmetic
+        return f"<ScreeningBackendFactory {self.name!r}>"
+
+
+class ScalarScreening(ScreeningBackendFactory):
+    name = "scalar"
+
+    def make(self, n_series: int, **kwargs) -> ScalarFanout:
+        return ScalarFanout(n_series, **kwargs)
+
+
+class BatchedScreening(ScreeningBackendFactory):
+    name = "batched"
+
+    def make(self, n_series: int, **kwargs) -> BatchedBOCD:
+        return BatchedBOCD(n_series, **kwargs)
+
+
+class PallasScreening(ScreeningBackendFactory):
+    """Fused Pallas step kernel (``repro.kernels.bocd_step.PallasBOCD``).
+
+    ``interpret``/``dtype`` override the kernel defaults (interpret mode is
+    auto-enabled on CPU jax; dtype defaults to float32 — see
+    docs/kernels.md for the tolerance policy).
+    """
+
+    name = "pallas"
+
+    def __init__(self, interpret: bool | None = None, dtype=None) -> None:
+        self.interpret = interpret
+        self.dtype = dtype
+
+    def make(self, n_series: int, **kwargs):
+        from repro.kernels.bocd_step import PallasBOCD
+
+        if self.interpret is not None:
+            kwargs.setdefault("interpret", self.interpret)
+        if self.dtype is not None:
+            kwargs.setdefault("dtype", self.dtype)
+        return PallasBOCD(n_series, **kwargs)
+
+
+#: Registry enumerated by the backend-equivalence tests; ``numpy`` is an
+#: alias for the vectorized numpy implementation.
+SCREENING_BACKENDS: dict[str, ScreeningBackendFactory] = {
+    "scalar": ScalarScreening(),
+    "batched": BatchedScreening(),
+    "pallas": PallasScreening(),
+}
+SCREENING_BACKENDS["numpy"] = SCREENING_BACKENDS["batched"]
+
+
+def pallas_is_compiled() -> bool:
+    """True when jax will *compile* Pallas kernels (non-CPU backend).
+
+    On this container's CPU jax, Pallas runs in interpret mode — correct
+    but slow, so auto-selection prefers the vectorized numpy backend there
+    and only tests/CI opt into ``pallas`` explicitly.
+    """
+    try:
+        import jax
+
+        return jax.default_backend() != "cpu"
+    except Exception:  # pragma: no cover - jax always present here
+        return False
+
+
+def select_backend(name: str | None = None) -> ScreeningBackendFactory:
+    """Resolve a screening backend by name.
+
+    ``None``/``"auto"`` auto-detects: Pallas where jax compiles it (GPU/TPU),
+    the vectorized numpy ``batched`` backend everywhere else.
+    """
+    if name is None or name == "auto":
+        return SCREENING_BACKENDS["pallas" if pallas_is_compiled() else "batched"]
+    try:
+        return SCREENING_BACKENDS[name]
+    except KeyError:
+        raise ValueError(
+            f"unknown screening backend {name!r}; "
+            f"registered: {sorted(SCREENING_BACKENDS)}"
+        ) from None
+
+
+class _ClassShim(ScreeningBackendFactory):
+    """Deprecation shim: wraps a backend *class* passed where a factory
+    instance is now expected (the pre-backend-API constructor style)."""
+
+    def __init__(self, cls: type) -> None:
+        self._cls = cls
+        self.name = getattr(cls, "__name__", "class")
+
+    def make(self, n_series: int, **kwargs) -> ScreeningBackend:
+        return self._cls(n_series, **kwargs)
+
+
+def resolve_screening_backend(spec) -> ScreeningBackendFactory:
+    """Accept a backend name, ``None``/``"auto"``, a factory instance, or
+    (deprecated, with a warning) a backend class such as ``BatchedBOCD``."""
+    if spec is None or isinstance(spec, str):
+        return select_backend(spec)
+    if isinstance(spec, type):
+        warnings.warn(
+            "passing a screening backend class is deprecated; pass a "
+            "ScreeningBackendFactory instance or a registry name "
+            f"(e.g. {sorted(set(SCREENING_BACKENDS))!r})",
+            DeprecationWarning,
+            stacklevel=2,
+        )
+        if spec is BatchedBOCD:
+            return SCREENING_BACKENDS["batched"]
+        if spec is BOCD:
+            return SCREENING_BACKENDS["scalar"]
+        return _ClassShim(spec)
+    if isinstance(spec, ScreeningBackendFactory) or hasattr(spec, "make"):
+        return spec
+    raise TypeError(
+        f"screening backend must be a name, factory, or class; got {spec!r}"
+    )

@@ -188,6 +188,28 @@ def detect_slow_iterations_sliding_window(
     return out
 
 
+class _ScalarView:
+    """Scalar facade over a one-column batched screening backend, so
+    :class:`FalconDetect` can run any registry backend on its single
+    stream through the scalar ``float -> float`` interface."""
+
+    def __init__(self, backend: bocd.ScreeningBackend) -> None:
+        self._b = backend
+
+    def update(self, x: float) -> float:
+        return float(self._b.update(np.array([x], dtype=np.float64))[0])
+
+    def p_recent_change(self, window: int = 2) -> float:
+        return float(self._b.p_recent_change(window)[0])
+
+    def map_runlength(self) -> int:
+        return int(self._b.map_runlength()[0])
+
+    def retune(self, hazard: float | None = None,
+               max_hypotheses: int | None = None) -> None:
+        self._b.retune(hazard=hazard, max_hypotheses=max_hypotheses)
+
+
 @dataclass
 class FalconDetect:
     """Online detector: feed iteration times, get pinpointed fail-slows."""
@@ -201,6 +223,11 @@ class FalconDetect:
     #: flattens the iteration-time signal: the *fault's* relief no longer
     #: shows up as a change-point, only re-validation can see it.
     revalidate_every: int = 10
+    #: screening backend for the per-job stream: ``"scalar"`` (the exact
+    #: per-series recursion, the default) or any registry name / factory
+    #: from :mod:`repro.core.bocd` — non-scalar backends run one-column
+    #: batched state behind a scalar facade.
+    backend: object = "scalar"
 
     warmup: int = 8
     #: retained iteration-time samples. Only trailing windows are ever read
@@ -209,7 +236,7 @@ class FalconDetect:
     history_cap: int = 512
 
     _series: RingBuffer = field(init=False)
-    _bocd: bocd.BOCD | None = field(init=False, default=None)
+    _bocd: object | None = field(init=False, default=None)
     _scale: float = field(init=False, default=1.0)
     _healthy: float = field(init=False, default=0.0)
     active_event: FailSlowEvent | None = field(init=False, default=None)
@@ -232,12 +259,23 @@ class FalconDetect:
                 return None
             warm = self._series.view(0, n)
             self._scale = bocd.noise_scale(warm)
-            self._bocd = bocd.BOCD(
-                hazard=self.hazard,
-                cp_threshold=self.cp_threshold,
-                mu0=float(warm[0]) / self._scale,
-                beta0=1.0,
-            )
+            factory = bocd.resolve_screening_backend(self.backend)
+            if factory.name == "scalar":
+                # Exact per-series recursion, no facade indirection.
+                self._bocd = bocd.BOCD(
+                    hazard=self.hazard,
+                    cp_threshold=self.cp_threshold,
+                    mu0=float(warm[0]) / self._scale,
+                    beta0=1.0,
+                )
+            else:
+                self._bocd = _ScalarView(factory.make(
+                    1,
+                    hazard=self.hazard,
+                    cp_threshold=self.cp_threshold,
+                    mu0=float(warm[0]) / self._scale,
+                    beta0=1.0,
+                ))
             for v in warm[:-1]:
                 self._bocd.update(float(v) / self._scale)
         self._bocd.update(iter_time / self._scale)
@@ -611,7 +649,7 @@ class _Cohort:
 
     cols: list[int]
     start: int
-    batch: bocd.BatchedBOCD | None = None
+    batch: bocd.ScreeningBackend | None = None
 
 
 @dataclass
@@ -704,6 +742,12 @@ class FleetDetect:
     adapt_every: int = 0
     hazard_bounds: tuple[float, float] = (1.0 / 20000.0, 1.0 / 20.0)
     cap_bounds: tuple[int, int] = (8, 256)
+    #: screening backend: a registry name (``"scalar"`` / ``"batched"`` /
+    #: ``"pallas"``), ``"auto"`` (Pallas where jax compiles it, vectorized
+    #: numpy elsewhere — :func:`repro.core.bocd.select_backend`), or a
+    #: :class:`repro.core.bocd.ScreeningBackendFactory` instance. Passing a
+    #: backend *class* (the pre-backend-API style) still works but warns.
+    backend: object = "auto"
     #: last re-tune's chosen values (None until the first retune); the
     #: control plane mirrors this into its typed event log as ScreenTuning
     last_tuning: dict | None = field(init=False, default=None)
@@ -714,6 +758,7 @@ class FleetDetect:
     _last_flag: np.ndarray = field(init=False)
 
     def __post_init__(self) -> None:
+        self._backend = bocd.resolve_screening_backend(self.backend)
         self._hazard0 = self.hazard
         self._flags_total = 0
         self._worker_ticks = 0
@@ -822,7 +867,7 @@ class FleetDetect:
         cols = sorted(c for cohort in warmed for c in cohort.cols)
         warm = self._history.rows(start, n)[:, cols]
         scale = bocd.noise_scale_batch(warm[: self.warmup])
-        batch = bocd.BatchedBOCD(
+        batch = self._backend.make(
             len(cols),
             hazard=self.hazard,
             mu0=warm[0] / scale,
@@ -866,7 +911,7 @@ class FleetDetect:
                 warm = self._history.rows(cohort.start, n)[:, cols]
                 scale = bocd.noise_scale_batch(warm)
                 self._scale[cols] = scale
-                cohort.batch = bocd.BatchedBOCD(
+                cohort.batch = self._backend.make(
                     cols.size,
                     hazard=self.hazard,
                     mu0=warm[0] / scale,

@@ -16,6 +16,10 @@ trace, loadable in Perfetto / ``chrome://tracing``) and
 keeps every Nth per-job Observation in the report's event log (sampled
 iteration-time lanes; default 0 = none, the byte-stable historical form).
 Render dashboards from the report with ``python -m repro.launch.obs``.
+
+``--screening-backend`` / ``--reduction-backend`` override the fleet
+screen's and the simulators' compute backends (registry names, see
+docs/kernels.md); the committed reports pin the deterministic defaults.
 """
 from __future__ import annotations
 
@@ -90,6 +94,13 @@ def main() -> None:
     ap.add_argument("--obs-stride", type=int, default=0,
                     help="keep every Nth per-job Observation in the event "
                          "log (0 = none)")
+    ap.add_argument("--screening-backend", default=None,
+                    help="fleet-screen backend (scalar/batched/pallas/auto; "
+                         "default: the control plane's auto selection)")
+    ap.add_argument("--reduction-backend", default=None,
+                    help="simulator reduction backend (reference/vectorized/"
+                         "pallas/auto; default: the simulator's auto "
+                         "selection)")
     ap.add_argument("--list-presets", action="store_true")
     ap.add_argument("--quiet", action="store_true")
     args = ap.parse_args()
@@ -102,6 +113,8 @@ def main() -> None:
     spec, runs, report = run_and_score(
         args.preset, n_jobs=args.jobs, seed=args.seed, max_ticks=args.ticks,
         obs=args.obs, observation_stride=args.obs_stride,
+        screening_backend=args.screening_backend,
+        reduction_backend=args.reduction_backend,
     )
     path = write_report(report, args.out)
     if not args.quiet:

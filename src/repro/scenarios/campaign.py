@@ -391,6 +391,8 @@ def run_campaign(
     planner_knobs=None,
     only_jobs=None,
     tracer=None,
+    screening_backend=None,
+    reduction_backend=None,
 ) -> RunResult:
     """Execute one campaign under the given mitigation mode.
 
@@ -414,6 +416,13 @@ def run_campaign(
       interact: each job's trajectory there is bit-identical whether or
       not its neighbours run, which is what makes affected-jobs-only
       replay exact and cheap.
+    * ``screening_backend`` — fleet-screen backend override forwarded to
+      :class:`ControlPlane` (a ``SCREENING_BACKENDS`` registry name or
+      factory instance); None keeps the plane's default.
+    * ``reduction_backend`` — per-simulator reduction backend override (a
+      ``REDUCTION_BACKENDS`` registry name or instance) assigned to every
+      job simulator this run builds; None keeps the simulator default
+      ("auto").
     * ``tracer`` — a :class:`repro.obs.SpanTracer` on the campaign's
       simulated clock. The runner records each job's lifetime span and its
       injected fault episodes (ground truth lanes); the control plane adds
@@ -463,6 +472,13 @@ def run_campaign(
         fail_p, timeout_p = preset.executor_faults
         plane = ControlPlane(
             max_events=1 << 20,
+            # Adaptive screening re-tunes are a falcon-mode feature; the
+            # ckpt baseline keeps the fixed constructor knobs.
+            fleet_kwargs=(
+                {"adapt_every": preset.adapt_every}
+                if mode == "falcon" and preset.adapt_every else None
+            ),
+            screening_backend=screening_backend,
             duration_model=DurationModel() if mode == "falcon" else None,
             # Fresh per run so ckpt and falcon modes draw identical streams.
             executor_faults=(
@@ -486,6 +502,8 @@ def run_campaign(
         while pending and pending[0].join_tick <= tick:
             placed = pending.pop(0)
             sim = placed.make_sim()
+            if reduction_backend is not None:
+                sim.reduction = reduction_backend
             injector = FailSlowInjector(
                 list(placed.local_schedule) if with_faults else []
             )

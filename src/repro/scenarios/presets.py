@@ -93,6 +93,12 @@ class ScenarioPreset:
     #: scoring budget: a hang should be aborted within this many ticks of
     #: its injection (robustness report's deadline_budget_s)
     abort_budget_ticks: float = 12.0
+    #: fleet-screen adaptive re-tune period in ticks, applied to the
+    #: *falcon* mode only (the ckpt baseline keeps fixed screening knobs so
+    #: the comparison stays honest): every this-many ticks FleetDetect
+    #: re-derives the hazard / run-length cap from the observed flag rate
+    #: (:meth:`repro.core.detector.FleetDetect._retune`). 0 disables.
+    adapt_every: int = 50
 
     def overheads(self) -> dict[StrategyKey, float]:
         """Ski-rental one-off action costs on this preset's clock.

@@ -592,6 +592,8 @@ def run_and_score(
     max_ticks: int | None = None,
     obs: bool = False,
     observation_stride: int = 0,
+    screening_backend: str | None = None,
+    reduction_backend: str | None = None,
 ) -> tuple[CampaignSpec, dict[str, RunResult], dict]:
     """Build a campaign, execute all four modes, and score it.
 
@@ -600,6 +602,11 @@ def run_and_score(
     ``runs["falcon"].tracer``), ready for
     :func:`repro.obs.recorder.write_sidecars`. The scored report is
     byte-identical either way — tracing never alters the run.
+
+    ``screening_backend`` / ``reduction_backend`` override the fleet
+    screen's and the simulators' compute backends (registry names — see
+    docs/kernels.md); None keeps the deterministic defaults the committed
+    reports pin.
     """
     spec = build_campaign(preset, n_jobs=n_jobs, seed=seed, max_ticks=max_ticks)
     runs = {}
@@ -609,7 +616,11 @@ def run_and_score(
             from repro.obs import SpanTracer
 
             tracer = SpanTracer()
-        runs[mode] = run_campaign(spec, mode, tracer=tracer)
+        runs[mode] = run_campaign(
+            spec, mode, tracer=tracer,
+            screening_backend=screening_backend,
+            reduction_backend=reduction_backend,
+        )
     return spec, runs, score_campaign(
         spec, runs, observation_stride=observation_stride
     )

@@ -556,3 +556,151 @@ def test_screen_tuning_event_in_typed_log():
     for k in range(100):
         plane2.tick({"j0": t * float(rng.normal(1, 0.004))}, float(k))
     assert not [e for e in plane2.events if isinstance(e, ScreenTuning)]
+
+
+# ------------------------------------------------- backend registries
+# Satellite of the ScreeningBackend/ReductionBackend API redesign: every
+# registry entry must be interchangeable within its documented tolerance
+# (scalar fan-out is the per-column oracle; batched numpy is exact;
+# Pallas carries the float32 kernel tolerance from docs/kernels.md).
+
+
+def _screen_traces(b, t_max, seed=0):
+    rng = np.random.default_rng(seed)
+    x = rng.normal(0.0, 1.0, (t_max, b))
+    x[t_max // 2:, :: max(b // 3, 1)] += 6.0  # strong breaks, scaled units
+    return x
+
+
+@pytest.mark.parametrize("b", [1, 7, 64, 1000])
+def test_screening_backends_equivalent_probabilities(b):
+    """scalar / batched / pallas report the same change probabilities per
+    stream (registry promise), at fleet sizes from one stream to 1k."""
+    t_max = 16 if b == 1000 else 24
+    x = _screen_traces(b, t_max, seed=b)
+    dets = {
+        name: bocd.SCREENING_BACKENDS[name].make(
+            b, mu0=x[0], max_hypotheses=32
+        )
+        for name in ("scalar", "batched", "pallas")
+    }
+    for t in range(t_max):
+        p = {name: det.update(x[t]) for name, det in dets.items()}
+        np.testing.assert_allclose(   # numpy paths: same recursion exactly
+            p["batched"], p["scalar"], rtol=1e-9, atol=1e-12
+        )
+        np.testing.assert_allclose(   # float32 kernel: documented drift
+            p["pallas"], p["batched"], rtol=1e-4, atol=1e-4
+        )
+    np.testing.assert_array_equal(
+        dets["batched"].map_runlength(), dets["scalar"].map_runlength()
+    )
+    np.testing.assert_allclose(
+        dets["pallas"].p_recent_change(), dets["batched"].p_recent_change(),
+        rtol=1e-4, atol=1e-4,
+    )
+
+
+def test_fleet_detect_backend_flag_parity():
+    """FleetDetect raises identical flags whichever registry backend runs
+    the screen — the end-to-end guarantee the CI kernels job smoke-tests."""
+    b, t_max = 48, 60
+    rng = np.random.default_rng(11)
+    x = rng.normal(1.0, 0.01, (t_max, b))
+    x[30:, [3, 17, 40]] *= 1.35
+    flags = {}
+    for name in ("scalar", "batched", "pallas"):
+        fleet = FleetDetect(n_workers=b, backend=name)
+        flags[name] = sorted(
+            (t, f.worker) for t in range(t_max) for f in fleet.tick(x[t])
+        )
+    assert flags["batched"] == flags["scalar"]
+    assert flags["pallas"] == flags["batched"]
+    assert {w for _, w in flags["batched"]} == {3, 17, 40}
+
+
+def test_screening_backend_registry_resolution():
+    assert bocd.select_backend("batched").name == "batched"
+    assert bocd.select_backend("numpy").name == "batched"  # alias
+    auto = bocd.select_backend(None)
+    assert auto.name == ("pallas" if bocd.pallas_is_compiled() else "batched")
+    with pytest.raises(ValueError, match="unknown screening backend"):
+        bocd.select_backend("fpga")
+    # factory instances pass through; backend classes warn but still work
+    fac = bocd.SCREENING_BACKENDS["scalar"]
+    assert bocd.resolve_screening_backend(fac) is fac
+    with pytest.deprecated_call():
+        shim = bocd.resolve_screening_backend(bocd.BatchedBOCD)
+    assert shim.name == "batched"
+
+
+def _faulted_sim(n_devices=512, seed=0):
+    tp, pp = 4, 4
+    dp = n_devices // (tp * pp)
+    model = ModelSpec(layers=16, hidden=2048, seq_len=1024, vocab=32000)
+    job = JobSpec(model=model, tp=tp, dp=dp, pp=pp, micro_batches=2 * dp)
+    sim = TrainingSimulator(
+        cluster=ClusterSpec(n_nodes=n_devices // 8), job=job
+    )
+    rng = np.random.default_rng(seed)
+    for d in rng.choice(n_devices, 5, replace=False):
+        sim.state.devices[int(d)].compute_speed = 0.7
+    sim.state.degrade_nic(int(rng.integers(n_devices // 8)), 0.5)
+    return sim
+
+
+def test_reduction_backends_equivalent():
+    """Every ReductionBackend registry entry agrees with the reference
+    nested-loop oracle on a faulted hybrid topology, within its own
+    documented tolerance, across the whole read API."""
+    from repro.cluster.simulator import REDUCTION_BACKENDS
+
+    sim = _faulted_sim()
+    want_t = sim.iteration_time_reference()
+    want_pm = np.asarray(sim.per_microbatch_times_reference())
+    want_pg = sim.profile_groups_reference()
+    for name, cls in REDUCTION_BACKENDS.items():
+        rb = cls()
+        tol = max(rb.tolerance, 1e-12)
+        got_t = float(rb.iteration_time(sim))
+        np.testing.assert_allclose(got_t, want_t, rtol=tol, err_msg=name)
+        got_pm = np.asarray(rb.per_microbatch_times(sim))
+        np.testing.assert_allclose(got_pm, want_pm, rtol=tol, err_msg=name)
+        got_pg = rb.profile_groups(sim)
+        assert got_pg.keys() == want_pg.keys(), name
+        for k in want_pg:
+            np.testing.assert_allclose(
+                got_pg[k], want_pg[k], rtol=tol, err_msg=f"{name}:{k}"
+            )
+
+
+def test_reduction_backend_resolution_and_sim_knob():
+    from repro.cluster import simulator as S
+
+    # the hot path stays inline for the defaults (no indirection object)
+    assert S.resolve_reduction_backend(None) is None or \
+        S.resolve_reduction_backend(None).name == "pallas"
+    assert S.resolve_reduction_backend("vectorized") is None
+    assert S.resolve_reduction_backend("numpy") is None
+    assert S.resolve_reduction_backend("reference").name == "reference"
+    with pytest.raises(ValueError, match="unknown reduction backend"):
+        S.select_reduction_backend("abacus")
+    with pytest.raises(TypeError):
+        S.resolve_reduction_backend(42)
+
+    # the TrainingSimulator knob swaps backends and stays consistent
+    sim = _faulted_sim(seed=3)
+    t_vec = sim.iteration_time()
+    sim.reduction = "reference"
+    t_ref = sim.iteration_time()
+    np.testing.assert_allclose(t_vec, t_ref, rtol=1e-9)
+    sim.reduction = "pallas"
+    t_pal = sim.iteration_time()
+    np.testing.assert_allclose(t_pal, t_ref, rtol=1e-4)
+    # and the memo keeps tracking mutations across backend switches
+    sim.state.devices[0].compute_speed = 0.4
+    t_after = sim.iteration_time()
+    assert t_after > t_pal
+    np.testing.assert_allclose(
+        t_after, sim.iteration_time_reference(), rtol=1e-4
+    )

@@ -195,3 +195,187 @@ def test_decode_step_kernel_path_matches_jnp():
             np.asarray(ker_logits, np.float32),
             rtol=2e-2, atol=2e-2,
         )
+
+
+# ----------------------------------------------- BOCD screening kernel
+# Tolerance policy (docs/kernels.md): the Pallas kernel must match the
+# same math as a plain traced-jnp function *bit for bit* in interpret
+# mode (same ops, same order); the float32 kernel state is allowed
+# <=1e-4 relative drift vs the float64 numpy oracle.
+from repro.core import bocd  # noqa: E402
+from repro.kernels import bocd_step as bk  # noqa: E402
+from repro.kernels import cell_reduce as ck  # noqa: E402
+
+
+def _bocd_state(k, b, seed=0, dtype=jnp.float32):
+    det = bk.PallasBOCD(b, max_hypotheses=k, dtype=dtype, interpret=True)
+    return det
+
+
+@pytest.mark.parametrize("b", [1, 7, 64])
+def test_bocd_step_kernel_bitmatches_traced_reference(b):
+    """pallas_call(interpret) vs the identical math traced without
+    pallas_call: zero tolerance, every state array, several steps."""
+    k = 16
+    det = _bocd_state(k, b)
+    state_r = (det._log_r, det._mu, det._beta, det._kappa, det._alpha,
+               det._rl)
+    rng = np.random.default_rng(0)
+    x = rng.normal(1.0, 0.05, (12, b))
+    x[8:] += 0.5  # a change, so growth/truncation/recycling all fire
+    for t in range(12):
+        xs = jnp.asarray(x[t], det.dtype)
+        out_k = bk.bocd_step(xs, *state_r, det._mu0, det.hazard,
+                             interpret=True)
+        out_r = bk.bocd_step_reference(xs, *state_r, det._mu0, det.hazard)
+        for a, bref in zip(out_k, out_r, strict=True):
+            np.testing.assert_array_equal(np.asarray(a), np.asarray(bref))
+        state_r = out_r[:6]
+
+
+def test_bocd_step_kernel_nan_isolation():
+    """NaN (censored) observations poison only their own column: clean
+    columns stay finite and match a NaN-free run. The victim-slot choice
+    is shared across columns (module docstring), so the isolation
+    guarantee is tolerance-level, not bit-level."""
+    k, b = 16, 5
+    full = _bocd_state(k, b, seed=1)
+    clean = _bocd_state(k, b - 1, seed=1)
+    rng = np.random.default_rng(1)
+    x = rng.normal(1.0, 0.05, (10, b))
+    x[3:, -1] = np.nan  # censor the last column mid-stream
+    p_full = [full.update(x[t]) for t in range(10)]
+    p_clean = [clean.update(x[t, :-1]) for t in range(10)]
+    for pf, pc in zip(p_full, p_clean, strict=True):
+        assert np.isfinite(pf[:-1]).all()
+        np.testing.assert_allclose(pf[:-1], pc, rtol=1e-3, atol=1e-3)
+    assert np.isnan(p_full[-1][-1])  # the censored column is marked
+    # Posterior statistics on the clean columns stay usable: finite,
+    # in-range probabilities and valid run lengths. (The shared victim
+    # slot means their exact values legitimately shift a little, so no
+    # tight equality here — FleetDetect re-verifies flags exactly.)
+    prc = full.p_recent_change()[:-1]
+    assert np.isfinite(prc).all() and ((prc >= 0) & (prc <= 1)).all()
+    assert (full.map_runlength()[:-1] >= 0).all()
+
+
+@pytest.mark.parametrize("b", [1, 7, 64])
+def test_pallas_bocd_matches_float64_numpy_oracle(b):
+    """Float32 fixed-slot frontier vs the float64 BatchedBOCD oracle,
+    while the frontier is not truncating (documented <=1e-4 drift)."""
+    t_max, k = 24, 32
+    rng = np.random.default_rng(2)
+    x = rng.normal(1.0, 0.05, (t_max, b))
+    x[16:] *= 1.3
+    pal = bk.PallasBOCD(b, mu0=x[0], max_hypotheses=k, interpret=True)
+    ora = bocd.BatchedBOCD(b, mu0=x[0], max_hypotheses=k)
+    for t in range(t_max):
+        p_pal = pal.update(x[t])
+        p_ora = ora.update(x[t])
+        np.testing.assert_allclose(p_pal, p_ora, rtol=1e-4, atol=1e-4)
+    np.testing.assert_allclose(
+        pal.p_recent_change(), ora.p_recent_change(), rtol=1e-4, atol=1e-4
+    )
+    np.testing.assert_array_equal(pal.map_runlength(), ora.map_runlength())
+
+
+@pytest.mark.parametrize("k", [2, 4])
+def test_pallas_bocd_frontier_truncation_edges(k):
+    """Tightest legal slot caps: the frontier recycles its victim slot
+    every tick and the posterior stays a valid distribution throughout."""
+    b, t_max = 7, 30
+    rng = np.random.default_rng(3)
+    x = rng.normal(1.0, 0.05, (t_max, b))
+    x[20:] *= 1.4
+    det = bk.PallasBOCD(b, mu0=x[0], max_hypotheses=k, interpret=True)
+    p_hist = []
+    for t in range(t_max):
+        p0 = det.update(x[t])
+        p_hist.append(p0)
+        assert np.all((p0 >= 0.0) & (p0 <= 1.0))
+        lr = np.asarray(det._log_r, np.float64)
+        assert lr.shape[0] == k  # the cap held
+        mass = np.exp(lr[np.isfinite(lr).any(axis=1)]).sum(axis=0)
+        np.testing.assert_allclose(mass, 1.0, rtol=1e-3)
+    # the break still registers through the tight cap: the change-point
+    # mass right after the fault exceeds anything the quiet period produced
+    p = np.asarray(p_hist)
+    assert p[20:23].max() > 2.0 * p[5:20].max()
+
+
+def test_pallas_bocd_take_columns_equals_fresh_slice():
+    b = 10
+    rng = np.random.default_rng(4)
+    x = rng.normal(1.0, 0.05, (15, b))
+    full = bk.PallasBOCD(b, mu0=x[0], interpret=True)
+    keep = np.asarray([0, 3, 7])
+    sub = bk.PallasBOCD(keep.size, mu0=x[0, keep], interpret=True)
+    for t in range(15):
+        full.update(x[t])
+        sub.update(x[t, keep])
+    full.take_columns(keep)
+    np.testing.assert_array_equal(
+        np.asarray(full._log_r), np.asarray(sub._log_r)
+    )
+    np.testing.assert_array_equal(
+        full.p_recent_change(), sub.p_recent_change()
+    )
+
+
+# ---------------------------------------------- simulator cell reduce
+def _reduce_inputs(pp, tp, dp, seed=0):
+    rng = np.random.default_rng(seed)
+    return dict(
+        cell_speed=jnp.asarray(rng.uniform(0.5, 1.0, (pp, dp)),
+                               jnp.float32),
+        tp_edge=jnp.asarray(rng.uniform(5.0, 40.0, (pp, dp, tp)),
+                            jnp.float32),
+        dp_edge=jnp.asarray(rng.uniform(5.0, 40.0, (pp, dp, tp)),
+                            jnp.float32),
+        hop_bw=jnp.asarray(rng.uniform(5.0, 40.0, (pp - 1, dp)),
+                           jnp.float32),
+        alloc_off=jnp.asarray(rng.uniform(1.0, 3.0, (dp,)), jnp.float32),
+    )
+
+
+@pytest.mark.parametrize("pp,tp,dp", [(2, 2, 2), (4, 8, 4), (8, 8, 16)])
+def test_cell_reduce_kernel_bitmatches_traced_reference(pp, tp, dp):
+    ins = _reduce_inputs(pp, tp, dp, seed=pp)
+    scalars = dict(c_flops=3.0, c_speed=1.1, c_tp=0.4, pp_vol=0.2,
+                   c_dp=0.9)
+    out_k = ck.cell_reduce(**ins, **scalars, interpret=True)
+    out_r = ck.cell_reduce_reference(**ins, **scalars)
+    for a, b in zip(out_k, out_r, strict=True):
+        np.testing.assert_array_equal(np.asarray(a), np.asarray(b))
+
+
+def test_cell_reduce_matches_float64_formula():
+    """Float32 fused tree vs the float64 numpy reduction formulas."""
+    pp, tp, dp = 4, 4, 8
+    ins = _reduce_inputs(pp, tp, dp, seed=9)
+    c_flops, c_speed, c_tp, pp_vol, c_dp = 3.0, 1.1, 0.4, 0.2, 0.9
+    t, stage_max, tp_bw, dp_bw = ck.cell_reduce(
+        **ins, c_flops=c_flops, c_speed=c_speed, c_tp=c_tp,
+        pp_vol=pp_vol, c_dp=c_dp, interpret=True,
+    )
+    cs = np.asarray(ins["cell_speed"], np.float64)
+    te = np.asarray(ins["tp_edge"], np.float64)
+    de = np.asarray(ins["dp_edge"], np.float64)
+    hb = np.asarray(ins["hop_bw"], np.float64)
+    ao = np.asarray(ins["alloc_off"], np.float64)
+    tp_bw64 = te.min(axis=2)                       # (pp, dp)
+    stage = c_flops / (c_speed * cs) + c_tp / tp_bw64
+    stage_max64 = stage.max(axis=0)                # (dp,)
+    dp_bw64 = de.min(axis=1)                       # (pp, tp)
+    pipe = ao * stage_max64 + 2.0 * (pp_vol / hb).sum(axis=0)
+    want_t = pipe.max() + c_dp / dp_bw64.min()
+    np.testing.assert_allclose(float(t[0, 0]), want_t, rtol=1e-4)
+    np.testing.assert_allclose(
+        np.asarray(tp_bw, np.float64), tp_bw64, rtol=1e-5
+    )
+    np.testing.assert_allclose(
+        np.asarray(dp_bw, np.float64), dp_bw64, rtol=1e-5
+    )
+    np.testing.assert_allclose(
+        np.asarray(stage_max, np.float64)[0], stage_max64, rtol=1e-4
+    )
