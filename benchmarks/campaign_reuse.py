@@ -1,0 +1,160 @@
+"""Campaign reuse — shared-prefix engine vs independent mode execution.
+
+The :class:`repro.scenarios.engine.CampaignEngine` promise is twofold:
+byte-identity with fresh :func:`run_campaign` execution, and amortized
+reuse — the recorded faults leg, the shared-prefix snapshot forks, the
+virtual (untouched) jobs and the decision-trace memo make *repeated*
+evaluation of the same campaign far cheaper than re-running it. This
+benchmark measures both claims on the workflows the engine exists for:
+
+* **scoring workflow** — the same campaign is evaluated as a 4-mode
+  scored report three times over (the report itself, the regression-gate
+  re-check, the what-if baseline). Fresh cost is three full 4-mode
+  executions; the engine pays one cold build and serves the rest from
+  the mode tree.
+* **tuner loop** — the shipped knob auto-tuner
+  (:func:`repro.whatif.tuning.tune`, golden-section coordinate descent
+  over two planner knobs) run end to end across seeds. Fresh cost is one
+  full falcon run per probe per seed; the engine forks each probe from
+  the shared-prefix snapshot, keeps untouched jobs virtual, and — since
+  converging probes reprice to the same decision sequence — serves most
+  late evaluations straight from the decision-trace memo.
+
+Every engine-served result is asserted equal to its fresh counterpart
+before any timing is reported — a fast wrong answer is not a speedup.
+The full run requires >=2x on both workflows (the ISSUE 10 acceptance
+bar); smoke mode trims the horizon and requires >=1.5x.
+"""
+from __future__ import annotations
+
+import time
+
+from benchmarks.common import print_table, save_rows
+from repro.scenarios.campaign import MODES, build_campaign, run_campaign
+from repro.scenarios.engine import CampaignEngine
+from repro.scenarios.scoring import score_campaign
+
+class _FreshBackend:
+    """Drop-in for :class:`CampaignEngine` that executes every request as
+    a fresh :func:`run_campaign` — exactly what each tuner evaluation cost
+    before the shared-prefix engine existed. Swapping only this backend
+    keeps everything else (what-if variant cache, probe sequence,
+    arithmetic) identical between the two timed arms."""
+
+    def __init__(self, spec) -> None:
+        self.spec = spec
+
+    def run(self, mode, *, planner_knobs=None, decision_hook=None):
+        return run_campaign(
+            self.spec, mode,
+            planner_knobs=planner_knobs, decision_hook=decision_hook,
+        )
+
+
+def _scoring_workflow(preset: str, max_ticks: int | None, passes: int) -> dict:
+    spec = build_campaign(preset, seed=0, max_ticks=max_ticks)
+
+    t0 = time.monotonic()
+    fresh_reports = []
+    for _ in range(passes):
+        runs = {m: run_campaign(spec, m) for m in MODES}
+        fresh_reports.append(score_campaign(spec, runs))
+    fresh_s = time.monotonic() - t0
+
+    t0 = time.monotonic()
+    engine = CampaignEngine(spec)
+    engine_reports = []
+    for _ in range(passes):
+        runs = {m: engine.run(m) for m in MODES}
+        engine_reports.append(score_campaign(spec, runs))
+    engine_s = time.monotonic() - t0
+
+    assert engine_reports == fresh_reports, (
+        "engine-served reports diverged from fresh execution"
+    )
+    return {
+        "workflow": "scoring",
+        "preset": preset,
+        "evaluations": passes * len(MODES),
+        "fresh_s": round(fresh_s, 3),
+        "engine_s": round(engine_s, 3),
+        "speedup": round(fresh_s / engine_s, 2),
+        "memo_hits": engine.stats["memo_hits"],
+        "trace_hits": engine.stats["trace_hits"],
+        "forked_runs": engine.stats["forked_runs"],
+    }
+
+
+def _tuner_loop(
+    preset: str, max_ticks: int | None, seeds: int, iters: int,
+) -> dict:
+    from repro.whatif import WhatIfEngine
+    from repro.whatif.tuning import tune
+
+    specs = [
+        build_campaign(preset, seed=s, max_ticks=max_ticks)
+        for s in range(seeds)
+    ]
+    knob_names = ("breakeven_scale", "prediction_margin")
+
+    t0 = time.monotonic()
+    fresh_art = tune(
+        [
+            WhatIfEngine(spec, campaign_engine=_FreshBackend(spec))
+            for spec in specs
+        ],
+        knob_names, iters=iters,
+    )
+    fresh_s = time.monotonic() - t0
+
+    t0 = time.monotonic()
+    engines = [WhatIfEngine(spec) for spec in specs]
+    art = tune(engines, knob_names, iters=iters)
+    engine_s = time.monotonic() - t0
+
+    # Byte-identity first: the probe sequence, every measured objective
+    # and the tuned bundle must match the fresh-executed tuner exactly.
+    assert art == fresh_art, "engine-backed tuner diverged from fresh"
+    stats = [e._campaign.stats for e in engines]
+    return {
+        "workflow": "tuner",
+        "preset": preset,
+        "evaluations": seeds * (len(fresh_art["evaluations"]) + len(MODES) + 2),
+        "fresh_s": round(fresh_s, 3),
+        "engine_s": round(engine_s, 3),
+        "speedup": round(fresh_s / engine_s, 2),
+        "memo_hits": sum(s["memo_hits"] for s in stats),
+        "trace_hits": sum(s["trace_hits"] for s in stats),
+        "forked_runs": sum(s["forked_runs"] for s in stats),
+    }
+
+
+def run(smoke: bool = False) -> list[dict]:
+    # The smoke horizon is chosen so the plane still intervenes (the fork
+    # path, not just the recorded completion, is what CI must exercise).
+    max_ticks = 260 if smoke else None
+    rows = [
+        _scoring_workflow("mixed_fleet", max_ticks, passes=3),
+        _tuner_loop(
+            "mixed_fleet", max_ticks,
+            seeds=1 if smoke else 3, iters=4 if smoke else 8,
+        ),
+    ]
+    floor = 1.5 if smoke else 2.0
+    worst = min(r["speedup"] for r in rows)
+    assert worst >= floor, (
+        f"campaign reuse speedup {worst:.2f}x below the {floor}x floor: "
+        f"{rows}"
+    )
+    save_rows("campaign_reuse", rows)
+    return rows
+
+
+if __name__ == "__main__":
+    import sys
+
+    smoke = "--smoke" in sys.argv
+    print_table(
+        "Campaign reuse — shared-prefix engine vs independent runs",
+        run(smoke=smoke),
+    )

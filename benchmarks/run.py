@@ -37,6 +37,7 @@ SUITE = [
     ("controlplane_overhead", "Control plane — per-tick overhead at 1-64 jobs"),
     ("campaign_throughput", "Scenario campaigns — engine ticks/s vs fleet size"),
     ("whatif_replay", "What-if engine — replay cost vs fresh re-runs"),
+    ("campaign_reuse", "Campaign reuse — shared-prefix engine vs fresh runs"),
 ]
 
 

@@ -153,6 +153,7 @@ class ControlPlane:
         watchdog: Watchdog | None = None,
         decision_hook: object | None = None,
         planner_knobs: PlannerKnobs | None = None,
+        planner_trace: list | None = None,
         tracer: object | None = None,
         screening_backend: object | None = None,
     ) -> None:
@@ -187,6 +188,13 @@ class ControlPlane:
         #: planner knob bundle applied to every planner this plane builds
         #: (the what-if auto-tuner's injection point); None = defaults
         self.planner_knobs = planner_knobs
+        #: shared sink threaded into every planner this plane builds: each
+        #: break-even consult appends its knob-independent inputs and the
+        #: decision taken (:func:`repro.core.planner.threshold_value`), so
+        #: the campaign engine can re-score alternative knob bundles
+        #: against the recorded decision sequence without re-running.
+        #: None (the default) records nothing.
+        self.planner_trace = planner_trace
         #: observability span tracer (:class:`repro.obs.SpanTracer`) on the
         #: caller's simulated clock: tick spans, watchdog silence/deadline
         #: spans, executor attempt/retry/rollback cycles, per-job fault
@@ -289,6 +297,144 @@ class ControlPlane:
 
     def job(self, job_id: str) -> JobHandle:
         return self._jobs[job_id]
+
+    # -- state capture (campaign fork/restore contract) -----------------
+    #: JobHandle fields a pre-intervention snapshot carries. Everything
+    #: else on a handle is either immutable registration data the adopting
+    #: caller re-supplies (adapter, registry, hardware, ...) or
+    #: intervention state that is still pristine on the shared prefix.
+    _JOB_SNAP_FIELDS = (
+        "steps", "_fleet_col", "_ticks_active", "_last_sample",
+        "_last_seen", "_alarmed",
+    )
+
+    def snapshot(self) -> dict:
+        """Pre-intervention plane state as private copies.
+
+        Supports the campaign engine's shared-prefix fork
+        (``scenarios/engine.py``): valid only while no intervention state
+        is live — no active diagnoses, planners, restarts, quarantines or
+        executor fail streaks. On that prefix the plane never touches job
+        adapters, detectors or injectors, so a fork reproduces the plane
+        bit-exactly from fresh instances of those plus the scalars
+        captured here (:meth:`adopt_job` + :meth:`restore`).
+        """
+        for job in self._jobs.values():
+            if (
+                job.planner is not None
+                or job.detector.active_event is not None
+                or job._last_restart is not None
+                or job._s4_burned
+                or job._quarantined
+                or job._fail_streaks
+            ):
+                raise ValueError(
+                    f"job {job.job_id!r} carries intervention state; "
+                    "snapshot() supports only the pre-divergence prefix"
+                )
+        if self._active_diag:
+            raise ValueError(
+                "active diagnoses present; snapshot() supports only the "
+                "pre-divergence prefix"
+            )
+        return {
+            "jobs": {
+                job_id: {f: getattr(job, f) for f in self._JOB_SNAP_FIELDS}
+                for job_id, job in self._jobs.items()
+            },
+            "fleet": (
+                self._fleet.snapshot() if self._fleet is not None else None
+            ),
+            "watchdog": self.watchdog.snapshot(),
+            "watched_s": self._watched_s,
+            "fresh_onsets": self._fresh_onsets,
+            # _last_tuning mirrors fleet.last_tuning by identity between
+            # ticks; restore re-links to the restored fleet's dict so the
+            # ``tuning is not self._last_tuning`` emission check holds.
+            "last_tuning_mirrored": self._last_tuning is not None,
+            "n_events": len(self.events),
+        }
+
+    def adopt_job(
+        self,
+        job_id: str,
+        adapter,
+        *,
+        state: dict,
+        detector: FalconDetect | None = None,
+        registry: StrategyRegistry | None = None,
+        overheads: dict | None = None,
+        injector=None,
+        hardware: Sequence[str] | None = None,
+        hosts: Sequence[str] | None = None,
+        sample_period: float | None = None,
+        work_remaining: Callable[[], float] | None = None,
+    ) -> JobHandle:
+        """Re-attach a job mid-flight from snapshot state.
+
+        Like :meth:`register_job` but emits no :class:`Membership` event
+        and touches no fleet column bookkeeping — the join already
+        happened on the shared leg being forked; ``state`` is this job's
+        entry from :meth:`snapshot`'s ``jobs`` map. Adopt jobs in their
+        original registration order, then call :meth:`restore`.
+        """
+        if job_id in self._jobs:
+            raise ValueError(f"job {job_id!r} already registered")
+        job = JobHandle(
+            job_id=job_id,
+            adapter=adapter,
+            detector=detector or FalconDetect(cluster=adapter),
+            registry=registry or default_registry(),
+            overheads=dict(overheads or {}),
+            injector=injector,
+            hardware=tuple(hardware) if hardware is not None else None,
+            hosts=tuple(hosts) if hosts is not None else None,
+            sample_period=sample_period,
+            work_remaining=work_remaining,
+        )
+        for f, v in state.items():
+            setattr(job, f, v)
+        self._jobs[job_id] = job
+        return job
+
+    def restore(self, snap: dict, *, events: Sequence = ()) -> None:
+        """Install a :meth:`snapshot` into this plane (fork completion).
+
+        Every job in the snapshot must already be adopted
+        (:meth:`adopt_job`). The fleet screen is rebuilt from this
+        plane's own ``fleet_kwargs`` and restored from the snapshot —
+        callers forking into different screening semantics (the engine's
+        ckpt branch strips adaptive-retune state) adjust the restored
+        fleet afterwards. ``events`` becomes the plane's event log
+        (the shared leg's prefix, possibly filtered).
+        """
+        if set(snap["jobs"]) != set(self._jobs):
+            raise ValueError(
+                "adopted jobs do not match snapshot: "
+                f"{sorted(self._jobs)} vs {sorted(snap['jobs'])}"
+            )
+        for job_id, st in snap["jobs"].items():
+            job = self._jobs[job_id]
+            for f, v in st.items():
+                setattr(job, f, v)
+        if snap["fleet"] is not None:
+            fleet = FleetDetect(
+                n_workers=len(self._jobs), **self._fleet_kwargs
+            )
+            fleet.restore(snap["fleet"])
+            self._fleet = fleet
+        else:
+            self._fleet = None
+        self.watchdog.restore(snap["watchdog"])
+        self._watched_s = snap["watched_s"]
+        self._fresh_onsets = snap["fresh_onsets"]
+        self._last_tuning = (
+            self._fleet.last_tuning
+            if snap["last_tuning_mirrored"] and self._fleet is not None
+            else None
+        )
+        self._trace_prev = None
+        self.events = deque(events, maxlen=self.events.maxlen)
 
     # -- exact per-job path --------------------------------------------
     def observe(
@@ -625,6 +771,7 @@ class ControlPlane:
                 incident_gap=self.incident_gap,
                 exclude=exclude or None,
                 knobs=self.planner_knobs,
+                trace=self.planner_trace,
             )
         active = job.detector.active_event
         if active is None:

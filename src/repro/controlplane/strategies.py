@@ -562,6 +562,7 @@ class StrategyRegistry:
         incident_gap: Callable[[], float] | None = None,
         exclude: Collection[StrategyKey] | None = None,
         knobs: PlannerKnobs | None = None,
+        trace: list | None = None,
     ) -> MitigationPlanner:
         cands = self.candidates(event)
         if exclude:
@@ -574,6 +575,7 @@ class StrategyRegistry:
             work_remaining=work_remaining,
             incident_gap=incident_gap,
             knobs=knobs,
+            trace=trace,
         )
 
     def dispatch(self, key: StrategyKey, ctx: MitigationContext) -> StrategyOutcome:

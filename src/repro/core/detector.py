@@ -650,6 +650,14 @@ class _Cohort:
     cols: list[int]
     start: int
     batch: bocd.ScreeningBackend | None = None
+    #: cached int64 array form of ``cols`` (membership edits reset it);
+    #: the per-tick loops index the history matrix with it
+    arr: np.ndarray | None = None
+
+    def cols_array(self) -> np.ndarray:
+        if self.arr is None or self.arr.size != len(self.cols):
+            self.arr = np.asarray(self.cols, dtype=np.int64)
+        return self.arr
 
 
 @dataclass
@@ -748,6 +756,14 @@ class FleetDetect:
     #: :class:`repro.core.bocd.ScreeningBackendFactory` instance. Passing a
     #: backend *class* (the pre-backend-API style) still works but warns.
     backend: object = "auto"
+    #: fuse all warmed cohorts into one :class:`repro.core.bocd.MultiBOCD`
+    #: frontier so each tick runs ONE batched update instead of one per
+    #: cohort (bit-identical per column — see MultiBOCD's contract). Only
+    #: takes effect on the vectorized numpy backend; the scalar and pallas
+    #: backends keep the per-cohort path. Off by default — the campaign
+    #: engine (scenarios/engine.py) opts in where the fused frontier's
+    #: snapshot/restore support pays for itself.
+    fused: bool = False
     #: last re-tune's chosen values (None until the first retune); the
     #: control plane mirrors this into its typed event log as ScreenTuning
     last_tuning: dict | None = field(init=False, default=None)
@@ -759,6 +775,10 @@ class FleetDetect:
 
     def __post_init__(self) -> None:
         self._backend = bocd.resolve_screening_backend(self.backend)
+        self._fused = bool(self.fused) and isinstance(
+            self._backend, bocd.BatchedScreening
+        )
+        self._multi = bocd.MultiBOCD() if self._fused else None
         self._hazard0 = self.hazard
         self._flags_total = 0
         self._worker_ticks = 0
@@ -813,6 +833,7 @@ class FleetDetect:
             and self._cohorts[-1].start == now
         ):
             self._cohorts[-1].cols.append(w)  # joined in the same gap
+            self._cohorts[-1].arr = None
         else:
             self._cohorts.append(_Cohort(cols=[w], start=now))
         self.n_workers += 1
@@ -843,6 +864,7 @@ class FleetDetect:
                     self._cohorts.remove(cohort)
                     continue
             cohort.cols = [c - 1 if c > w else c for c in cohort.cols]
+            cohort.arr = None
         self.n_workers -= 1
 
     def consolidate(self) -> None:
@@ -881,6 +903,126 @@ class FleetDetect:
         self._cohorts = [merged] + [
             c for c in self._cohorts if c.batch is None
         ]
+        if self._fused:
+            self._rebuild_multi()
+
+    def _rebuild_multi(self) -> None:
+        """Re-absorb every warmed cohort into a fresh fused frontier (after
+        consolidation replaced the warmed batches with one standalone)."""
+        self._multi = bocd.MultiBOCD()
+        for cohort in self._cohorts:
+            batch = cohort.batch
+            if batch is None:
+                continue
+            if isinstance(batch, bocd.MultiGroupHandle):
+                batch = batch.export()
+            cohort.batch = self._multi.absorb(batch)
+
+    # -- snapshot / restore --------------------------------------------
+    def snapshot(self) -> dict:
+        """Full mutable state as private copies (engine fork support).
+
+        Cohort batches are encoded as ``None`` (warming), a standalone
+        backend snapshot, or the index of their group inside the fused
+        frontier; backends without snapshot support (scalar fan-out,
+        pallas) raise so callers can fall back to fresh execution.
+        """
+        cohorts: list[dict] = []
+        group_index: dict[int, int] = {}
+        if self._multi is not None:
+            group_index = {
+                id(g): i for i, g in enumerate(self._multi._groups)
+            }
+        for cohort in self._cohorts:
+            batch: object = None
+            if isinstance(cohort.batch, bocd.MultiGroupHandle):
+                batch = ("multi", group_index[id(cohort.batch.group)])
+            elif cohort.batch is not None:
+                if not hasattr(cohort.batch, "snapshot"):
+                    raise NotImplementedError(
+                        "screening backend "
+                        f"{type(cohort.batch).__name__} has no snapshot()"
+                    )
+                batch = ("batch", cohort.batch.snapshot())
+            cohorts.append(
+                {"cols": list(cohort.cols), "start": cohort.start,
+                 "batch": batch}
+            )
+        return {
+            "fused": self._fused,
+            "hazard": self.hazard,
+            "max_hypotheses": self.max_hypotheses,
+            "adapt_every": self.adapt_every,
+            "n_workers": self.n_workers,
+            "last_tuning": (
+                dict(self.last_tuning) if self.last_tuning else None
+            ),
+            "flags_total": self._flags_total,
+            "worker_ticks": self._worker_ticks,
+            "ticks": self._ticks,
+            "history": (self._history._data.copy(), self._history._n),
+            "scale": self._scale.copy(),
+            "last_flag": self._last_flag.copy(),
+            "drift_count": self._drift_count.copy(),
+            "ewma": self._ewma.copy(),
+            "ewma_age": self._ewma_age.copy(),
+            "ewma_count": self._ewma_count.copy(),
+            "cohorts": cohorts,
+            "multi": (
+                self._multi.snapshot() if self._multi is not None else None
+            ),
+        }
+
+    def restore(self, snap: dict) -> None:
+        """Reinstate :meth:`snapshot` state; the instance must have been
+        built with the same constructor constants (backend, windows,
+        thresholds) — only mutable state is carried in the snapshot."""
+        if snap["fused"] != self._fused:
+            raise ValueError("snapshot fused mode differs from instance")
+        self.hazard = snap["hazard"]
+        self.max_hypotheses = snap["max_hypotheses"]
+        self.adapt_every = snap["adapt_every"]
+        self.n_workers = snap["n_workers"]
+        self.last_tuning = (
+            dict(snap["last_tuning"]) if snap["last_tuning"] else None
+        )
+        self._flags_total = snap["flags_total"]
+        self._worker_ticks = snap["worker_ticks"]
+        self._ticks = snap["ticks"]
+        data, n_hist = snap["history"]
+        self._history._data = data.copy()
+        self._history._n = n_hist
+        self._scale = snap["scale"].copy()
+        self._last_flag = snap["last_flag"].copy()
+        self._drift_count = snap["drift_count"].copy()
+        self._ewma = snap["ewma"].copy()
+        self._ewma_age = snap["ewma_age"].copy()
+        self._ewma_count = snap["ewma_count"].copy()
+        if snap["multi"] is not None:
+            if self._multi is None:
+                self._multi = bocd.MultiBOCD()
+            self._multi.restore(snap["multi"])
+        self._cohorts = []
+        for rec in snap["cohorts"]:
+            cohort = _Cohort(cols=list(rec["cols"]), start=rec["start"])
+            batch = rec["batch"]
+            if batch is not None:
+                kind, payload = batch
+                if kind == "multi":
+                    cohort.batch = bocd.MultiGroupHandle(
+                        self._multi, self._multi._groups[payload]
+                    )
+                else:
+                    fresh = self._backend.make(
+                        len(cohort.cols),
+                        hazard=self.hazard,
+                        mu0=np.zeros(len(cohort.cols)),
+                        cp_threshold=self.cp_threshold,
+                        max_hypotheses=self.max_hypotheses,
+                    )
+                    fresh.restore(payload)
+                    cohort.batch = fresh
+            self._cohorts.append(cohort)
 
     # ------------------------------------------------------------------
     def tick(self, times: np.ndarray) -> list[FleetFlag]:
@@ -903,24 +1045,33 @@ class FleetDetect:
             self._ewma += alpha * (times - self._ewma)
             self._ewma_age += 1
         out: list[FleetFlag] = []
+        if self._fused:
+            # Fused pre-pass: warm any ready cohorts into the shared
+            # MultiBOCD frontier, then advance every group with ONE fused
+            # update instead of one batched update per cohort.
+            for cohort in self._cohorts:
+                if cohort.batch is None and n - cohort.start >= self.warmup:
+                    cohort.batch = self._multi.absorb(
+                        self._warm_cohort(cohort, n)
+                    )
+            if self._multi.n_series:
+                x = np.empty(self._multi.n_series)
+                for cohort in self._cohorts:
+                    if cohort.batch is not None:
+                        cols = cohort.cols_array()
+                        x[cohort.batch.cols] = (
+                            times[cols] / self._scale[cols]
+                        )
+                self._multi.update(x)
+        drift_ref_mean, drift_cur_mean = self._drift_means(n)
         for cohort in self._cohorts:
-            cols = np.asarray(cohort.cols, dtype=np.int64)
+            cols = cohort.cols_array()
             if cohort.batch is None:
                 if n - cohort.start < self.warmup:
                     continue
-                warm = self._history.rows(cohort.start, n)[:, cols]
-                scale = bocd.noise_scale_batch(warm)
-                self._scale[cols] = scale
-                cohort.batch = self._backend.make(
-                    cols.size,
-                    hazard=self.hazard,
-                    mu0=warm[0] / scale,
-                    cp_threshold=self.cp_threshold,
-                    max_hypotheses=self.max_hypotheses,
-                )
-                for row in warm[:-1]:
-                    cohort.batch.update(row / scale)
-            cohort.batch.update(times[cols] / self._scale[cols])
+                cohort.batch = self._warm_cohort(cohort, n)
+            if not self._fused:
+                cohort.batch.update(times[cols] / self._scale[cols])
             if i - cohort.start <= self.recent_window:
                 continue
             p = cohort.batch.p_recent_change(self.recent_window)
@@ -944,8 +1095,10 @@ class FleetDetect:
                         self._last_flag[w] = idx
                         self._anchor(w, cp.mean_after)
                         out.append(FleetFlag(worker=w, change_point=cp))
-            out += self._drift_screen(cohort, cols, n)
-        out += self._long_drift_screen(n)
+            out += self._drift_screen(
+                cohort, cols, n, drift_ref_mean, drift_cur_mean
+            )
+        out += self._long_drift_screen(n, drift_cur_mean)
         if (
             self.max_cohorts is not None
             and sum(1 for c in self._cohorts if c.batch is not None)
@@ -959,6 +1112,43 @@ class FleetDetect:
             self._retune()
         return out
 
+    def _warm_cohort(self, cohort: _Cohort, n: int) -> bocd.ScreeningBackend:
+        """Warm one cohort: estimate noise scales from its retained window,
+        build a standalone batch, and replay every row but the current one
+        (the caller feeds that through the per-tick update path)."""
+        cols = np.asarray(cohort.cols, dtype=np.int64)
+        warm = self._history.rows(cohort.start, n)[:, cols]
+        scale = bocd.noise_scale_batch(warm)
+        self._scale[cols] = scale
+        batch = self._backend.make(
+            cols.size,
+            hazard=self.hazard,
+            mu0=warm[0] / scale,
+            cp_threshold=self.cp_threshold,
+            max_hypotheses=self.max_hypotheses,
+        )
+        for row in warm[:-1]:
+            batch.update(row / scale)
+        return batch
+
+    def _drift_means(
+        self, n: int
+    ) -> tuple[np.ndarray | None, np.ndarray | None]:
+        """Full-width reference/current trailing means for the drift screen,
+        computed once per tick and column-sliced per cohort (bit-identical
+        to the per-cohort means for cohorts of >= 2 workers; single-worker
+        cohorts recompute on the per-cohort shape — see MultiBOCD)."""
+        if not self.drift_ref:
+            return None, None
+        lag_lo = n - self.drift_ref - self.drift_ref_window
+        if lag_lo < self._history.start or lag_lo < 0:
+            return None, None
+        ref = self._history.rows(
+            lag_lo, lag_lo + self.drift_ref_window
+        ).mean(axis=0)
+        cur = self._history.rows(n - self.drift_cur_window, n).mean(axis=0)
+        return ref, cur
+
     def _anchor(self, w: int, level: float) -> None:
         """Re-anchor worker ``w``'s long-horizon baseline at ``level``
         (the verified post-change mean of a confirmed flag) and restart its
@@ -971,7 +1161,9 @@ class FleetDetect:
         self._ewma_age[w] = 0
         self._ewma_count[w] = 0
 
-    def _long_drift_screen(self, n: int) -> list[FleetFlag]:
+    def _long_drift_screen(
+        self, n: int, cur_full: np.ndarray | None = None
+    ) -> list[FleetFlag]:
         """Creep candidates: trailing mean vs the long-horizon EWMA baseline
         (see ``ewma_span``). No local-window verification is possible — a
         slow creep has no step for the ±window rule to see — so the flag's
@@ -988,7 +1180,13 @@ class FleetDetect:
         lo = n - w
         if lo < self._history.start or lo < 0:
             return []
-        cur = self._history.rows(lo, n).mean(axis=0)
+        # cur_full (from _drift_means) is this exact expression, computed
+        # once per tick when the drift screen also ran.
+        cur = (
+            cur_full
+            if cur_full is not None
+            else self._history.rows(lo, n).mean(axis=0)
+        )
         base = self._ewma
         with np.errstate(invalid="ignore"):
             ok = (
@@ -1057,7 +1255,12 @@ class FleetDetect:
         }
 
     def _drift_screen(
-        self, cohort: _Cohort, cols: np.ndarray, n: int
+        self,
+        cohort: _Cohort,
+        cols: np.ndarray,
+        n: int,
+        ref_full: np.ndarray | None = None,
+        cur_full: np.ndarray | None = None,
     ) -> list[FleetFlag]:
         """Lagged-window drift candidates for one cohort (see ``drift_ref``).
 
@@ -1072,12 +1275,20 @@ class FleetDetect:
         lag_lo = n - self.drift_ref - self.drift_ref_window
         if lag_lo < max(cohort.start, self._history.start):
             return []
-        ref = self._history.rows(lag_lo, lag_lo + self.drift_ref_window)[
-            :, cols
-        ].mean(axis=0)
-        cur = self._history.rows(n - self.drift_cur_window, n)[:, cols].mean(
-            axis=0
-        )
+        if ref_full is not None and cols.size >= 2:
+            # Column-slice the precomputed full-width means (bit-identical:
+            # numpy's axis-0 reduction is per-column for >= 2 columns). A
+            # single-worker cohort reduces on numpy's 1-D pairwise path, so
+            # it recomputes on the per-cohort operand below.
+            ref = ref_full[cols]
+            cur = cur_full[cols]
+        else:
+            ref = self._history.rows(lag_lo, lag_lo + self.drift_ref_window)[
+                :, cols
+            ].mean(axis=0)
+            cur = self._history.rows(n - self.drift_cur_window, n)[
+                :, cols
+            ].mean(axis=0)
         rel = np.abs(cur - ref) / np.maximum(ref, 1e-12)
         over = rel >= self.verify_threshold
         self._drift_count[cols[over]] += 1
@@ -1217,3 +1428,20 @@ class Watchdog:
         """Drop all state for a departed stream (job leave)."""
         for d in (self._last, self._mean, self._var, self._beats):
             d.pop(key, None)
+
+    # -- state capture (campaign fork/restore contract) -----------------
+    def snapshot(self) -> dict:
+        """All cadence state as private copies (keys are job ids: shallow
+        dict copies suffice — values are floats/ints)."""
+        return {
+            "last": dict(self._last),
+            "mean": dict(self._mean),
+            "var": dict(self._var),
+            "beats": dict(self._beats),
+        }
+
+    def restore(self, snap: dict) -> None:
+        self._last = dict(snap["last"])
+        self._mean = dict(snap["mean"])
+        self._var = dict(snap["var"])
+        self._beats = dict(snap["beats"])

@@ -112,6 +112,19 @@ class DurationModel:
     def n_observed(self, cause: RootCause) -> int:
         return self._n_observed.get(cause, 0)
 
+    # -- state capture (campaign fork/restore contract) ----------------
+    def snapshot(self) -> dict:
+        """All fitted state as private copies (samples are frozen
+        dataclasses, so copying the lists suffices)."""
+        return {
+            "samples": {c: list(s) for c, s in self._samples.items()},
+            "n_observed": dict(self._n_observed),
+        }
+
+    def restore(self, snap: dict) -> None:
+        self._samples = {c: list(s) for c, s in snap["samples"].items()}
+        self._n_observed = dict(snap["n_observed"])
+
     # ------------------------------------------------------------------
     def survival(self, cause: RootCause, age: float, horizon: float) -> float:
         """Pr[T > horizon | T > age] under the cause's Kaplan-Meier curve."""

@@ -122,6 +122,38 @@ KNOB_BOUNDS: dict[str, tuple[float, float, bool]] = {
 }
 
 
+def threshold_value(knobs: PlannerKnobs, rec: dict) -> float:
+    """Escalation threshold of one recorded break-even consult under
+    ``knobs`` — the pure function :meth:`MitigationPlanner._threshold`
+    evaluates, split out so a knob bundle can be *re-scored* against a
+    recorded decision trace without re-running the campaign.
+
+    ``rec`` carries the knob-independent inputs the consult saw:
+    ``overhead``, ``delta``, ``t_now``, ``hang``, and ``window`` — the
+    already-resolved min of the estimator's expected remaining duration,
+    the job's remaining work and the incident gap (None when the classic
+    fixed-horizon rule applies: no estimator, or a zero-overhead rung).
+    Every input is independent of the knob values *up to the first
+    decision that differs*, which is exactly the prefix a memo needs.
+    """
+    scale = max(knobs.breakeven_scale, 1e-3)
+    overhead = rec["overhead"]
+    lam = min(max(knobs.prediction_lambda, 1e-3), 1.0)
+    if rec["hang"] and overhead > 0.0:
+        rate = min(rec["delta"] / max(rec["t_now"], 1e-12), 1.0)
+        window = rec["window"]
+        benefit = window if window == float("inf") else window * rate
+        return scale * (overhead * lam if benefit > overhead else overhead)
+    if rec["window"] is None:
+        return scale * overhead
+    rate = rec["delta"] / max(rec["t_now"], 1e-12)
+    benefit = rec["window"] * rate
+    margin = max(knobs.prediction_margin, 1.0)
+    return scale * (
+        overhead * lam if benefit > overhead * margin else overhead / lam
+    )
+
+
 @dataclass
 class MitigationPlanner:
     """Stateful Algorithm 1 for one fail-slow event.
@@ -163,6 +195,12 @@ class MitigationPlanner:
     #: optional knob bundle; when given its values override the three
     #: scalar fields above (one injection point for the auto-tuner)
     knobs: PlannerKnobs | None = None
+    #: optional shared sink for break-even consult records (see
+    #: :func:`threshold_value`): every consult appends its knob-independent
+    #: inputs plus the decision taken, so a campaign engine can re-score
+    #: alternative knob bundles against the recorded trace without
+    #: re-running the timeline
+    trace: list | None = None
 
     _candidates: list[StrategyKey] = field(init=False)
     _id: int = field(init=False, default=0)
@@ -225,7 +263,10 @@ class MitigationPlanner:
             return None
         self._impact += slow_iters * delta
         nxt = self._candidates[self._id]
-        if self.slow_impact > self._threshold(nxt, delta, t_now):
+        fire = self.slow_impact > self._threshold(nxt, delta, t_now)
+        if self.trace is not None:
+            self.trace[-1]["decision"] = fire
+        if fire:
             self._id += 1
             self.applied.append(nxt)
             return nxt
@@ -236,57 +277,61 @@ class MitigationPlanner:
 
         Every branch's result is scaled by ``breakeven_scale``: the knob
         moves the whole break-even surface, not one rule's corner case.
+
+        Hang events (``event.hang``) price an *unbounded* slowdown
+        (multiplier → ∞): a hang never relieves itself, so the
+        survival-curve query is meaningless (its huge ``_age`` would
+        predict ~zero remaining duration, parking the planner in the B/λ
+        hold-out forever while the job makes no progress). The benefit of
+        acting caps at the job's remaining work, the hold-out zone is
+        bypassed, and a non-finite benefit is treated as clearly
+        profitable rather than overflowing.
+
+        The consult's knob-independent inputs are resolved here, recorded
+        on :attr:`trace` when one is attached, and priced by the pure
+        :func:`threshold_value` — the same function a memo uses to
+        re-score the trace under different knobs.
         """
-        scale = max(self.breakeven_scale, 1e-3)
         overhead = self.overheads[nxt]
-        if getattr(self.event, "hang", False) and overhead > 0.0:
-            return scale * self._hang_threshold(nxt, overhead, delta, t_now)
-        if self.estimator is None or overhead <= 0.0:
-            return scale * overhead
-        # Residual excess per wall-clock second if we stop here — the live
-        # measurement, consistent with the paper's "current strategy
-        # proves ineffective" escalation condition.
-        rate = delta / max(t_now, 1e-12)
-        # Wall-clock window the fault can keep hurting us: its predicted
-        # remaining duration, curtailed by the job's remaining work and by
-        # the next incident's arrival.
-        window = self.estimator.expected_remaining(
-            self.event.root_cause, self._age
+        hang = bool(getattr(self.event, "hang", False))
+        window: float | None
+        if hang and overhead > 0.0:
+            window = float("inf")
+            if self.work_remaining is not None:
+                window = min(window, max(self.work_remaining(), 0.0))
+            if self.incident_gap is not None:
+                window = min(window, max(self.incident_gap(), 0.0))
+        elif self.estimator is None or overhead <= 0.0:
+            window = None
+        else:
+            # Wall-clock window the fault can keep hurting us: its
+            # predicted remaining duration, curtailed by the job's
+            # remaining work and by the next incident's arrival.
+            window = self.estimator.expected_remaining(
+                self.event.root_cause, self._age
+            )
+            if self.work_remaining is not None:
+                window = min(window, max(self.work_remaining(), 0.0))
+            if self.incident_gap is not None:
+                window = min(window, max(self.incident_gap(), 0.0))
+        rec = {
+            "overhead": overhead,
+            "delta": delta,
+            "t_now": t_now,
+            "hang": hang,
+            "window": window,
+        }
+        if self.trace is not None:
+            rec["impact"] = self._impact
+            rec["strategy"] = nxt
+            rec["decision"] = False
+            self.trace.append(rec)
+        knobs = PlannerKnobs(
+            prediction_lambda=self.prediction_lambda,
+            prediction_margin=self.prediction_margin,
+            breakeven_scale=self.breakeven_scale,
         )
-        if self.work_remaining is not None:
-            window = min(window, max(self.work_remaining(), 0.0))
-        if self.incident_gap is not None:
-            window = min(window, max(self.incident_gap(), 0.0))
-        benefit = window * rate
-        lam = min(max(self.prediction_lambda, 1e-3), 1.0)
-        margin = max(self.prediction_margin, 1.0)
-        return scale * (
-            overhead * lam if benefit > overhead * margin else overhead / lam
-        )
-
-    def _hang_threshold(
-        self, nxt: StrategyKey, overhead: float, delta: float, t_now: float
-    ) -> float:
-        """Break-even for an *unbounded* slowdown (multiplier → ∞).
-
-        A hang never relieves itself, so the survival-curve query is
-        meaningless (and its huge ``_age`` would predict ~zero remaining
-        duration, parking the planner in the B/λ hold-out forever while the
-        job makes no progress). The benefit of acting caps at the job's
-        remaining work (everything still to run is lost if we wait), the
-        hold-out zone is bypassed — waiting out a break-even that cannot
-        come wastes ``work_remaining`` outright — and a non-finite benefit
-        is treated as clearly profitable rather than overflowing.
-        """
-        rate = min(delta / max(t_now, 1e-12), 1.0)
-        window = float("inf")
-        if self.work_remaining is not None:
-            window = min(window, max(self.work_remaining(), 0.0))
-        if self.incident_gap is not None:
-            window = min(window, max(self.incident_gap(), 0.0))
-        benefit = window if window == float("inf") else window * rate
-        lam = min(max(self.prediction_lambda, 1e-3), 1.0)
-        return overhead * lam if benefit > overhead else overhead
+        return threshold_value(knobs, rec)
 
     def exhausted(self) -> bool:
         return self._id >= len(self._candidates)

@@ -20,6 +20,12 @@ Render dashboards from the report with ``python -m repro.launch.obs``.
 ``--screening-backend`` / ``--reduction-backend`` override the fleet
 screen's and the simulators' compute backends (registry names, see
 docs/kernels.md); the committed reports pin the deterministic defaults.
+
+The four modes execute on the shared-prefix
+:class:`~repro.scenarios.engine.CampaignEngine` (byte-identical to four
+independent runs — see docs/scenarios.md); ``--fresh`` forces the
+independent executions, the belt-and-braces path the CI ``reuse`` job
+diffs the engine against.
 """
 from __future__ import annotations
 
@@ -101,6 +107,9 @@ def main() -> None:
                     help="simulator reduction backend (reference/vectorized/"
                          "pallas/auto; default: the simulator's auto "
                          "selection)")
+    ap.add_argument("--fresh", action="store_true",
+                    help="bypass the shared-prefix engine and run the four "
+                         "modes independently")
     ap.add_argument("--list-presets", action="store_true")
     ap.add_argument("--quiet", action="store_true")
     args = ap.parse_args()
@@ -115,6 +124,7 @@ def main() -> None:
         obs=args.obs, observation_stride=args.obs_stride,
         screening_backend=args.screening_backend,
         reduction_backend=args.reduction_backend,
+        fresh=args.fresh,
     )
     path = write_report(report, args.out)
     if not args.quiet:

@@ -1,7 +1,7 @@
 """Seed-sweep driver — paper-style evaluation tables with regression gate.
 
     PYTHONPATH=src python -m repro.launch.sweep --preset mixed_fleet \
-        --jobs 8 --seeds 5 [--ticks N] [--out results/sweeps] \
+        --jobs 8 --seeds 5 [--workers 4] [--ticks N] [--out results/sweeps] \
         [--gate results/sweeps/<baseline>.json] [--write-baseline]
 
 Runs a scenario preset over N seeds, aggregates the paper metrics
@@ -9,6 +9,11 @@ Runs a scenario preset over N seeds, aggregates the paper metrics
 into mean +/- 95 % CI, writes the table to ``results/sweeps/`` and prints
 it. One seed is an anecdote; the sweep is the evaluation number a detector
 or planner change must defend.
+
+Seeds are independent campaigns, so ``--workers N`` fans them out over N
+processes; the default stays serial (one process, deterministic resource
+use) and the table is byte-identical either way — each seed's report is a
+pure function of (preset, jobs, seed, ticks), whichever process runs it.
 
 ``--gate`` turns the sweep into a CI regression gate: the aggregate is
 compared against a committed baseline JSON and the process exits non-zero
@@ -111,19 +116,36 @@ def aggregate_per_cause(per_seed: list[dict]) -> dict[str, dict]:
     }
 
 
+def _score_one(task: tuple) -> dict:
+    """One seed's report (module-level so worker processes can pickle it)."""
+    preset, n_jobs, seed, max_ticks = task
+    _, _, report = run_and_score(
+        preset, n_jobs=n_jobs, seed=seed, max_ticks=max_ticks
+    )
+    return report
+
+
 def run_sweep(
     preset: str,
     n_jobs: int | None = None,
     seeds: int = 3,
     max_ticks: int | None = None,
+    workers: int = 1,
 ) -> dict:
-    """Run ``seeds`` campaigns (seed 0..N-1) and aggregate the metrics."""
-    per_seed: list[dict] = []
-    for seed in range(seeds):
-        _, _, report = run_and_score(
-            preset, n_jobs=n_jobs, seed=seed, max_ticks=max_ticks
-        )
-        per_seed.append(report)
+    """Run ``seeds`` campaigns (seed 0..N-1) and aggregate the metrics.
+
+    ``workers > 1`` runs the seeds in a process pool; ``map`` keeps seed
+    order, and each report is deterministic in its inputs, so the sweep
+    dict — and the written table — is byte-identical to the serial run.
+    """
+    tasks = [(preset, n_jobs, seed, max_ticks) for seed in range(seeds)]
+    if workers > 1 and seeds > 1:
+        import multiprocessing as mp
+
+        with mp.get_context("spawn").Pool(min(workers, seeds)) as pool:
+            per_seed = pool.map(_score_one, tasks)
+    else:
+        per_seed = [_score_one(t) for t in tasks]
     jobs = per_seed[0]["campaign"]["n_jobs"]
     return {
         "preset": preset,
@@ -238,6 +260,8 @@ def main(argv: list[str] | None = None) -> int:
     ap.add_argument("--preset", default="mixed_fleet")
     ap.add_argument("--jobs", type=int, default=None)
     ap.add_argument("--seeds", type=int, default=3)
+    ap.add_argument("--workers", type=int, default=1,
+                    help="process fan-out across seeds (default: serial)")
     ap.add_argument("--ticks", type=int, default=None,
                     help="override the preset's horizon")
     ap.add_argument("--out", default=RESULTS_DIR)
@@ -253,7 +277,8 @@ def main(argv: list[str] | None = None) -> int:
     args = ap.parse_args(argv)
 
     sweep = run_sweep(
-        args.preset, n_jobs=args.jobs, seeds=args.seeds, max_ticks=args.ticks
+        args.preset, n_jobs=args.jobs, seeds=args.seeds,
+        max_ticks=args.ticks, workers=args.workers,
     )
     path = write_sweep(sweep, args.out)
     if not args.quiet:

@@ -14,6 +14,13 @@ them measurable:
   jobs packed onto a shared hardware map, driven through
   :meth:`repro.controlplane.ControlPlane.tick` with dynamic join/leave
   churn, under four mitigation modes (healthy / faults / ckpt / falcon).
+* :mod:`repro.scenarios.engine` — the shared-prefix executor: the four
+  modes are bit-identical until the control plane first intervenes, so
+  :class:`~repro.scenarios.engine.CampaignEngine` records that timeline
+  once, forks each plane mode from a snapshot at its divergence point,
+  keeps untouched jobs riding the recording, and memoizes knob-bundle
+  variants by their decision trace — byte-identical to fresh
+  :func:`run_campaign` execution.
 * :mod:`repro.scenarios.scoring` — paper-metric scoring from the typed
   event log: per-cause precision/recall/detection latency against the
   ground-truth schedule, %-slowdown mitigated vs the no-mitigation and
@@ -30,6 +37,7 @@ from repro.scenarios.campaign import (  # noqa: F401
     build_campaign,
     run_campaign,
 )
+from repro.scenarios.engine import CampaignEngine  # noqa: F401
 from repro.scenarios.faults import (  # noqa: F401
     CAUSE_KINDS,
     KIND_CAUSE,

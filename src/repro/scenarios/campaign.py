@@ -140,6 +140,11 @@ class RunResult:
     #: the run's :class:`repro.obs.SpanTracer` when observability was on
     #: (``run_campaign(..., tracer=...)``); None otherwise
     tracer: object | None = None
+    #: jobs the control plane actually intervened on (flagged, alarmed,
+    #: or mitigated) when the shared-prefix engine produced this run —
+    #: every other job rode the recorded fault-mode trajectory verbatim.
+    #: None = fresh execution (no divergence tracking was performed).
+    touched_jobs: frozenset | None = None
 
 
 # ------------------------------------------------------------------ build

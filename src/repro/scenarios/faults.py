@@ -23,6 +23,7 @@ one host fault hits all co-located jobs at once.
 """
 from __future__ import annotations
 
+import copy
 from dataclasses import dataclass
 
 import numpy as np
@@ -252,3 +253,16 @@ class ExecutorFaultModel:
         if u < self.fail_prob + self.timeout_prob:
             return "timeout"
         return None
+
+    # -- state capture (campaign fork/restore contract) ----------------
+    def snapshot(self) -> dict:
+        """Draw-stream position as a private copy (the generator state is
+        a nested dict; deep-copy keeps forks independent)."""
+        return {
+            "rng": copy.deepcopy(self._rng.bit_generator.state),
+            "calls": self.calls,
+        }
+
+    def restore(self, snap: dict) -> None:
+        self._rng.bit_generator.state = copy.deepcopy(snap["rng"])
+        self.calls = snap["calls"]

@@ -47,6 +47,7 @@ from repro.scenarios.campaign import (
     build_campaign,
     run_campaign,
 )
+from repro.scenarios.engine import CampaignEngine
 from repro.scenarios.faults import KIND_CAUSE
 
 #: episodes below this modeled impact are invisible even in principle and
@@ -594,21 +595,41 @@ def run_and_score(
     observation_stride: int = 0,
     screening_backend: str | None = None,
     reduction_backend: str | None = None,
+    engine: CampaignEngine | None = None,
+    fresh: bool = False,
 ) -> tuple[CampaignSpec, dict[str, RunResult], dict]:
     """Build a campaign, execute all four modes, and score it.
+
+    The four modes run on a shared-prefix :class:`CampaignEngine` — one
+    recorded timeline, plane modes forked at their divergence point —
+    byte-identical to four independent :func:`run_campaign` executions
+    (the engine's headline invariant, pinned by tests/test_engine.py).
+    Pass ``fresh=True`` to force the independent executions anyway, or
+    ``engine=`` to reuse a caller-owned engine (its spec supersedes the
+    identity arguments; further ``run()`` calls share its mode tree).
 
     ``obs=True`` turns the observability layer on for the falcon run: a
     :class:`repro.obs.SpanTracer` rides the campaign clock (returned on
     ``runs["falcon"].tracer``), ready for
-    :func:`repro.obs.recorder.write_sidecars`. The scored report is
-    byte-identical either way — tracing never alters the run.
+    :func:`repro.obs.recorder.write_sidecars`. Only that falcon run
+    executes fresh (the tracer wants the real control flow); the scored
+    report is byte-identical either way — tracing never alters the run.
 
     ``screening_backend`` / ``reduction_backend`` override the fleet
     screen's and the simulators' compute backends (registry names — see
     docs/kernels.md); None keeps the deterministic defaults the committed
-    reports pin.
+    reports pin. Backend overrides disable the engine (its snapshots only
+    cover the default backends' state).
     """
-    spec = build_campaign(preset, n_jobs=n_jobs, seed=seed, max_ticks=max_ticks)
+    spec = (
+        engine.spec if engine is not None
+        else build_campaign(preset, n_jobs=n_jobs, seed=seed, max_ticks=max_ticks)
+    )
+    use_engine = (
+        not fresh and screening_backend is None and reduction_backend is None
+    )
+    if use_engine and engine is None:
+        engine = CampaignEngine(spec)
     runs = {}
     for mode in MODES:
         tracer = None
@@ -616,6 +637,9 @@ def run_and_score(
             from repro.obs import SpanTracer
 
             tracer = SpanTracer()
+        if use_engine and tracer is None:
+            runs[mode] = engine.run(mode)
+            continue
         runs[mode] = run_campaign(
             spec, mode, tracer=tracer,
             screening_backend=screening_backend,

@@ -40,6 +40,7 @@ from repro.scenarios.campaign import (
     build_campaign,
     run_campaign,
 )
+from repro.scenarios.engine import CampaignEngine
 from repro.scenarios.faults import KIND_CAUSE
 
 #: decision times are matched to this resolution (the campaign clock is a
@@ -182,6 +183,7 @@ class WhatIfEngine:
         self,
         spec: CampaignSpec,
         baseline: dict[str, RunResult] | None = None,
+        campaign_engine: CampaignEngine | None = None,
     ) -> None:
         self.spec = spec
         #: replay-cost ledger: job-mode runs actually executed vs what the
@@ -192,10 +194,19 @@ class WhatIfEngine:
             "fresh_job_runs_equiv": 0,
             "cache_hits": 0,
         }
+        #: shared-prefix executor serving baseline and plane-mode variants
+        #: (knob bundles ride its decision-trace memo; decision scripts
+        #: replay only the forked leg) — byte-identical to fresh runs
+        self._campaign = campaign_engine
         if baseline is None:
-            baseline = {mode: run_campaign(spec, mode) for mode in MODES}
+            baseline = {mode: self._engine().run(mode) for mode in MODES}
         self.baseline = baseline
         self._cache: dict[tuple, RunResult] = {}
+
+    def _engine(self) -> CampaignEngine:
+        if self._campaign is None:
+            self._campaign = CampaignEngine(self.spec)
+        return self._campaign
 
     # -- construction ----------------------------------------------------
     @classmethod
@@ -300,12 +311,21 @@ class WhatIfEngine:
             self._cache[key] = merged
             return merged
         self.stats["variant_job_runs"] += len(self.spec.jobs)
-        out = run_campaign(
-            self.spec, mode,
-            drop_episodes=variant.drop_episodes,
-            decision_hook=variant.script(),
-            planner_knobs=variant.knobs,
-        )
+        if variant.drop_episodes:
+            # Episode edits change the shared prefix itself — only a
+            # fresh run is exact.
+            out = run_campaign(
+                self.spec, mode,
+                drop_episodes=variant.drop_episodes,
+                decision_hook=variant.script(),
+                planner_knobs=variant.knobs,
+            )
+        else:
+            out = self._engine().run(
+                mode,
+                decision_hook=variant.script(),
+                planner_knobs=variant.knobs,
+            )
         self._cache[key] = out
         return out
 

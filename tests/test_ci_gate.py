@@ -176,3 +176,20 @@ def test_hang_sweep_cli_gate_mode_end_to_end(tmp_path):
     )
     assert out.returncode == 0, out.stdout + out.stderr
     assert "GATE PASS" in out.stdout
+
+
+def test_parallel_sweep_is_byte_identical_to_serial(tmp_path):
+    """--workers fans seeds out over processes; the sweep table must be
+    byte-identical to the serial run (each seed's report is a pure
+    function of its inputs, and map keeps seed order)."""
+    serial = sweep_mod.run_sweep(
+        "single_gpu_throttle", seeds=2, max_ticks=160, workers=1
+    )
+    fanned = sweep_mod.run_sweep(
+        "single_gpu_throttle", seeds=2, max_ticks=160, workers=2
+    )
+    assert serial == fanned
+    p1 = sweep_mod.write_sweep(serial, str(tmp_path / "serial"))
+    p2 = sweep_mod.write_sweep(fanned, str(tmp_path / "fanned"))
+    with open(p1, "rb") as f1, open(p2, "rb") as f2:
+        assert f1.read() == f2.read()

@@ -704,3 +704,111 @@ def test_reduction_backend_resolution_and_sim_knob():
     np.testing.assert_allclose(
         t_after, sim.iteration_time_reference(), rtol=1e-4
     )
+
+
+# ------------------------------------------- fused multi-cohort screen
+def _churny_screen(seed, adapt, fused, ticks=420, n0=6):
+    """Drive one FleetDetect through joins/leaves/step-faults; return the
+    flag log plus the observable tuning state."""
+    rng = np.random.default_rng(seed)
+    fd = FleetDetect(
+        n_workers=n0, adapt_every=adapt, backend="batched", fused=fused
+    )
+    level = np.ones(fd.n_workers)
+    flags_log = []
+    for t in range(ticks):
+        if t in (120, 180):
+            fd.add_worker()
+            level = np.append(level, 1.0)
+        if t == 260 and fd.n_workers > 4:
+            fd.remove_worker(2)
+            level = np.delete(level, 2)
+        if t in (90, 150, 230, 300, 360):
+            level[(t // 30) % fd.n_workers] *= 1.6
+        if t == 330:
+            level[0] *= 0.6
+        x = level * (1.0 + 0.02 * rng.standard_normal(fd.n_workers))
+        flags_log.append([
+            (f.worker, f.change_point.index, f.change_point.probability,
+             f.change_point.mean_before, f.change_point.mean_after)
+            for f in fd.tick(x)
+        ])
+    return flags_log, fd._scale.copy(), fd._ewma.copy(), fd.hazard, \
+        fd.max_hypotheses
+
+
+@pytest.mark.parametrize("adapt", [0, 50])
+@pytest.mark.parametrize("seed", [3, 7])
+def test_fused_screen_bitwise_matches_per_cohort(adapt, seed):
+    """The single-launch fused frontier is not approximately the per-cohort
+    screen — it IS the per-cohort screen, bitwise, through membership churn
+    and adaptive retunes (the campaign engine's forks rely on this)."""
+    fl0, sc0, ew0, hz0, mh0 = _churny_screen(seed, adapt, fused=False)
+    fl1, sc1, ew1, hz1, mh1 = _churny_screen(seed, adapt, fused=True)
+    assert fl0 == fl1
+    assert np.array_equal(sc0, sc1, equal_nan=True)
+    assert np.array_equal(ew0, ew1, equal_nan=True)
+    assert (hz0, mh0) == (hz1, mh1)
+
+
+@pytest.mark.parametrize("fused", [False, True])
+def test_fleet_snapshot_restore_tail_equivalence(fused):
+    """A fresh FleetDetect restored from snapshot() continues bitwise
+    identically to the instance that kept running."""
+    def drive(fd, level, rng, t0, t1, out):
+        for t in range(t0, t1):
+            if t in (90, 150, 230):
+                level[(t // 30) % fd.n_workers] *= 1.5
+            x = level * (1.0 + 0.02 * rng.standard_normal(fd.n_workers))
+            out.append([
+                (f.worker, f.change_point.index) for f in fd.tick(x)
+            ])
+
+    rng = np.random.default_rng(9)
+    fd = FleetDetect(
+        n_workers=6, backend="batched", fused=fused, adapt_every=50
+    )
+    level = np.ones(6)
+    pre: list = []
+    drive(fd, level, rng, 0, 100, pre)
+    snap = fd.snapshot()
+    rng_state = rng.bit_generator.state
+    level_snap = level.copy()
+    cont_a: list = []
+    drive(fd, level, rng, 100, 180, cont_a)
+
+    fd2 = FleetDetect(
+        n_workers=6, backend="batched", fused=fused, adapt_every=50
+    )
+    fd2.restore(snap)
+    rng2 = np.random.default_rng(9)
+    rng2.bit_generator.state = rng_state
+    cont_b: list = []
+    drive(fd2, level_snap, rng2, 100, 180, cont_b)
+    assert cont_a == cont_b
+
+
+def test_fleet_restore_rejects_fused_mismatch():
+    fd = FleetDetect(n_workers=4, backend="batched", fused=True)
+    fd.tick(np.ones(4))
+    snap = fd.snapshot()
+    other = FleetDetect(n_workers=4, backend="batched", fused=False)
+    with pytest.raises(ValueError, match="fused"):
+        other.restore(snap)
+
+
+def test_watchdog_snapshot_roundtrip():
+    from repro.core.detector import Watchdog
+
+    wd = Watchdog()
+    for i in range(10):
+        wd.beat("j1", i * 1.0)
+        wd.beat("j2", i * 1.7)
+    snap = wd.snapshot()
+    wd.beat("j1", 99.0)  # post-snapshot divergence must not leak back
+    wd2 = Watchdog()
+    wd2.restore(snap)
+    assert wd2._last == {"j1": 9.0, "j2": 9 * 1.7}
+    assert wd2._beats == {"j1": 10, "j2": 10}
+    # the continued instance moved on; the restored one holds the snapshot
+    assert wd._last["j1"] == 99.0 and wd._beats["j1"] == 11
